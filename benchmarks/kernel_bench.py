@@ -1,0 +1,76 @@
+"""Kernel microbenchmarks.
+
+On this CPU container the Pallas kernels execute in interpret mode
+(correctness target only, not speed); the wall-time numbers that matter
+for the CPU runs are the jnp reference paths, which we also use as the
+oracle. Both are reported; the interpret-mode column exists to prove the
+kernels run end-to-end.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+from .common import emit, timeit
+
+
+def run(small: bool = True):
+    n, d = (2048, 1024) if small else (16384, 8192)
+    k = jax.random.PRNGKey(0)
+    A = jax.random.normal(k, (n, d), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(1), (d,), jnp.float32)
+    r = jax.random.normal(jax.random.PRNGKey(2), (n,), jnp.float32)
+
+    jref_mv = jax.jit(ref.feature_matvec_ref)
+    us = timeit(lambda: jref_mv(A, w))
+    emit("kernel/feature_matvec/jnp_ref", f"{us:.1f}",
+         f"gflops={2*n*d/us/1e3:.2f}")
+    jref_rmv = jax.jit(ref.feature_rmatvec_ref)
+    us = timeit(lambda: jref_rmv(A, r))
+    emit("kernel/feature_rmatvec/jnp_ref", f"{us:.1f}",
+         f"gflops={2*n*d/us/1e3:.2f}")
+
+    dd = 65536
+    diag = jax.random.normal(k, (dd,))
+    off = jax.random.normal(k, (dd - 1,))
+    v = jax.random.normal(jax.random.PRNGKey(3), (dd,))
+    jref_td = jax.jit(ref.tridiag_matvec_ref)
+    us = timeit(lambda: jref_td(diag, off, v))
+    emit("kernel/tridiag_matvec/jnp_ref", f"{us:.1f}",
+         f"gbytes_s={5*dd*4/us/1e3:.2f}")
+
+    # interpret-mode Pallas (correctness path; slow on CPU by design)
+    us = timeit(lambda: ops.feature_matvec(A[:256, :256], w[:256]),
+                n_iter=3, warmup=1)
+    emit("kernel/feature_matvec/pallas_interpret_256", f"{us:.1f}",
+         "correctness-path")
+
+    # flash-decode: streaming KV attention (jnp oracle timing on CPU)
+    b, hk, g, dh, T = 2, 4, 2, 64, 8192
+    import jax as _jax
+    q = jax.random.normal(k, (b, hk, g, dh))
+    kc = jax.random.normal(k, (b, T, hk, dh))
+    vc = jax.random.normal(k, (b, T, hk, dh))
+    bias = jnp.zeros((b, T))
+    jref_fd = jax.jit(ref.flash_decode_ref)
+    us = timeit(lambda: jref_fd(q, kc, vc, bias))
+    kv_bytes = 2 * b * T * hk * dh * 4
+    emit("kernel/flash_decode/jnp_ref", f"{us:.1f}",
+         f"kv_gbytes_s={kv_bytes/us/1e3:.2f}")
+    us = timeit(lambda: ops.flash_decode(q, kc[:, :512], vc[:, :512],
+                                         bias[:, :512]), n_iter=3, warmup=1)
+    emit("kernel/flash_decode/pallas_interpret_512", f"{us:.1f}",
+         "correctness-path")
+
+    t, kk, dmod = 4096, 8, 512
+    x = jax.random.normal(k, (t, kk, dmod))
+    cw = jax.random.normal(k, (t, kk))
+    jref_moe = jax.jit(ref.moe_combine_ref)
+    us = timeit(lambda: jref_moe(x, cw))
+    emit("kernel/moe_combine/jnp_ref", f"{us:.1f}",
+         f"gbytes_s={(t*kk*dmod+t*dmod)*4/us/1e3:.2f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,50 @@
+"""Ablation: sort-based MoE dispatch (shipped) vs cumulative-one-hot
+dispatch (the naive formulation).
+
+The naive position computation — `cumsum(one_hot(expert_ids))` over
+(T*k, E) — lowers to a reduce-window whose HLO cost model is quadratic
+in T*k, which both bloats real traffic and poisoned the roofline before
+the fix (DESIGN.md §5.5). This benchmark compiles both dispatch builds
+and reports HLO FLOPs, demonstrating the blowup.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import emit
+
+
+def _positions_sort(flat_e, e):
+    order = jnp.argsort(flat_e, stable=True)
+    counts = jnp.zeros((e,), jnp.int32).at[flat_e].add(1)
+    starts = jnp.cumsum(counts) - counts
+    n = flat_e.shape[0]
+    pos_sorted = jnp.arange(n, dtype=jnp.int32) - starts[flat_e[order]]
+    return jnp.zeros((n,), jnp.int32).at[order].set(pos_sorted)
+
+
+def _positions_cumsum(flat_e, e):
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)
+    pos_in_e = jnp.cumsum(onehot, axis=0) - onehot
+    return jnp.take_along_axis(pos_in_e, flat_e[:, None], axis=1)[:, 0]
+
+
+def run(t: int = 32768, k: int = 2, e: int = 16):
+    ids = jax.ShapeDtypeStruct((t * k,), jnp.int32)
+    flops = {}
+    for name, fn in (("sort", _positions_sort),
+                     ("cumsum", _positions_cumsum)):
+        compiled = jax.jit(lambda x, fn=fn: fn(x, e)).lower(ids).compile()
+        ca = compiled.cost_analysis()
+        flops[name] = float(ca.get("flops", 0.0)) + \
+            float(ca.get("transcendentals", 0.0))
+        emit(f"moe_dispatch/{name}/hlo_flops", f"{flops[name]:.3e}",
+             f"T*k={t*k};E={e}")
+    blowup = flops["cumsum"] / max(flops["sort"], 1.0)
+    emit("moe_dispatch/cumsum_vs_sort_blowup", f"{blowup:.1f}",
+         "reduce-window quadratic cost vs O(T log T) sort")
+
+
+if __name__ == "__main__":
+    run()

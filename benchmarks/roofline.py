@@ -1,0 +1,69 @@
+"""Roofline table builder: reads reports/dryrun/*.json into the
+EXPERIMENTS.md §Roofline table (also emits CSV rows to stdout)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+from .common import emit
+
+REPORT_DIR = os.path.join(os.path.dirname(__file__), "..", "reports",
+                          "dryrun")
+
+
+def load_records(report_dir: str = REPORT_DIR) -> List[Dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(report_dir, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def run(report_dir: str = REPORT_DIR):
+    recs = [r for r in load_records(report_dir)
+            if not r.get("skipped") and not r.get("failed")]
+    for r in recs:
+        rf = r["roofline"]
+        total = rf["compute_s"] + rf["memory_s"] + rf["collective_s"]
+        emit(
+            f"roofline/{r['arch']}/{r['shape']}/"
+            f"{'pod2' if '2x16' in r['mesh'] else 'pod1'}/{r['variant']}",
+            f"{total*1e6:.0f}",
+            f"dom={rf['dominant']};c={rf['compute_s']:.3f}"
+            f";m={rf['memory_s']:.3f};coll={rf['collective_s']:.3f}"
+            f";useful={r.get('useful_flops_ratio') or 0:.3f}")
+
+
+def markdown_table(report_dir: str = REPORT_DIR,
+                   variant: str = "baseline") -> str:
+    recs = [r for r in load_records(report_dir)
+            if not r.get("failed") and r.get("variant", "baseline")
+            == variant]
+    lines = [
+        "| arch | shape | mesh | compute s | memory s | collective s |"
+        " dominant | useful FLOPs ratio | HBM temp GB |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"],
+                                         r.get("mesh", ""))):
+        if r.get("skipped"):
+            lines.append(f"| {r['arch']} | {r['shape']} | - | - | - | - |"
+                         f" SKIP ({r['reason'][:40]}) | - | - |")
+            continue
+        rf = r["roofline"]
+        temp_gb = r["memory"].get("temp_bytes", 0) / 1e9
+        ratio = r.get("useful_flops_ratio")
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {rf['compute_s']:.4f} | {rf['memory_s']:.4f} "
+            f"| {rf['collective_s']:.4f} | **{rf['dominant']}** "
+            f"| {ratio:.3f} | {temp_gb:.1f} |" if ratio is not None else
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | - | - | - | - |"
+            f" - | - |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    run()

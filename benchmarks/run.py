@@ -1,0 +1,30 @@
+"""Benchmark harness — one function per paper claim/table.
+
+Prints ``name,us_per_call,derived`` CSV rows:
+  thm2_rounds      — Theorem 2 tightness (rounds vs lower bound, x kappa)
+  thm3_rounds      — Theorem 3 (smooth convex)
+  thm4_incremental — Theorem 4 (incremental family, x n)
+  comm_cost        — feature- vs sample-partition per-round bytes
+  kernel_bench     — Pallas/jnp hot-loop microbenchmarks
+  roofline         — dry-run roofline terms per (arch x shape x mesh)
+"""
+from __future__ import annotations
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    from . import (comm_cost, kernel_bench, m_invariance,
+                   moe_dispatch_ablation, roofline, thm2_rounds,
+                   thm3_rounds, thm4_incremental)
+    thm2_rounds.run()
+    thm3_rounds.run()
+    thm4_incremental.run()
+    m_invariance.run()
+    comm_cost.run()
+    kernel_bench.run()
+    moe_dispatch_ablation.run()
+    roofline.run()
+
+
+if __name__ == "__main__":
+    main()

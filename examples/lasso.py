@@ -1,0 +1,50 @@
+"""Composite objectives under the feature partition: distributed lasso.
+
+The prox of a separable regularizer is BLOCK-LOCAL: machine j soft-
+thresholds its own coordinates with zero extra communication, so FISTA
+runs at the same one-ReduceAll-per-round budget as plain DAGD — the
+paper's communication model extends beyond smooth objectives for free.
+
+    PYTHONPATH=src python examples/lasso.py
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import make_random_erm
+from repro.core.partition import even_partition
+from repro.core.runtime import LocalDistERM
+from repro.core.algorithms import prox_dagd, soft_threshold
+
+# sparse ground truth: 10 active features out of 256
+rng = np.random.RandomState(0)
+n, d, k_true = 128, 256, 10
+A = rng.randn(n, d) / np.sqrt(d)
+w_true = np.zeros(d)
+idx = rng.choice(d, k_true, replace=False)
+w_true[idx] = rng.randn(k_true) * 3
+y = A @ w_true + 0.01 * rng.randn(n)
+
+from repro.core.erm import ERMProblem, squared_loss
+prob = ERMProblem(A=jnp.asarray(A), y=jnp.asarray(y),
+                  loss=squared_loss(), lam=0.0)
+part = even_partition(d, m=4)
+dist = LocalDistERM(prob, part)
+
+tau = 0.002
+w = prox_dagd(dist, rounds=800, L=prob.smoothness_bound(),
+              prox=soft_threshold(tau))
+wg = np.asarray(dist.gather_w(w))
+support = np.where(np.abs(wg) > 1e-6)[0]
+
+print(f"true support    : {sorted(idx.tolist())}")
+print(f"recovered       : {support.tolist()}")
+print(f"support recall  : {len(set(support) & set(idx))}/{k_true}")
+print(f"coef error (sup): "
+      f"{np.abs(wg[idx] - w_true[idx]).max():.4f} (max abs, biased by tau)")
+led = dist.comm.ledger
+print(f"rounds={led.rounds}, ops={led.op_counts()} "
+      f"(prox cost ZERO communication)")
+led.assert_budget(n=n, d=d)

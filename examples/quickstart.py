@@ -1,0 +1,47 @@
+"""Quickstart: feature-partitioned distributed optimization in 40 lines.
+
+Solves a ridge-regression ERM with the paper's communication model:
+4 "machines" each own a block of FEATURE columns; every round costs ONE
+ReduceAll of an R^n vector; machine j only ever updates its own block.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax.numpy as jnp
+
+from repro.core import make_random_erm, thm2_strongly_convex
+from repro.core.partition import even_partition
+from repro.core.runtime import LocalDistERM
+from repro.core.algorithms import dagd
+
+# 1. an ERM problem: n=512 samples, d=1024 features (d > n: the regime
+#    where the paper says feature partitioning wins on communication)
+prob = make_random_erm(n=512, d=1024, loss="squared", lam=1e-2, seed=0)
+
+# 2. partition the FEATURES across 4 machines
+part = even_partition(prob.d, m=4)
+dist = LocalDistERM(prob, part)
+
+# 3. run distributed accelerated gradient descent (the algorithm that
+#    MATCHES the paper's Theorem-2 lower bound)
+L = prob.smoothness_bound()
+w_blocks = dagd(dist, rounds=300, L=L, lam=prob.lam)
+w = dist.gather_w(w_blocks)
+
+# 4. inspect solution + communication bill
+H = prob.A.T @ prob.A / prob.n + prob.lam * jnp.eye(prob.d)
+w_star = jnp.linalg.solve(H, prob.A.T @ prob.y / prob.n)
+gap = float(prob.value(w)) - float(prob.value(w_star))
+led = dist.comm.ledger
+print(f"suboptimality f(w)-f*     : {gap:.3e}")
+print(f"communication rounds      : {led.rounds}")
+print(f"bytes per round           : {led.bytes_per_round():.0f} "
+      f"(= one R^n ReduceAll; n={prob.n})")
+print(f"total ReduceAll ops       : {led.op_counts()}")
+lb = thm2_strongly_convex(L / prob.lam, prob.lam,
+                          float(jnp.linalg.norm(w_star)), 1e-6)
+print(f"Thm-2 lower bound (eps=1e-6): {lb.rounds:.0f} rounds")
+led.assert_budget(n=prob.n, d=prob.d)
+print("paper's O(n+d)/round communication budget: RESPECTED")

@@ -1,0 +1,52 @@
+"""Assigned architecture configs (+ the paper's own ERM configs).
+
+Each module exposes:
+    full()    -> ModelConfig / EncDecConfig with the exact assigned spec
+    smoke()   -> reduced same-family variant (<=2 layers, d_model<=512,
+                 <=4 experts) for CPU tests
+    input_specs(shape_name, mesh_kind) -> ShapeDtypeStruct stand-ins
+    SUPPORTED_SHAPES -> which of the 4 input shapes apply (long_500k only
+                 for sub-quadratic archs; see DESIGN.md)
+
+Registry: ``get(arch_id)``.
+"""
+from __future__ import annotations
+
+import importlib
+
+ARCHS = [
+    "granite_moe_1b_a400m",
+    "whisper_large_v3",
+    "jamba_1_5_large_398b",
+    "mamba2_780m",
+    "qwen1_5_32b",
+    "stablelm_12b",
+    "paligemma_3b",
+    "gemma3_27b",
+    "starcoder2_15b",
+    "llama4_maverick_400b_a17b",
+]
+
+# canonical ids as assigned (dash form) -> module names
+ALIASES = {a.replace("_", "-"): a for a in ARCHS}
+ALIASES.update({
+    "granite-moe-1b-a400m": "granite_moe_1b_a400m",
+    "whisper-large-v3": "whisper_large_v3",
+    "jamba-1.5-large-398b": "jamba_1_5_large_398b",
+    "mamba2-780m": "mamba2_780m",
+    "qwen1.5-32b": "qwen1_5_32b",
+    "stablelm-12b": "stablelm_12b",
+    "paligemma-3b": "paligemma_3b",
+    "gemma3-27b": "gemma3_27b",
+    "starcoder2-15b": "starcoder2_15b",
+    "llama4-maverick-400b-a17b": "llama4_maverick_400b_a17b",
+})
+
+
+def get(arch_id: str):
+    mod = ALIASES.get(arch_id, arch_id.replace("-", "_").replace(".", "_"))
+    return importlib.import_module(f"repro.configs.{mod}")
+
+
+def canonical_ids():
+    return [a.replace("_", "-") for a in ARCHS]

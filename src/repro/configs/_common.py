@@ -1,0 +1,48 @@
+"""Shared builders for the architecture config modules."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models.layers import AttnConfig, MLPConfig
+from ..models.moe import MoEConfig
+from ..models.mamba2 import Mamba2Config
+from ..models.transformer import LayerSpec, ModelConfig, init_cache
+from . import shapes as S
+
+
+def dense_pattern(window_pattern: Tuple[Optional[int], ...] = (None,),
+                  ffn: str = "dense") -> Tuple[LayerSpec, ...]:
+    return tuple(LayerSpec("attn", ffn, w) for w in window_pattern)
+
+
+def attn(d_model, n_heads, n_kv_heads, head_dim, qkv_bias=False,
+         rope_base=10000.0, q_chunk=1024):
+    return AttnConfig(d_model=d_model, n_heads=n_heads,
+                      n_kv_heads=n_kv_heads, head_dim=head_dim,
+                      qkv_bias=qkv_bias, rope_base=rope_base,
+                      q_chunk=q_chunk)
+
+
+def lm_input_specs(cfg: ModelConfig, shape_name: str,
+                   n_prefix: int = 0):
+    """ShapeDtypeStruct stand-ins for decoder-only LM steps."""
+    shape = S.SHAPES[shape_name]
+    b = shape.global_batch
+    if shape.kind in ("train", "prefill"):
+        s_text = shape.seq_len - n_prefix
+        out = {"tokens": jax.ShapeDtypeStruct((b, s_text), jnp.int32)}
+        if n_prefix:
+            out["prefix_embeds"] = jax.ShapeDtypeStruct(
+                (b, n_prefix, cfg.d_model), cfg.dtype)
+        if shape.kind == "train":
+            out["labels"] = jax.ShapeDtypeStruct((b, s_text), jnp.int32)
+        return out
+    # decode: one token + cache of seq_len
+    return {
+        "token": jax.ShapeDtypeStruct((b, 1), jnp.int32),
+        "cache": init_cache(cfg, b, shape.seq_len, abstract=True),
+    }

@@ -1,0 +1,47 @@
+"""gemma3-27b [dense] — 62L d_model=5376 32H (GQA kv=16) d_ff=21504
+vocab=262144, 5:1 local:global attention (sliding window 1024), 128k ctx.
+long_500k RUNS for this arch: decode against the window cache is O(W) on
+the 5/6 local layers. [hf:google/gemma-3-1b-pt]
+"""
+import jax.numpy as jnp
+
+from ..models.layers import MLPConfig
+from ..models.transformer import LayerSpec, ModelConfig
+from ._common import attn, lm_input_specs
+
+SUPPORTED_SHAPES = ("train_4k", "prefill_32k", "decode_32k", "long_500k")
+FAMILY = "dense"
+LOCAL_WINDOW = 1024
+
+
+def full() -> ModelConfig:
+    local = LayerSpec("attn", "dense", window=LOCAL_WINDOW)
+    glob = LayerSpec("attn", "dense", window=None)
+    return ModelConfig(
+        name="gemma3-27b",
+        vocab=262144, d_model=5376, n_layers=62,
+        # 5 local : 1 global; 62 = 10*6 + 2 remainder local layers
+        pattern=(local, local, local, local, local, glob),
+        attn=attn(5376, 32, 16, 128),
+        mlp=MLPConfig(d_model=5376, d_ff=21504, activation="swiglu"),
+        norm="rmsnorm", scale_embed=True,
+        citation="hf:google/gemma-3-1b-pt",
+    )
+
+
+def smoke() -> ModelConfig:
+    local = LayerSpec("attn", "dense", window=64)
+    glob = LayerSpec("attn", "dense", window=None)
+    return ModelConfig(
+        name="gemma3-smoke",
+        vocab=512, d_model=128, n_layers=2,
+        pattern=(local, glob),
+        attn=attn(128, 4, 2, 32, q_chunk=64),
+        mlp=MLPConfig(d_model=128, d_ff=256, activation="swiglu"),
+        norm="rmsnorm", scale_embed=True, remat="none", dtype=jnp.float32,
+        citation="hf:google/gemma-3-1b-pt",
+    )
+
+
+def input_specs(shape_name: str, cfg: ModelConfig | None = None):
+    return lm_input_specs(cfg or full(), shape_name)

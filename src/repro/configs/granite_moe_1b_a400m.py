@@ -1,0 +1,41 @@
+"""granite-moe-1b-a400m [moe] — 24L d_model=1024 16H (GQA kv=8) d_ff=512
+vocab=49155, MoE 32 experts top-8.
+[hf:ibm-granite/granite-3.0-1b-a400m-base]
+"""
+import jax.numpy as jnp
+
+from ..models.layers import MLPConfig
+from ..models.moe import MoEConfig
+from ..models.transformer import LayerSpec, ModelConfig
+from ._common import attn, lm_input_specs
+
+SUPPORTED_SHAPES = ("train_4k", "prefill_32k", "decode_32k")
+FAMILY = "moe"
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="granite-moe-1b-a400m",
+        vocab=49155, d_model=1024, n_layers=24,
+        pattern=(LayerSpec("attn", "moe"),),
+        attn=attn(1024, 16, 8, 64),
+        moe=MoEConfig(d_model=1024, d_ff=512, n_experts=32, top_k=8),
+        norm="rmsnorm",
+        citation="hf:ibm-granite/granite-3.0-1b-a400m-base",
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="granite-moe-smoke",
+        vocab=512, d_model=128, n_layers=2,
+        pattern=(LayerSpec("attn", "moe"),),
+        attn=attn(128, 4, 2, 32, q_chunk=64),
+        moe=MoEConfig(d_model=128, d_ff=64, n_experts=4, top_k=2),
+        norm="rmsnorm", remat="none", dtype=jnp.float32,
+        citation="hf:ibm-granite/granite-3.0-1b-a400m-base",
+    )
+
+
+def input_specs(shape_name: str, cfg: ModelConfig | None = None):
+    return lm_input_specs(cfg or full(), shape_name)

@@ -1,0 +1,63 @@
+"""jamba-1.5-large-398b [hybrid] — 72L d_model=8192 64H (GQA kv=8)
+d_ff=24576, MoE 16 experts top-2, Mamba+attention 1:7 interleave.
+72 = 9 repeats of an 8-layer period [attn, mamba x7]; MoE on every other
+layer (odd positions). FSDP sharding overlay required (398B params).
+long_500k RUNS (hybrid: mamba state + windowless attn on 1/8 layers whose
+KV cache at 524288 x kv8 x dh128 x 9 layers is shardable).
+[arXiv:2403.19887]
+"""
+import jax.numpy as jnp
+
+from ..models.layers import MLPConfig
+from ..models.moe import MoEConfig
+from ..models.mamba2 import Mamba2Config
+from ..models.transformer import LayerSpec, ModelConfig
+from ._common import attn, lm_input_specs
+
+SUPPORTED_SHAPES = ("train_4k", "prefill_32k", "decode_32k", "long_500k")
+FAMILY = "hybrid"
+FSDP = True
+
+
+def _pattern():
+    specs = []
+    for pos in range(8):
+        kind = "attn" if pos == 0 else "mamba"
+        ffn = "moe" if pos % 2 == 1 else "dense"
+        specs.append(LayerSpec(kind, ffn))
+    return tuple(specs)
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="jamba-1.5-large-398b",
+        vocab=65536, d_model=8192, n_layers=72,
+        pattern=_pattern(),
+        attn=attn(8192, 64, 8, 128, rope_base=0.0),  # jamba: no RoPE
+        mlp=MLPConfig(d_model=8192, d_ff=24576, activation="swiglu"),
+        moe=MoEConfig(d_model=8192, d_ff=24576, n_experts=16, top_k=2),
+        mamba=Mamba2Config(d_model=8192, n_heads=128, head_dim=128,
+                           d_state=128, n_groups=8, chunk=256),
+        norm="rmsnorm",
+        citation="arXiv:2403.19887",
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="jamba-smoke",
+        vocab=512, d_model=128, n_layers=4,
+        pattern=(LayerSpec("attn", "dense"), LayerSpec("mamba", "moe"),
+                 LayerSpec("mamba", "dense"), LayerSpec("mamba", "moe")),
+        attn=attn(128, 4, 2, 32, rope_base=0.0, q_chunk=64),
+        mlp=MLPConfig(d_model=128, d_ff=256, activation="swiglu"),
+        moe=MoEConfig(d_model=128, d_ff=64, n_experts=4, top_k=2),
+        mamba=Mamba2Config(d_model=128, n_heads=4, head_dim=32,
+                           d_state=16, n_groups=2, chunk=32),
+        norm="rmsnorm", remat="none", dtype=jnp.float32,
+        citation="arXiv:2403.19887",
+    )
+
+
+def input_specs(shape_name: str, cfg: ModelConfig | None = None):
+    return lm_input_specs(cfg or full(), shape_name)

@@ -1,0 +1,46 @@
+"""llama4-maverick-400b-a17b [moe] — 48L d_model=5120 40H (GQA kv=8)
+d_ff=8192 (per expert), vocab=202048, MoE 128 experts top-1, alternating
+dense/MoE layers (interleave step 2), early fusion (text tokens exercised;
+vision tower out of scope per the frontend carve-out). FSDP overlay
+required (~400B params). [hf:meta-llama/Llama-4-Scout-17B-16E]
+"""
+import jax.numpy as jnp
+
+from ..models.layers import MLPConfig
+from ..models.moe import MoEConfig
+from ..models.transformer import LayerSpec, ModelConfig
+from ._common import attn, lm_input_specs
+
+SUPPORTED_SHAPES = ("train_4k", "prefill_32k", "decode_32k")
+FAMILY = "moe"
+FSDP = True
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="llama4-maverick-400b-a17b",
+        vocab=202048, d_model=5120, n_layers=48,
+        pattern=(LayerSpec("attn", "dense"), LayerSpec("attn", "moe")),
+        attn=attn(5120, 40, 8, 128),
+        mlp=MLPConfig(d_model=5120, d_ff=16384, activation="swiglu"),
+        moe=MoEConfig(d_model=5120, d_ff=8192, n_experts=128, top_k=1),
+        norm="rmsnorm",
+        citation="hf:meta-llama/Llama-4-Scout-17B-16E",
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="llama4-smoke",
+        vocab=512, d_model=128, n_layers=2,
+        pattern=(LayerSpec("attn", "dense"), LayerSpec("attn", "moe")),
+        attn=attn(128, 4, 2, 32, q_chunk=64),
+        mlp=MLPConfig(d_model=128, d_ff=256, activation="swiglu"),
+        moe=MoEConfig(d_model=128, d_ff=64, n_experts=4, top_k=1),
+        norm="rmsnorm", remat="none", dtype=jnp.float32,
+        citation="hf:meta-llama/Llama-4-Scout-17B-16E",
+    )
+
+
+def input_specs(shape_name: str, cfg: ModelConfig | None = None):
+    return lm_input_specs(cfg or full(), shape_name)

@@ -1,0 +1,45 @@
+"""mamba2-780m [ssm] — 48L d_model=1536, attention-free, ssm_state=128,
+SSD (state-space duality). d_inner = 2*d_model = 3072, head_dim 64 ->
+48 SSD heads. long_500k RUNS (O(1) state cache). [arXiv:2405.21060]
+
+Arch-applicability note (DESIGN.md): the paper's span-rule round bounds
+govern convex ERM, not recurrent scans; only the feature-partition
+communication model transfers (state heads sharded on `model`, scan needs
+no collectives).
+"""
+import jax.numpy as jnp
+
+from ..models.mamba2 import Mamba2Config
+from ..models.transformer import LayerSpec, ModelConfig
+from ._common import lm_input_specs
+
+SUPPORTED_SHAPES = ("train_4k", "prefill_32k", "decode_32k", "long_500k")
+FAMILY = "ssm"
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="mamba2-780m",
+        vocab=50280, d_model=1536, n_layers=48,
+        pattern=(LayerSpec("mamba", "none"),),
+        mamba=Mamba2Config(d_model=1536, n_heads=48, head_dim=64,
+                           d_state=128, n_groups=1, chunk=256),
+        norm="rmsnorm",
+        citation="arXiv:2405.21060",
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="mamba2-smoke",
+        vocab=512, d_model=128, n_layers=2,
+        pattern=(LayerSpec("mamba", "none"),),
+        mamba=Mamba2Config(d_model=128, n_heads=4, head_dim=32,
+                           d_state=16, n_groups=1, chunk=32),
+        norm="rmsnorm", remat="none", dtype=jnp.float32,
+        citation="arXiv:2405.21060",
+    )
+
+
+def input_specs(shape_name: str, cfg: ModelConfig | None = None):
+    return lm_input_specs(cfg or full(), shape_name)

@@ -1,0 +1,45 @@
+"""paligemma-3b [vlm] — 18L d_model=2048 8H (GQA kv=1, MQA) d_ff=16384
+vocab=257216. SigLIP vision tower is a STUB per the carve-out:
+input_specs provides 256 precomputed patch embeddings (B, 256, D);
+prefix-LM masking (bidirectional prefix over patches). [arXiv:2407.07726]
+"""
+import jax.numpy as jnp
+
+from ..models.layers import MLPConfig
+from ..models.transformer import LayerSpec, ModelConfig
+from ._common import attn, lm_input_specs
+
+SUPPORTED_SHAPES = ("train_4k", "prefill_32k", "decode_32k")
+FAMILY = "vlm"
+N_PATCHES = 256
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="paligemma-3b",
+        vocab=257216, d_model=2048, n_layers=18,
+        pattern=(LayerSpec("attn", "dense"),),
+        attn=attn(2048, 8, 1, 256),
+        mlp=MLPConfig(d_model=2048, d_ff=16384, activation="swiglu"),
+        norm="rmsnorm", scale_embed=True,
+        prefix_lm=True, n_prefix=N_PATCHES,
+        citation="arXiv:2407.07726",
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="paligemma-smoke",
+        vocab=512, d_model=128, n_layers=2,
+        pattern=(LayerSpec("attn", "dense"),),
+        attn=attn(128, 4, 1, 32, q_chunk=64),
+        mlp=MLPConfig(d_model=128, d_ff=256, activation="swiglu"),
+        norm="rmsnorm", scale_embed=True,
+        prefix_lm=True, n_prefix=16, remat="none", dtype=jnp.float32,
+        citation="arXiv:2407.07726",
+    )
+
+
+def input_specs(shape_name: str, cfg: ModelConfig | None = None):
+    cfg = cfg or full()
+    return lm_input_specs(cfg, shape_name, n_prefix=cfg.n_prefix)

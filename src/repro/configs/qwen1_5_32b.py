@@ -1,0 +1,39 @@
+"""qwen1.5-32b [dense] — 64L d_model=5120 40H (GQA kv=40) d_ff=27392
+vocab=152064, QKV bias. [hf:Qwen/Qwen1.5-0.5B]
+"""
+import jax.numpy as jnp
+
+from ..models.layers import MLPConfig
+from ..models.transformer import LayerSpec, ModelConfig
+from ._common import attn, lm_input_specs
+
+SUPPORTED_SHAPES = ("train_4k", "prefill_32k", "decode_32k")
+FAMILY = "dense"
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="qwen1.5-32b",
+        vocab=152064, d_model=5120, n_layers=64,
+        pattern=(LayerSpec("attn", "dense"),),
+        attn=attn(5120, 40, 40, 128, qkv_bias=True),
+        mlp=MLPConfig(d_model=5120, d_ff=27392, activation="swiglu"),
+        norm="rmsnorm",
+        citation="hf:Qwen/Qwen1.5-0.5B",
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="qwen1.5-smoke",
+        vocab=512, d_model=128, n_layers=2,
+        pattern=(LayerSpec("attn", "dense"),),
+        attn=attn(128, 4, 4, 32, qkv_bias=True, q_chunk=64),
+        mlp=MLPConfig(d_model=128, d_ff=256, activation="swiglu"),
+        norm="rmsnorm", remat="none", dtype=jnp.float32,
+        citation="hf:Qwen/Qwen1.5-0.5B",
+    )
+
+
+def input_specs(shape_name: str, cfg: ModelConfig | None = None):
+    return lm_input_specs(cfg or full(), shape_name)

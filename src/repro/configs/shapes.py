@@ -1,0 +1,41 @@
+"""The four assigned input shapes + ShapeDtypeStruct builders.
+
+Decode shapes lower ``serve_step`` (ONE token against a seq_len cache);
+train/prefill lower ``train_step`` / prefill forward.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str            # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": InputShape("train_4k", 4096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524288, 1, "decode"),
+}
+
+
+def token_specs(shape: InputShape, with_labels: bool):
+    b, s = shape.global_batch, shape.seq_len
+    tok = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    if with_labels:
+        return {"tokens": tok, "labels": jax.ShapeDtypeStruct((b, s),
+                                                              jnp.int32)}
+    return {"tokens": tok}
+
+
+def decode_token_spec(shape: InputShape):
+    return jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)

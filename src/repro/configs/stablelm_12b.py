@@ -1,0 +1,39 @@
+"""stablelm-12b [dense] — 40L d_model=5120 32H (GQA kv=8) d_ff=13824
+vocab=100352. [hf:stabilityai/stablelm-2-1_6b]
+"""
+import jax.numpy as jnp
+
+from ..models.layers import MLPConfig
+from ..models.transformer import LayerSpec, ModelConfig
+from ._common import attn, lm_input_specs
+
+SUPPORTED_SHAPES = ("train_4k", "prefill_32k", "decode_32k")
+FAMILY = "dense"
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="stablelm-12b",
+        vocab=100352, d_model=5120, n_layers=40,
+        pattern=(LayerSpec("attn", "dense"),),
+        attn=attn(5120, 32, 8, 160),
+        mlp=MLPConfig(d_model=5120, d_ff=13824, activation="swiglu"),
+        norm="layernorm",
+        citation="hf:stabilityai/stablelm-2-1_6b",
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="stablelm-smoke",
+        vocab=512, d_model=128, n_layers=2,
+        pattern=(LayerSpec("attn", "dense"),),
+        attn=attn(128, 4, 2, 32, q_chunk=64),
+        mlp=MLPConfig(d_model=128, d_ff=256, activation="swiglu"),
+        norm="layernorm", remat="none", dtype=jnp.float32,
+        citation="hf:stabilityai/stablelm-2-1_6b",
+    )
+
+
+def input_specs(shape_name: str, cfg: ModelConfig | None = None):
+    return lm_input_specs(cfg or full(), shape_name)

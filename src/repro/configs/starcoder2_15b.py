@@ -1,0 +1,39 @@
+"""starcoder2-15b [dense] — 40L d_model=6144 48H (GQA kv=4) d_ff=24576
+vocab=49152, GQA + RoPE. [arXiv:2402.19173]
+"""
+import jax.numpy as jnp
+
+from ..models.layers import MLPConfig
+from ..models.transformer import LayerSpec, ModelConfig
+from ._common import attn, lm_input_specs
+
+SUPPORTED_SHAPES = ("train_4k", "prefill_32k", "decode_32k")
+FAMILY = "dense"
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="starcoder2-15b",
+        vocab=49152, d_model=6144, n_layers=40,
+        pattern=(LayerSpec("attn", "dense"),),
+        attn=attn(6144, 48, 4, 128),
+        mlp=MLPConfig(d_model=6144, d_ff=24576, activation="gelu"),
+        norm="layernorm",
+        citation="arXiv:2402.19173",
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="starcoder2-smoke",
+        vocab=512, d_model=128, n_layers=2,
+        pattern=(LayerSpec("attn", "dense"),),
+        attn=attn(128, 4, 2, 32, q_chunk=64),
+        mlp=MLPConfig(d_model=128, d_ff=256, activation="gelu"),
+        norm="layernorm", remat="none", dtype=jnp.float32,
+        citation="arXiv:2402.19173",
+    )
+
+
+def input_specs(shape_name: str, cfg: ModelConfig | None = None):
+    return lm_input_specs(cfg or full(), shape_name)

@@ -1,0 +1,71 @@
+"""whisper-large-v3 [audio] — enc-dec, 32+32L d_model=1280 20H (kv=20)
+d_ff=5120 vocab=51866. Conv/mel frontend is a STUB per the carve-out:
+input_specs provides precomputed frame embeddings (B, 1500, D).
+
+Shape adaptations (DESIGN.md): the real decoder ctx is 448; train_4k splits
+the 4k token budget into enc frames + dec tokens (dec len <= max_target), and
+decode_32k exercises a longform 32768-entry self-KV ring (positions clamp
+to the learned table). long_500k SKIPPED (full attention, enc-dec).
+[arXiv:2212.04356]
+"""
+import jax
+import jax.numpy as jnp
+
+from ..models.layers import MLPConfig
+from ..models.encdec import EncDecConfig, init_cache
+from ._common import attn
+from . import shapes as S
+
+SUPPORTED_SHAPES = ("train_4k", "prefill_32k", "decode_32k")
+FAMILY = "audio"
+N_FRAMES = 1500
+
+
+def full() -> EncDecConfig:
+    return EncDecConfig(
+        name="whisper-large-v3",
+        vocab=51866, d_model=1280,
+        n_enc_layers=32, n_dec_layers=32,
+        attn=attn(1280, 20, 20, 64, rope_base=0.0),
+        mlp=MLPConfig(d_model=1280, d_ff=5120, activation="gelu"),
+        n_frames=N_FRAMES, max_target=4096,
+        citation="arXiv:2212.04356",
+    )
+
+
+def smoke() -> EncDecConfig:
+    return EncDecConfig(
+        name="whisper-smoke",
+        vocab=512, d_model=128,
+        n_enc_layers=2, n_dec_layers=2,
+        attn=attn(128, 4, 4, 32, rope_base=0.0, q_chunk=64),
+        mlp=MLPConfig(d_model=128, d_ff=256, activation="gelu"),
+        n_frames=64, max_target=128, remat="none", dtype=jnp.float32,
+        citation="arXiv:2212.04356",
+    )
+
+
+def input_specs(shape_name: str, cfg: EncDecConfig | None = None):
+    cfg = cfg or full()
+    shape = S.SHAPES[shape_name]
+    b = shape.global_batch
+    if shape.kind == "train":
+        s_dec = min(shape.seq_len - cfg.n_frames, cfg.max_target) \
+            if shape.seq_len > cfg.n_frames else 448
+        return {
+            "frames": jax.ShapeDtypeStruct((b, cfg.n_frames, cfg.d_model),
+                                           cfg.dtype),
+            "tokens": jax.ShapeDtypeStruct((b, s_dec), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((b, s_dec), jnp.int32),
+        }
+    if shape.kind == "prefill":
+        # decoder teacher-forced pass of seq_len against encoder states
+        return {
+            "frames": jax.ShapeDtypeStruct((b, cfg.n_frames, cfg.d_model),
+                                           cfg.dtype),
+            "tokens": jax.ShapeDtypeStruct((b, shape.seq_len), jnp.int32),
+        }
+    return {
+        "token": jax.ShapeDtypeStruct((b, 1), jnp.int32),
+        "cache": init_cache(cfg, b, shape.seq_len, abstract=True),
+    }

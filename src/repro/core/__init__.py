@@ -1,0 +1,33 @@
+"""Core — the paper's contribution, operational.
+
+Feature-partitioned distributed convex optimization: the algorithm family
+of Definition 1 (and its incremental variant), the hard instances and
+closed-form lower bounds of Theorems 2-4, the feasible-set certifier for
+Lemma 5 / Corollary 6, and the metered communication model.
+"""
+from .partition import FeaturePartition, even_partition
+from .erm import (ERMProblem, GLMLoss, LOSSES, logistic_loss,
+                  make_random_erm, squared_hinge_loss, squared_loss)
+from .hard_instance import (ChainInstance, SeparableInstance, chain_matrix,
+                            smooth_convex_lower_bound_rounds, tridiag_bands,
+                            tridiag_matvec)
+from .bounds import (BoundReport, agd_smooth_upper_bound, agd_upper_bound,
+                     gd_upper_bound, thm2_strongly_convex, thm3_smooth_convex,
+                     thm4_incremental)
+from .comm import (CollectiveAudit, CommLedger, LocalCommunicator,
+                   ShardMapCommunicator, collective_bytes_from_hlo)
+from .feasible_set import SpanOracle
+
+__all__ = [
+    "FeaturePartition", "even_partition",
+    "ERMProblem", "GLMLoss", "LOSSES", "logistic_loss", "make_random_erm",
+    "squared_hinge_loss", "squared_loss",
+    "ChainInstance", "SeparableInstance", "chain_matrix",
+    "smooth_convex_lower_bound_rounds", "tridiag_bands", "tridiag_matvec",
+    "BoundReport", "agd_smooth_upper_bound", "agd_upper_bound",
+    "gd_upper_bound", "thm2_strongly_convex", "thm3_smooth_convex",
+    "thm4_incremental",
+    "CollectiveAudit", "CommLedger", "LocalCommunicator",
+    "ShardMapCommunicator", "collective_bytes_from_hlo",
+    "SpanOracle",
+]

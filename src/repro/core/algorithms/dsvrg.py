@@ -1,0 +1,55 @@
+"""Feature-partitioned SVRG — a member of the paper's incremental family
+I^{lam,L} (Definition in Sec. 3.2).
+
+Round structure: each stochastic step touches ONE component phi(w, A_l:)
+(Eq. 3's g(w)) and needs the scalar a_l . w — under the feature partition
+that is one ReduceAll of a SCALAR per step (machine j contributes
+a_l[S_j] . w_j), so a stochastic step is a (cheap) communication round.
+Snapshot full gradients cost one R^n ReduceAll.
+
+SVRG round complexity O((n + kappa_max) log(1/eps)) does NOT meet the
+Theorem-4 floor Omega((sqrt(n kappa) + n) log(1/eps)); the paper leaves
+tightness open. benchmarks/thm4_incremental.py plots both.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+
+def dsvrg(dist, rounds: int, L_max: float, lam: float = 0.0,
+          epoch_len: int = 0, seed: int = 0, history: bool = False,
+          eta: float = 0.0):
+    """``L_max``: max per-component smoothness (max_i |a_i|^2 l''max + lam).
+    ``rounds`` counts every stochastic step as a round (paper's metric).
+    Requires the backend to expose per-sample rows: dist.sample_row(i).
+    """
+    n = dist.n
+    epoch_len = epoch_len or 2 * n
+    eta = eta or 1.0 / (10.0 * L_max)
+    rng = np.random.RandomState(seed)
+
+    w = dist.zeros_like_w()
+    iterates = []
+    used = 0
+    while used < rounds:
+        # --- snapshot: one R^n ReduceAll + local full partial gradient
+        z_snap = dist.response(w, tag="svrg.snapshot")
+        g_snap = dist.pgrad(w, z_snap)   # includes lam*w term
+        w_snap = w
+        dist.end_round()
+        used += 1
+        # --- inner loop: one scalar-ReduceAll round per stochastic step
+        for _ in range(min(epoch_len, rounds - used)):
+            i = int(rng.randint(n))
+            a_i = dist.sample_row(i)              # local block of row i
+            zi = dist.dot_row(a_i, w, tag="svrg.aw")        # scalar reduce
+            zi_snap = z_snap[i]
+            gi = dist.row_grad(a_i, zi, i) + lam * w
+            gi_snap = dist.row_grad(a_i, zi_snap, i) + lam * w_snap
+            w = w - eta * (gi - gi_snap + g_snap)
+            dist.end_round()
+            used += 1
+            if history:
+                iterates.append(w)
+    return (w, {"iterates": iterates}) if history else w

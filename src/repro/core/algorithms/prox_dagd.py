@@ -1,0 +1,61 @@
+"""Proximal accelerated gradient (FISTA) under the feature partition.
+
+Composite objectives  f(w) + psi(w)  with coordinate-separable psi (L1,
+box constraints, elastic net) fit the paper's communication model for
+free: the prox operator acts coordinate-wise, so machine j applies
+prox_{psi} to ITS OWN block with zero additional communication — the
+round cost stays exactly one R^n ReduceAll, and the Theorem-2/3 lower
+bounds (which hold for the smooth part) are still matched order-wise by
+this algorithm. This extends the framework beyond the paper's smooth
+setting at no communication cost.
+"""
+from __future__ import annotations
+
+import math
+from typing import Callable
+
+import jax.numpy as jnp
+
+
+def soft_threshold(tau: float):
+    """prox of tau*|w|_1 — elementwise, hence block-local."""
+    def prox(w, step):
+        t = tau * step
+        return jnp.sign(w) * jnp.maximum(jnp.abs(w) - t, 0.0)
+    return prox
+
+
+def box_projection(lo: float, hi: float):
+    def prox(w, step):
+        return jnp.clip(w, lo, hi)
+    return prox
+
+
+def prox_dagd(dist, rounds: int, L: float, prox: Callable,
+              lam: float = 0.0, history: bool = False):
+    """FISTA (lam=0) / accelerated proximal gradient (lam>0) on
+    f(w) + psi(w); ``prox(w_block, step)`` must be coordinate-separable.
+    One R^n ReduceAll per round, like DAGD."""
+    x = dist.zeros_like_w()
+    y = dist.zeros_like_w()
+    t = 1.0
+    beta_sc = None
+    if lam > 0:
+        kappa = L / lam
+        beta_sc = (math.sqrt(kappa) - 1.0) / (math.sqrt(kappa) + 1.0)
+    iterates = []
+    for _ in range(rounds):
+        z = dist.response(y)
+        g = dist.pgrad(y, z)
+        x_new = prox(y - (1.0 / L) * g, 1.0 / L)   # block-local prox
+        if beta_sc is not None:
+            y = x_new + beta_sc * (x_new - x)
+        else:
+            t_new = 0.5 * (1.0 + math.sqrt(1.0 + 4.0 * t * t))
+            y = x_new + ((t - 1.0) / t_new) * (x_new - x)
+            t = t_new
+        x = x_new
+        dist.end_round()
+        if history:
+            iterates.append(x)
+    return (x, {"iterates": iterates}) if history else x

@@ -1,0 +1,252 @@
+"""Communication model + metering.
+
+The paper restricts each round to:
+  * computation phase: a constant number of Reduce/ReduceAll ops of an R^n
+    vector (or scalars),
+  * communication phase: each machine j broadcasts O(1) vectors in R^{d_j}
+    (an all-to-all broadcast == one ReduceAll of an R^d vector).
+
+Two communicator backends implement this model:
+
+  * ``LocalCommunicator`` — m simulated machines on the host; per-machine
+    state is stacked on a leading axis. Used by the reference algorithms,
+    the feasible-set certifier, and the CPU benchmarks.
+  * ``ShardMapCommunicator`` — the same interface bound to ``jax.lax``
+    collectives over a named mesh axis, for use inside ``shard_map``.
+    "Machine j" is mesh slice j of the `model` axis.
+
+Every call is recorded in a ``CommLedger`` so benchmarks can report
+rounds, op counts and bytes, and assert the paper's per-round budget
+(O(n + d) bits/round) is respected by each algorithm.
+
+Also here: ``collective_bytes_from_hlo`` — the dry-run HLO auditor that sums
+payload bytes of all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute ops in a lowered/compiled module (used by the roofline).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+# --------------------------------------------------------------------------
+# Ledger
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class CommRecord:
+    kind: str          # reduce_all | reduce | broadcast | all_to_all_broadcast
+    elems: int         # payload element count (per machine contribution)
+    bytes: int
+    tag: str = ""
+
+
+@dataclasses.dataclass
+class CommLedger:
+    records: List[CommRecord] = dataclasses.field(default_factory=list)
+    rounds: int = 0
+    _round_open: bool = False
+
+    def record(self, kind: str, elems: int, itemsize: int = 4, tag: str = ""):
+        self.records.append(CommRecord(kind, int(elems),
+                                       int(elems) * itemsize, tag))
+        self._round_open = True
+
+    def end_round(self):
+        self.rounds += 1
+        self._round_open = False
+
+    # ---- summaries -----------------------------------------------------
+    def total_bytes(self) -> int:
+        return sum(r.bytes for r in self.records)
+
+    def op_counts(self) -> Dict[str, int]:
+        out: Dict[str, int] = {}
+        for r in self.records:
+            out[r.kind] = out.get(r.kind, 0) + 1
+        return out
+
+    def bytes_per_round(self) -> float:
+        return self.total_bytes() / max(1, self.rounds)
+
+    def assert_budget(self, n: int, d: int, const: int = 8,
+                      itemsize: int = 4):
+        """Assert the paper's per-round budget: <= const ReduceAll of R^n
+        plus const broadcast of R^{d} total, i.e. O(n+d) elements/round."""
+        budget = const * (n + d) * itemsize
+        per_round = self.bytes_per_round()
+        if per_round > budget:
+            raise AssertionError(
+                f"communication budget violated: {per_round:.0f} B/round "
+                f"> {budget} B/round (n={n}, d={d}, const={const})")
+
+
+# --------------------------------------------------------------------------
+# Communicators
+# --------------------------------------------------------------------------
+
+class LocalCommunicator:
+    """Simulates m machines on host. Per-machine values are stacked on a
+    leading axis of size m. Used by reference algorithms and tests."""
+
+    def __init__(self, m: int, ledger: Optional[CommLedger] = None):
+        self.m = m
+        self.ledger = ledger if ledger is not None else CommLedger()
+
+    def reduce_all(self, x_stacked, tag: str = "") -> jnp.ndarray:
+        """ReduceAll: each machine holds x_j (stacked (m, ...)); returns the
+        sum, conceptually available on every machine."""
+        x_stacked = jnp.asarray(x_stacked)
+        self.ledger.record("reduce_all", x_stacked[0].size,
+                           x_stacked.dtype.itemsize, tag)
+        return jnp.sum(x_stacked, axis=0)
+
+    def reduce_scalar(self, x_stacked, tag: str = "") -> jnp.ndarray:
+        self.ledger.record("reduce_all", 1, 4, tag)
+        return jnp.sum(x_stacked, axis=0)
+
+    def all_to_all_broadcast(self, blocks_stacked, tag: str = ""):
+        """Each machine broadcasts its R^{d_j} block; every machine ends up
+        with all blocks. Locally this is the identity on the stacked array;
+        the ledger charges sum_j d_j = d elements."""
+        blocks_stacked = jnp.asarray(blocks_stacked)
+        self.ledger.record("all_to_all_broadcast", blocks_stacked.size,
+                           blocks_stacked.dtype.itemsize, tag)
+        return blocks_stacked
+
+    def end_round(self):
+        self.ledger.end_round()
+
+
+class ShardMapCommunicator:
+    """The same interface bound to lax collectives over mesh axis ``axis``.
+
+    Use inside ``shard_map``: per-machine arrays are the *local* shards (no
+    stacking axis). Ledger recording happens at trace time — callers run one
+    traced step per round (or multiply a one-round ledger by round count).
+    """
+
+    def __init__(self, axis: str, ledger: Optional[CommLedger] = None):
+        self.axis = axis
+        self.ledger = ledger if ledger is not None else CommLedger()
+
+    def reduce_all(self, x_local, tag: str = "") -> jnp.ndarray:
+        self.ledger.record("reduce_all", x_local.size,
+                           x_local.dtype.itemsize, tag)
+        return lax.psum(x_local, self.axis)
+
+    def reduce_scalar(self, x_local, tag: str = "") -> jnp.ndarray:
+        self.ledger.record("reduce_all", 1, 4, tag)
+        return lax.psum(x_local, self.axis)
+
+    def all_to_all_broadcast(self, block_local, tag: str = "") -> jnp.ndarray:
+        """all_gather of the local R^{d_j} block -> (m, d_j) on every shard."""
+        self.ledger.record("all_to_all_broadcast", block_local.size,
+                           block_local.dtype.itemsize, tag)
+        return lax.all_gather(block_local, self.axis)
+
+    def end_round(self):
+        self.ledger.end_round()
+
+
+# --------------------------------------------------------------------------
+# HLO collective audit (used by the dry-run roofline)
+# --------------------------------------------------------------------------
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([0-9,]*)\]")
+
+_COLLECTIVE_OPS = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_REPLICA_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9, ]*)\}")
+# e.g. replica_groups=[16,16]<=[256]T(1,0) (iota format)
+_IOTA_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    nb = _DTYPE_BYTES[dtype]
+    if not dims:
+        return nb
+    n = 1
+    for tok in dims.split(","):
+        tok = tok.strip()
+        if tok:
+            n *= int(tok)
+    return n * nb
+
+
+def _group_size(line: str) -> int:
+    m = _REPLICA_GROUPS_RE.search(line)
+    if m:
+        toks = [t for t in m.group(1).split(",") if t.strip()]
+        return max(1, len(toks))
+    m = _IOTA_GROUPS_RE.search(line)
+    if m:
+        # replica_groups=[num_groups, group_size]<=[total]
+        return max(1, int(m.group(2)))
+    return 1
+
+
+@dataclasses.dataclass
+class CollectiveAudit:
+    bytes_by_op: Dict[str, int]
+    count_by_op: Dict[str, int]
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_op.values())
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> CollectiveAudit:
+    """Sum payload bytes of collective ops in an HLO module text.
+
+    Methodology (documented for the roofline):
+      * all-reduce / all-to-all / collective-permute: result bytes
+        (operand and result payloads coincide).
+      * all-gather: result bytes (the fully-gathered tensor ~= bytes that
+        cross links per participating device, ring all-gather moves
+        (k-1)/k of it — we charge the full tensor, slightly conservative).
+      * reduce-scatter: result bytes x group size (operand payload).
+      * async pairs: the ``-start`` op is counted, the ``-done`` is skipped.
+    """
+    bytes_by_op: Dict[str, int] = {}
+    count_by_op: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        if "=" not in stripped:
+            continue
+        rhs = stripped.split("=", 1)[1]
+        opname = None
+        for op in _COLLECTIVE_OPS:
+            # match `op(`, `op-start(` but not `op-done(`
+            if re.search(rf"\b{op}(-start)?\(", rhs):
+                opname = op
+                break
+        if opname is None:
+            continue
+        # result shapes: everything before the op call on the rhs
+        head = rhs.split(opname)[0]
+        shapes = _SHAPE_RE.findall(head)
+        if not shapes:
+            continue
+        nbytes = sum(_shape_bytes(dt, dims) for dt, dims in shapes)
+        if opname == "reduce-scatter":
+            nbytes *= _group_size(stripped)
+        bytes_by_op[opname] = bytes_by_op.get(opname, 0) + nbytes
+        count_by_op[opname] = count_by_op.get(opname, 0) + 1
+    return CollectiveAudit(bytes_by_op, count_by_op)

@@ -1,0 +1,217 @@
+"""The paper's hard instances (Section 5).
+
+Theorem 2/3 instance — Nesterov's "chain" quadratic adapted by the paper:
+
+    f(w) = lam (kappa-1)/4 * [ 1/2 w^T A w  - <e_1, w> ]  +  lam/2 |w|^2
+
+with A tridiagonal (2 on the diagonal, -1 off-diagonal, and the bottom-right
+entry (sqrt(kappa)+3)/(sqrt(kappa)+1)).  Its minimizer is w*(i) = q^i with
+q = (sqrt(kappa)-1)/(sqrt(kappa)+1), and information can propagate at most
+ONE coordinate per communication round (Lemma 5) — which yields the
+Omega(sqrt(kappa) log(lam |w*| / eps)) round bound.
+
+Theorem 4 instance — the separable block-diagonal version: machine j owns
+phi_j, a sum of n/m independent copies of the chain function on its own
+coordinates; incremental algorithms touch one component per step.
+
+Everything here is constructive and exact: we expose f, grad f, the
+tridiagonal Hessian (as a LinearOperator-ish callable and as an ERM data
+matrix), the closed-form w*, and the closed-form error floor of the proof,
+so tests/benchmarks can compare measured algorithm progress against the
+theory to machine precision.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+def chain_matrix(d: int, kappa: float) -> np.ndarray:
+    """The tridiagonal matrix A of Eq. (7) (dense, for reference/tests)."""
+    A = np.zeros((d, d))
+    idx = np.arange(d)
+    A[idx, idx] = 2.0
+    A[idx[:-1], idx[:-1] + 1] = -1.0
+    A[idx[:-1] + 1, idx[:-1]] = -1.0
+    rk = np.sqrt(kappa)
+    A[d - 1, d - 1] = (rk + 3.0) / (rk + 1.0)
+    return A
+
+
+def tridiag_bands(d: int, kappa: float) -> Tuple[np.ndarray, np.ndarray]:
+    """(diag, offdiag) bands of the chain matrix — O(d) storage."""
+    diag = np.full((d,), 2.0)
+    rk = np.sqrt(kappa)
+    diag[d - 1] = (rk + 3.0) / (rk + 1.0)
+    off = np.full((d - 1,), -1.0)
+    return diag, off
+
+
+def tridiag_matvec(diag, off, v):
+    """Banded tridiagonal matvec in pure jnp (oracle for the Pallas kernel)."""
+    out = diag * v
+    out = out.at[:-1].add(off * v[1:])
+    out = out.at[1:].add(off * v[:-1])
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class ChainInstance:
+    """The Theorem-2 hard function, with exact minimizer and error floor."""
+
+    d: int
+    kappa: float
+    lam: float = 1.0
+
+    @property
+    def L(self) -> float:
+        return self.kappa * self.lam
+
+    @property
+    def q(self) -> float:
+        rk = float(np.sqrt(self.kappa))
+        return (rk - 1.0) / (rk + 1.0)
+
+    # ---- function oracles ----------------------------------------------
+    def _bands(self):
+        diag, off = tridiag_bands(self.d, self.kappa)
+        return jnp.asarray(diag), jnp.asarray(off)
+
+    def value(self, w) -> jnp.ndarray:
+        diag, off = self._bands()
+        aw = tridiag_matvec(diag, off, w)
+        c = self.lam * (self.kappa - 1.0) / 4.0
+        return c * (0.5 * jnp.vdot(w, aw) - w[0]) + 0.5 * self.lam * jnp.vdot(w, w)
+
+    def gradient(self, w) -> jnp.ndarray:
+        diag, off = self._bands()
+        aw = tridiag_matvec(diag, off, w)
+        c = self.lam * (self.kappa - 1.0) / 4.0
+        e1 = jnp.zeros_like(w).at[0].set(1.0)
+        return c * (aw - e1) + self.lam * w
+
+    def hvp(self, v) -> jnp.ndarray:
+        diag, off = self._bands()
+        c = self.lam * (self.kappa - 1.0) / 4.0
+        return c * tridiag_matvec(diag, off, v) + self.lam * v
+
+    # ---- exact solution & proof quantities ------------------------------
+    def w_star(self) -> jnp.ndarray:
+        """w*(i) = q^i  (1-based i; exact up to the boundary-condition
+        truncation the paper itself uses, exponentially small in d)."""
+        i = jnp.arange(1, self.d + 1, dtype=jnp.float64
+                       if jax.config.read("jax_enable_x64") else jnp.float32)
+        return self.q ** i
+
+    def f_star(self) -> jnp.ndarray:
+        return self.value(self.w_star())
+
+    def error_floor(self, k: int) -> float:
+        """Paper's floor:
+        f(w^(k)) - f* >= lam/(sqrt(kappa)+1) * exp(-4k/(sqrt(kappa)+1)) * |w*|^2,
+        valid while k <= d (Corollary 6 regime)."""
+        rk = float(np.sqrt(self.kappa))
+        wstar = self.w_star()
+        nrm2 = float(jnp.vdot(wstar, wstar))
+        return self.lam / (rk + 1.0) * float(np.exp(-4.0 * k / (rk + 1.0))) * nrm2
+
+    def lower_bound_rounds(self, eps: float) -> float:
+        """Rounds needed per Theorem 2's final display:
+        k >= (sqrt(kappa)-1)/4 * log( lam |w*|^2 / ((sqrt(kappa)+1) eps) )."""
+        rk = float(np.sqrt(self.kappa))
+        wstar = self.w_star()
+        nrm2 = float(jnp.vdot(wstar, wstar))
+        arg = self.lam * nrm2 / ((rk + 1.0) * eps)
+        if arg <= 1.0:
+            return 0.0
+        return (rk - 1.0) / 4.0 * float(np.log(arg))
+
+    # ---- ERM embedding ---------------------------------------------------
+    def as_erm_data(self) -> Tuple[np.ndarray, np.ndarray, float]:
+        """Express f as a ridge-regularized least-squares ERM:
+            f(w) = 1/2 |B w|^2 - c e_1^T w + lam/2 |w|^2 + const
+        with B = sqrt(c) A^{1/2} (dense; for modest d used in experiments).
+        Returns (B, y, lam) such that  1/n sum 0.5 (B w - y)_i^2 * n + ...
+        matches f up to an additive constant. Used to drive the generic
+        feature-partitioned ERM algorithms on the hard instance."""
+        c = self.lam * (self.kappa - 1.0) / 4.0
+        A = chain_matrix(self.d, self.kappa)
+        evals, evecs = np.linalg.eigh(A)
+        evals = np.clip(evals, 0.0, None)
+        B = (evecs * np.sqrt(np.clip(c * evals, 0, None))) @ evecs.T  # (d,d)
+        # 1/2 w^T (cA) w - c e1^T w  =  1/2 |B w - y|^2 - 1/2 |y|^2
+        # provided  B^T y = c e1  (B is symmetric PSD here, so solve B y = c e1).
+        rhs = np.zeros(self.d)
+        rhs[0] = c
+        y = np.linalg.lstsq(B.T, rhs, rcond=None)[0]
+        return B, y, self.lam
+
+
+@dataclasses.dataclass(frozen=True)
+class SeparableInstance:
+    """Theorem-4 hard function: f(w) = (1/m) sum_j phi_j(w_j), each phi_j a
+    sum of n/m independent chain components on machine j's coordinates."""
+
+    m: int
+    n: int                      # total number of components (paper's n)
+    d_per_component: int
+    kappa: float
+    lam: float = 1.0
+
+    def __post_init__(self):
+        if self.n % self.m != 0:
+            raise ValueError("n must be divisible by m")
+
+    @property
+    def components_per_machine(self) -> int:
+        return self.n // self.m
+
+    @property
+    def d(self) -> int:
+        return self.m * self.components_per_machine * self.d_per_component
+
+    def component(self) -> ChainInstance:
+        return ChainInstance(d=self.d_per_component, kappa=self.kappa,
+                             lam=self.lam)
+
+    def w_star(self) -> jnp.ndarray:
+        blk = self.component().w_star()
+        return jnp.tile(blk, self.m * self.components_per_machine)
+
+    def value(self, w) -> jnp.ndarray:
+        comp = self.component()
+        blocks = w.reshape(self.m * self.components_per_machine,
+                           self.d_per_component)
+        vals = jax.vmap(comp.value)(blocks)
+        return jnp.sum(vals) / self.m
+
+    def gradient(self, w) -> jnp.ndarray:
+        comp = self.component()
+        blocks = w.reshape(self.m * self.components_per_machine,
+                           self.d_per_component)
+        grads = jax.vmap(comp.gradient)(blocks)
+        return grads.reshape(-1) / self.m
+
+    def lower_bound_rounds(self, eps: float) -> float:
+        """Theorem 4:  Omega((sqrt(n kappa) + n) log(lam |w*| / eps))."""
+        wstar = self.w_star()
+        nrm2 = float(jnp.vdot(wstar, wstar))
+        arg = self.lam * nrm2 / (2.0 * eps)
+        if arg <= 1.0:
+            return 0.0
+        rk = float(np.sqrt(self.kappa))
+        # k >= (n (rk+1)^2 - 4 rk) / (4 rk) * log(...) ~ (n sqrt(kappa) + n)/4
+        denom = 4.0 * rk
+        coef = (self.n * (rk + 1.0) ** 2 - 4.0 * rk) / denom
+        return max(0.0, coef * float(np.log(arg)) / 2.0)
+
+
+def smooth_convex_lower_bound_rounds(L: float, norm_w_star: float,
+                                     eps: float) -> float:
+    """Theorem 3:  Omega( sqrt(L/eps) |w*| )  (constant from Nesterov 2.1.7:
+    k >= sqrt( 3 L |w*|^2 / (32 eps) ) - 1 )."""
+    return max(0.0, float(np.sqrt(3.0 * L * norm_w_star ** 2 / (32.0 * eps))) - 1.0)

@@ -1,0 +1,202 @@
+"""Distributed runtime: one algorithm codebase, two execution backends.
+
+Algorithms (``core.algorithms``) are written against the ``DistERM``
+interface, which exposes exactly the oracles the paper's Definition 1
+allows, with every cross-machine interaction going through a metered
+communicator:
+
+    response(w)        z = A w            — ONE ReduceAll of an R^n vector
+    pgrad(w, z)        f'_j(w) per block  — local
+    phvp(v, z, av)     (f''(w) v)^[j]     — local given reduced Av
+    dot(u, v)          <u, v> global      — ONE ReduceAll of a scalar
+    end_round()        round boundary
+
+Backends:
+  * ``LocalDistERM`` — m simulated machines; per-machine blocks stacked on a
+    leading axis (m, ...). Reference semantics, used by tests/benchmarks.
+  * ``ShardedDistERM`` — identical math with machine j = slice j of a mesh
+    axis; constructed *inside* a ``shard_map`` body. ``run_sharded`` places
+    column-sharded data on a real mesh and drives any algorithm through it.
+
+The two backends are required to produce bit-comparable iterates (up to
+reduction order), which ``tests/test_runtime_parity.py`` asserts.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Optional, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .comm import CommLedger, LocalCommunicator, ShardMapCommunicator
+from .erm import ERMProblem, GLMLoss
+from .partition import FeaturePartition, even_partition
+
+
+class LocalDistERM:
+    """m machines simulated on host; blocks stacked: A (m,n,dmax), w (m,dmax)."""
+
+    def __init__(self, prob: ERMProblem, part: FeaturePartition,
+                 ledger: Optional[CommLedger] = None):
+        self.prob = prob
+        self.part = part
+        self.comm = LocalCommunicator(part.m, ledger)
+        self.A_stk = part.pad_blocks(part.split_columns(prob.A))  # (m,n,dmax)
+        self.mask = part.mask()                                   # (m,dmax)
+        self.n = prob.n
+        self.lam = prob.lam
+        self.loss: GLMLoss = prob.loss
+        self.y = prob.y
+
+    # ---- paper oracles --------------------------------------------------
+    def zeros_like_w(self):
+        return jnp.zeros((self.part.m, self.part.d_max))
+
+    def response(self, w_stk, tag="z=Aw"):
+        """z = sum_j A_j w_j : one ReduceAll of an R^n vector."""
+        local = jnp.einsum("mnd,md->mn", self.A_stk, w_stk)
+        return self.comm.reduce_all(local, tag=tag)
+
+    def pgrad(self, w_stk, z):
+        """f'_j(w) for every j, stacked — local compute only."""
+        lgrad = self.loss.grad(z, self.y)                     # (n,)
+        g = jnp.einsum("mnd,n->md", self.A_stk, lgrad) / self.n
+        return (g + self.lam * w_stk) * self.mask
+
+    def phvp(self, v_stk, z, av):
+        """(f''(w) v)^[j] stacked, given reduced z=Aw and av=Av — local."""
+        h = self.loss.hess(z, self.y)
+        out = jnp.einsum("mnd,n->md", self.A_stk, h * av) / self.n
+        return (out + self.lam * v_stk) * self.mask
+
+    def dot(self, u_stk, v_stk, tag="dot"):
+        local = jnp.sum(u_stk * v_stk, axis=(-2, -1)) \
+            if u_stk.ndim > 2 else jnp.einsum("md,md->m", u_stk, v_stk)
+        return self.comm.reduce_scalar(local, tag=tag)
+
+    def value(self, w_stk, z):
+        """f(w) given reduced z (needs one scalar reduce for |w|^2)."""
+        sq = self.dot(w_stk, w_stk, tag="|w|^2")
+        return jnp.sum(self.loss.value(z, self.y)) / self.n + 0.5 * self.lam * sq
+
+    def end_round(self):
+        self.comm.end_round()
+
+    # ---- incremental-family oracles (Definition 3.2) ---------------------
+    def sample_row(self, i: int):
+        """Machine-local blocks of data row i: a_i^[j], stacked (m, dmax)."""
+        return self.A_stk[:, i, :]
+
+    def dot_row(self, a_i, w_stk, tag="a_i.w"):
+        """Scalar a_i . w — one ReduceAll of a scalar."""
+        local = jnp.einsum("md,md->m", a_i, w_stk)
+        return self.comm.reduce_scalar(local, tag=tag)
+
+    def row_grad(self, a_i, zi, i):
+        """Component gradient blocks: a_i^[j] * l'(z_i, y_i) (no 1/n)."""
+        return a_i * self.loss.grad(zi, self.y[i])
+
+    # ---- conversions ----------------------------------------------------
+    def gather_w(self, w_stk) -> jnp.ndarray:
+        return self.part.concat_blocks(self.part.unpad_blocks(w_stk))
+
+    def scatter_w(self, w) -> jnp.ndarray:
+        return self.part.pad_blocks(self.part.split_vector(w))
+
+
+class ShardedDistERM:
+    """Same oracle surface inside a shard_map body.
+
+    Local arrays: A_loc (n, d_loc), w_loc (d_loc,). All machines see the
+    same y. Construct inside the shard_map body with the mesh axis name.
+    """
+
+    def __init__(self, A_loc, y, loss: GLMLoss, lam: float, n: int,
+                 axis: str = "model", ledger: Optional[CommLedger] = None):
+        self.A_loc = A_loc
+        self.y = y
+        self.loss = loss
+        self.lam = lam
+        self.n = n
+        self.comm = ShardMapCommunicator(axis, ledger)
+
+    def zeros_like_w(self):
+        return jnp.zeros((self.A_loc.shape[1],))
+
+    def response(self, w_loc, tag="z=Aw"):
+        return self.comm.reduce_all(self.A_loc @ w_loc, tag=tag)
+
+    def pgrad(self, w_loc, z):
+        return self.A_loc.T @ self.loss.grad(z, self.y) / self.n \
+            + self.lam * w_loc
+
+    def phvp(self, v_loc, z, av):
+        h = self.loss.hess(z, self.y)
+        return self.A_loc.T @ (h * av) / self.n + self.lam * v_loc
+
+    def dot(self, u_loc, v_loc, tag="dot"):
+        return self.comm.reduce_scalar(jnp.vdot(u_loc, v_loc), tag=tag)
+
+    def value(self, w_loc, z):
+        sq = self.dot(w_loc, w_loc, tag="|w|^2")
+        return jnp.sum(self.loss.value(z, self.y)) / self.n + 0.5 * self.lam * sq
+
+    def end_round(self):
+        self.comm.end_round()
+
+    # ---- incremental-family oracles --------------------------------------
+    def sample_row(self, i: int):
+        return self.A_loc[i, :]
+
+    def dot_row(self, a_i_loc, w_loc, tag="a_i.w"):
+        return self.comm.reduce_scalar(jnp.vdot(a_i_loc, w_loc), tag=tag)
+
+    def row_grad(self, a_i_loc, zi, i):
+        return a_i_loc * self.loss.grad(zi, self.y[i])
+
+
+# --------------------------------------------------------------------------
+# shard_map driver
+# --------------------------------------------------------------------------
+
+def run_sharded(prob: ERMProblem, algorithm_body: Callable, rounds: int,
+                mesh: Optional[Mesh] = None, axis: str = "model",
+                ledger: Optional[CommLedger] = None):
+    """Run ``algorithm_body(dist, rounds) -> w_loc`` under shard_map with the
+    data matrix column-sharded over ``axis``.
+
+    ``algorithm_body`` receives a ``ShardedDistERM`` and a static round
+    count and must return the machine-local block of the final iterate.
+    Returns the assembled global w (d,) and the per-round ledger (counts are
+    trace-time: ops per traced call).
+    """
+    from jax.experimental.shard_map import shard_map  # local import: jax>=0.4
+
+    if mesh is None:
+        devs = np.array(jax.devices())
+        mesh = Mesh(devs, (axis,))
+    m = mesh.shape[axis]
+    d = prob.d
+    if d % m:
+        pad = m - d % m
+        A = jnp.pad(prob.A, ((0, 0), (0, pad)))
+    else:
+        pad = 0
+        A = prob.A
+    led = ledger if ledger is not None else CommLedger()
+
+    def body(A_loc, y):
+        dist = ShardedDistERM(A_loc, y, prob.loss, prob.lam, prob.n,
+                              axis=axis, ledger=led)
+        return algorithm_body(dist, rounds)
+
+    fn = shard_map(body, mesh=mesh,
+                   in_specs=(P(None, axis), P(None)),
+                   out_specs=P(axis))
+    w = jax.jit(fn)(A, prob.y)
+    return (w[:d] if pad else w), led

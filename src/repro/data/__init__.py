@@ -1,0 +1,5 @@
+from .pipeline import (TokenDataConfig, synthetic_lm_batches,
+                       synthetic_erm_shards, frame_stub, patch_stub)
+
+__all__ = ["TokenDataConfig", "synthetic_lm_batches",
+           "synthetic_erm_shards", "frame_stub", "patch_stub"]

@@ -1,0 +1,67 @@
+"""Data pipeline: deterministic synthetic streams for LM training, the
+modality stubs (audio frames / vision patches per the carve-out), and
+column-sharded ERM data placement for the core algorithms.
+
+The LM stream is a reproducible Zipf-ish token source with a simple
+Markov structure so the loss actually decreases during the examples'
+short training runs (pure-uniform tokens would pin the loss at log V).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class TokenDataConfig:
+    vocab: int
+    seq_len: int
+    batch: int
+    seed: int = 0
+
+
+def synthetic_lm_batches(cfg: TokenDataConfig) -> Iterator[dict]:
+    """Infinite iterator of {tokens, labels} with learnable bigram structure."""
+    rng = np.random.RandomState(cfg.seed)
+    v = cfg.vocab
+    # sparse deterministic bigram table + noise
+    succ = rng.randint(0, v, size=(v,))
+    while True:
+        first = rng.randint(0, v, size=(cfg.batch, 1))
+        seq = [first]
+        cur = first
+        for _ in range(cfg.seq_len):
+            nxt = np.where(rng.rand(cfg.batch, 1) < 0.8, succ[cur],
+                           rng.randint(0, v, size=(cfg.batch, 1)))
+            seq.append(nxt)
+            cur = nxt
+        arr = np.concatenate(seq, axis=1)
+        yield {"tokens": jnp.asarray(arr[:, :-1], jnp.int32),
+               "labels": jnp.asarray(arr[:, 1:], jnp.int32)}
+
+
+def frame_stub(batch: int, n_frames: int, d_model: int, seed: int = 0,
+               dtype=jnp.bfloat16):
+    """Precomputed audio-frame embeddings (mel+conv frontend carve-out)."""
+    k = jax.random.PRNGKey(seed)
+    return jax.random.normal(k, (batch, n_frames, d_model)).astype(dtype)
+
+
+def patch_stub(batch: int, n_patches: int, d_model: int, seed: int = 0,
+               dtype=jnp.bfloat16):
+    """Precomputed image-patch embeddings (SigLIP frontend carve-out)."""
+    k = jax.random.PRNGKey(seed)
+    return jax.random.normal(k, (batch, n_patches, d_model)).astype(dtype)
+
+
+def synthetic_erm_shards(n: int, d: int, m: int, seed: int = 0):
+    """Column-sharded synthetic ERM data: returns (shards list, full A, y)."""
+    from ..core.erm import make_random_erm
+    from ..core.partition import even_partition
+    prob = make_random_erm(n=n, d=d, seed=seed)
+    part = even_partition(d, m)
+    return part.split_columns(prob.A), prob

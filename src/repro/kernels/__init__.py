@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+feature_matvec / feature_rmatvec : the ERM hot loop of every algorithm in
+    the paper's family (A_j w_j and A_j^T r per round, per machine).
+tridiag_matvec : hard-instance Hessian apply (banded, one-VMEM-pass).
+moe_combine    : top-k expert-output combine (beyond-paper hot spot).
+
+Import surface: ``from repro.kernels import ops`` (jit'd wrappers with a
+``use_kernel=False`` escape hatch to the pure-jnp oracles in ``ref.py``).
+Kernels are validated on CPU with interpret=True (tests/test_kernels.py);
+TPU is the compile target.
+"""
+from . import ops, ref
+
+__all__ = ["ops", "ref"]

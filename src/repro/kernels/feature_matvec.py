@@ -1,0 +1,140 @@
+"""Pallas TPU kernels for the feature-partitioned ERM hot loop.
+
+Every algorithm in the paper's family F^{lam,L} spends its FLOPs in two
+GEMVs per round on each machine:
+
+    z_j = A_j w_j        (n x d_j) @ (d_j)   -> the ReduceAll summand
+    g_j = A_j^T r        (d_j x n) @ (n)     -> the partial-gradient term
+
+On TPU these are tall-skinny matmuls; the kernels below tile them into
+MXU-aligned (multiples of 128) VMEM blocks with an accumulation grid.
+The contraction dimension is the innermost grid axis, so each output
+block stays resident in VMEM while partial products accumulate into it
+(revisiting semantics), and HBM traffic is one pass over A_j.
+
+Batched right-hand sides are supported (w: (d_j, B), r: (n, B)) because
+DISCO-F's CG and the benchmark harness evaluate multiple vectors at once;
+B=1 recovers the GEMV.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+# Block sizes: MXU-aligned. A-block of 512x512 f32 = 1 MiB in VMEM; with
+# double buffering this uses ~2-3 MiB of the ~16 MiB/core budget.
+BLOCK_N = 512
+BLOCK_D = 512
+BLOCK_B = 128
+
+
+def _matvec_kernel(a_ref, w_ref, o_ref):
+    """Grid (n_blocks, d_blocks): o[i] += A[i, j] @ w[j]; j innermost."""
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(a_ref[...], w_ref[...],
+                          preferred_element_type=o_ref.dtype)
+
+
+def feature_matvec(A_j, w_j, *, block_n: int = BLOCK_N,
+                   block_d: int = BLOCK_D, interpret: bool | None = None):
+    """z_j = A_j @ w_j.  A_j: (n, d_j); w_j: (d_j,) or (d_j, B)."""
+    squeeze = w_j.ndim == 1
+    if squeeze:
+        w_j = w_j[:, None]
+    n, dj = A_j.shape
+    b = w_j.shape[1]
+    bn, bd = min(block_n, _rup(n)), min(block_d, _rup(dj))
+    bb = min(BLOCK_B, _rup(b))
+    A_p = _pad2(A_j, bn, bd)
+    w_p = _pad2(w_j, bd, bb)
+    grid = (A_p.shape[0] // bn, A_p.shape[1] // bd)
+    out = pl.pallas_call(
+        _matvec_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, bd), lambda i, j: (i, j)),
+            pl.BlockSpec((bd, w_p.shape[1]), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn, w_p.shape[1]), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((A_p.shape[0], w_p.shape[1]),
+                                       _acc_dtype(A_j.dtype)),
+        interpret=_interp(interpret),
+    )(A_p, w_p)
+    out = out[:n, :b].astype(A_j.dtype)
+    return out[:, 0] if squeeze else out
+
+
+def _rmatvec_kernel(a_ref, r_ref, o_ref):
+    """Grid (d_blocks, n_blocks): o[j] += A[i, j]^T @ r[i]; i innermost."""
+    i = pl.program_id(1)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(a_ref[...].T, r_ref[...],
+                          preferred_element_type=o_ref.dtype)
+
+
+def feature_rmatvec(A_j, r, *, block_n: int = BLOCK_N,
+                    block_d: int = BLOCK_D, interpret: bool | None = None):
+    """g_j = A_j^T @ r.  A_j: (n, d_j); r: (n,) or (n, B)."""
+    squeeze = r.ndim == 1
+    if squeeze:
+        r = r[:, None]
+    n, dj = A_j.shape
+    b = r.shape[1]
+    bn, bd = min(block_n, _rup(n)), min(block_d, _rup(dj))
+    bb = min(BLOCK_B, _rup(b))
+    A_p = _pad2(A_j, bn, bd)
+    r_p = _pad2(r, bn, bb)
+    grid = (A_p.shape[1] // bd, A_p.shape[0] // bn)
+    out = pl.pallas_call(
+        _rmatvec_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, bd), lambda j, i: (i, j)),
+            pl.BlockSpec((bn, r_p.shape[1]), lambda j, i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bd, r_p.shape[1]), lambda j, i: (j, 0)),
+        out_shape=jax.ShapeDtypeStruct((A_p.shape[1], r_p.shape[1]),
+                                       _acc_dtype(A_j.dtype)),
+        interpret=_interp(interpret),
+    )(A_p, r_p)
+    out = out[:dj, :b].astype(A_j.dtype)
+    return out[:, 0] if squeeze else out
+
+
+# ---- helpers ---------------------------------------------------------------
+
+def _rup(x: int, to: int = 128) -> int:
+    return max(to, (x + to - 1) // to * to)
+
+
+def _pad2(x, r0: int, r1: int):
+    p0 = (-x.shape[0]) % r0
+    p1 = (-x.shape[1]) % r1
+    if p0 or p1:
+        x = jnp.pad(x, ((0, p0), (0, p1)))
+    return x
+
+
+def _acc_dtype(dt):
+    return jnp.float32 if dt in (jnp.bfloat16, jnp.float16,
+                                 jnp.dtype("bfloat16"),
+                                 jnp.dtype("float16")) else dt
+
+
+def _interp(flag):
+    if flag is not None:
+        return flag
+    return jax.default_backend() != "tpu"

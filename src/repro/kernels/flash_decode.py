@@ -1,0 +1,96 @@
+"""Pallas TPU kernel: flash-decode — one-token attention against a long
+KV cache with online softmax, streaming KV blocks through VMEM.
+
+This is the serving hot spot the roofline exposed (decode_32k/long_500k
+are KV-bandwidth-bound): the naive path materializes (B, Hk, G, T) logits
+in HBM; this kernel keeps a (G, BLOCK_T) tile in VMEM, carries the
+running (max, denom, weighted-sum) online-softmax state in scratch, and
+writes only the (G, Dh) output — one HBM pass over K/V, nothing else.
+
+Layout: grid (B, Hk, T/BLOCK_T) with the KV-block axis innermost, so the
+scratch state lives across the streaming axis. Masking (causal validity,
+ring-buffer holes, sliding windows) is supplied by the caller as an
+additive f32 bias (B, T) — the kernel itself is mask-agnostic.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+F32 = jnp.float32
+BLOCK_T = 512
+
+
+def _flash_decode_kernel(q_ref, k_ref, v_ref, b_ref, o_ref,
+                         m_ref, l_ref, acc_ref):
+    t = pl.program_id(2)
+
+    @pl.when(t == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -1e30)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(F32)                   # (G, Dh)
+    k = k_ref[0, :, 0, :].astype(F32)             # (BT, Dh)
+    v = v_ref[0, :, 0, :].astype(F32)             # (BT, Dh)
+    bias = b_ref[0].astype(F32)                   # (BT,)
+    scale = q.shape[-1] ** -0.5
+
+    s = jnp.dot(q, k.T, preferred_element_type=F32) * scale  # (G, BT)
+    s = s + bias[None, :]
+
+    m_prev = m_ref[...]                           # (G, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    corr = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)                        # (G, BT)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + \
+        jnp.dot(p, v, preferred_element_type=F32)
+    m_ref[...] = m_new
+
+    @pl.when(t == pl.num_programs(2) - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_decode(q, k, v, bias, *, block_t: int = BLOCK_T,
+                 interpret: bool | None = None):
+    """q: (B, Hk, G, Dh); k/v: (B, T, Hk, Dh); bias: (B, T) additive f32.
+    Returns (B, Hk, G, Dh)."""
+    b, hk, g, dh = q.shape
+    t = k.shape[1]
+    bt = min(block_t, t)
+    if t % bt:
+        pad = bt - t % bt
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        bias = jnp.pad(bias, ((0, 0), (0, pad)),
+                       constant_values=-1e30)
+        t = t + pad
+    grid = (b, hk, t // bt)
+    return pl.pallas_call(
+        _flash_decode_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, g, dh), lambda bi, hi, ti: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, bt, 1, dh), lambda bi, hi, ti: (bi, ti, hi, 0)),
+            pl.BlockSpec((1, bt, 1, dh), lambda bi, hi, ti: (bi, ti, hi, 0)),
+            pl.BlockSpec((1, bt), lambda bi, hi, ti: (bi, ti)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, dh), lambda bi, hi, ti:
+                               (bi, hi, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hk, g, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), F32),   # running max
+            pltpu.VMEM((g, 1), F32),   # running denom
+            pltpu.VMEM((g, dh), F32),  # running weighted sum
+        ],
+        interpret=(jax.default_backend() != "tpu" if interpret is None
+                   else interpret),
+    )(q, k, v, bias)

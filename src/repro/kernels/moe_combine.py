@@ -1,0 +1,54 @@
+"""Pallas TPU kernel: MoE top-k weighted combine (beyond-paper hot spot).
+
+After expert computation, each token's k expert outputs are combined with
+router weights:  y[t] = sum_k w[t,k] * x[t,k,:].  Done naively this is k
+separate HBM passes; the kernel fuses them into one pass with the token
+dimension tiled into VMEM blocks (k is small and unrolled).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_T = 256
+BLOCK_D = 512
+
+
+def _combine_kernel(x_ref, w_ref, o_ref):
+    x = x_ref[...]                 # (BT, k, BD)
+    w = w_ref[...]                 # (BT, k)
+    acc = jnp.zeros(o_ref.shape, o_ref.dtype)
+    for kk in range(x.shape[1]):   # k is a small static constant: unroll
+        acc += x[:, kk, :] * w[:, kk][:, None].astype(o_ref.dtype)
+    o_ref[...] = acc
+
+
+def moe_combine(expert_out, combine_w, *, block_t: int = BLOCK_T,
+                block_d: int = BLOCK_D, interpret: bool | None = None):
+    """expert_out: (T, k, D); combine_w: (T, k) -> (T, D)."""
+    t, k, d = expert_out.shape
+    bt = min(block_t, _rup(t, 8))
+    bd = min(block_d, _rup(d, 128))
+    pt, pd = (-t) % bt, (-d) % bd
+    x = jnp.pad(expert_out, ((0, pt), (0, 0), (0, pd)))
+    w = jnp.pad(combine_w, ((0, pt), (0, 0)))
+    grid = (x.shape[0] // bt, x.shape[2] // bd)
+    out = pl.pallas_call(
+        _combine_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, k, bd), lambda i, j: (i, 0, j)),
+            pl.BlockSpec((bt, k), lambda i, j: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bt, bd), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((x.shape[0], x.shape[2]),
+                                       expert_out.dtype),
+        interpret=(jax.default_backend() != "tpu" if interpret is None
+                   else interpret),
+    )(x, w)
+    return out[:t, :d]
+
+
+def _rup(x: int, to: int) -> int:
+    return max(to, (x + to - 1) // to * to)

@@ -1,0 +1,60 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+These are what the rest of the framework imports. Each op dispatches to
+the Pallas kernel (compiled for TPU; interpret-mode on CPU) and carries a
+``use_kernel=False`` escape hatch that routes to the pure-jnp oracle in
+``ref.py`` — the escape hatch is also how the big-model dry-run lowers on
+the 512-device CPU mesh (interpret-mode Pallas inside pjit would be
+pathologically slow to trace there).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from . import ref
+from .feature_matvec import feature_matvec as _fmv, feature_rmatvec as _frmv
+from .tridiag_matvec import tridiag_matvec as _tdmv
+from .moe_combine import moe_combine as _moec
+from .flash_decode import flash_decode as _fdec
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel",))
+def feature_matvec(A_j, w_j, use_kernel: bool = True):
+    """z_j = A_j @ w_j (the response summand)."""
+    if use_kernel:
+        return _fmv(A_j, w_j)
+    return ref.feature_matvec_ref(A_j, w_j)
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel",))
+def feature_rmatvec(A_j, r, use_kernel: bool = True):
+    """g_j = A_j^T @ r (the partial-gradient data term)."""
+    if use_kernel:
+        return _frmv(A_j, r)
+    return ref.feature_rmatvec_ref(A_j, r)
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel",))
+def tridiag_matvec(diag, off, v, use_kernel: bool = True):
+    """Banded tridiagonal matvec (hard-instance Hessian apply)."""
+    if use_kernel:
+        return _tdmv(diag, off, v)
+    return ref.tridiag_matvec_ref(diag, off, v)
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel",))
+def moe_combine(expert_out, combine_w, use_kernel: bool = True):
+    """Top-k weighted expert-output combine."""
+    if use_kernel:
+        return _moec(expert_out, combine_w)
+    return ref.moe_combine_ref(expert_out, combine_w)
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel",))
+def flash_decode(q, k, v, bias, use_kernel: bool = True):
+    """Streaming one-token attention against a long KV cache."""
+    if use_kernel:
+        return _fdec(q, k, v, bias)
+    return ref.flash_decode_ref(q, k, v, bias)

@@ -1,0 +1,58 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth the kernels are validated against
+(tests/test_kernels.py sweeps shapes/dtypes with assert_allclose).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def feature_matvec_ref(A_j, w_j):
+    """z_j = A_j w_j — machine j's summand of the response ReduceAll.
+
+    A_j: (n, d_j), w_j: (d_j,) -> (n,)
+    """
+    return (A_j @ w_j[:, None])[:, 0]
+
+
+def feature_rmatvec_ref(A_j, r):
+    """g_j = A_j^T r — the partial-gradient data term.
+
+    A_j: (n, d_j), r: (n,) -> (d_j,)
+    """
+    return (A_j.T @ r[:, None])[:, 0]
+
+
+def tridiag_matvec_ref(diag, off, v):
+    """Banded tridiagonal matvec: out = T v with T = tri(off, diag, off).
+
+    diag: (d,), off: (d-1,), v: (d,) -> (d,)
+    """
+    out = diag * v
+    out = out.at[:-1].add(off * v[1:])
+    out = out.at[1:].add(off * v[:-1])
+    return out
+
+
+def moe_combine_ref(expert_out, combine_w):
+    """Weighted combine of expert outputs back to token order.
+
+    expert_out: (T, k, D) per-token top-k expert outputs,
+    combine_w : (T, k) router weights -> (T, D)
+    """
+    return jnp.einsum("tkd,tk->td", expert_out, combine_w)
+
+
+def flash_decode_ref(q, k, v, bias):
+    """One-token attention vs a cached KV with additive mask bias.
+
+    q: (B, Hk, G, Dh); k/v: (B, T, Hk, Dh); bias: (B, T) -> (B, Hk, G, Dh)
+    """
+    import jax
+    s = jnp.einsum("bhgd,bthd->bhgt", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (q.shape[-1] ** -0.5)
+    s = s + bias[:, None, None, :]
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhgt,bthd->bhgd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)

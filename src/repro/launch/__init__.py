@@ -1,0 +1,2 @@
+"""Launch layer: production mesh, sharding spec derivation, train/serve
+steps, the multi-pod dry-run driver, and runnable drivers."""

@@ -1,0 +1,348 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) combo.
+
+MUST set the placeholder device count before ANY other import (jax locks
+the device count on first init).
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# ruff: noqa: E402
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import get as get_arch, canonical_ids
+from ..configs import shapes as S
+from ..core.comm import collective_bytes_from_hlo
+from ..models import transformer as T
+from ..models import encdec as E
+from ..models.common import make_rules, sharding_ctx
+from .mesh import make_production_mesh
+from . import sharding as shd
+from .steps import is_encdec, make_prefill_step, make_serve_step, \
+    make_train_step
+
+# TPU v5e hardware constants (per chip) — see DESIGN.md §Roofline.
+PEAK_FLOPS = 197e12       # bf16
+HBM_BW = 819e9            # bytes/s
+ICI_BW = 50e9             # bytes/s per link (conservative 1-link figure)
+
+
+def _mesh_devices(multi_pod: bool) -> int:
+    return 512 if multi_pod else 256
+
+
+def _abstract_state(cfg, shape_name: str, rules, mesh):
+    """(abstract args, in_shardings specs) for the step that this input
+    shape exercises."""
+    arch_mod = _MOD_CACHE[cfg.name]
+    key = jax.random.PRNGKey(0)
+    if is_encdec(cfg):
+        init = lambda k: E.init_params(k, cfg)
+    else:
+        init = lambda k: T.init_params(k, cfg)
+    params_abs, logical = shd.abstract_params(init, key)
+    pspecs = shd.sanitize_specs(params_abs,
+                                shd.param_specs(logical, rules), mesh)
+    shape = S.SHAPES[shape_name]
+    specs_in = arch_mod.input_specs(shape_name, cfg)
+    if shape.kind == "train":
+        opt_abs = shd.abstract_opt_state(params_abs)
+        ospecs = shd.opt_specs(pspecs)
+        bspecs = shd.sanitize_specs(specs_in,
+                                    shd.batch_specs(specs_in, rules), mesh)
+        return ((params_abs, opt_abs, specs_in),
+                (pspecs, ospecs, bspecs), "train")
+    if shape.kind == "prefill":
+        bspecs = shd.sanitize_specs(specs_in,
+                                    shd.batch_specs(specs_in, rules), mesh)
+        return ((params_abs, specs_in), (pspecs, bspecs), "prefill")
+    # decode
+    token = specs_in["token"]
+    cache = specs_in["cache"]
+    cspecs = shd.sanitize_specs(cache, shd.cache_specs(cache, rules), mesh)
+    tspec = shd.sanitize_specs({"t": token},
+                               shd.batch_specs({"t": token}, rules),
+                               mesh)["t"]
+    return ((params_abs, token, cache), (pspecs, tspec, cspecs), "decode")
+
+
+_MOD_CACHE: Dict[str, Any] = {}
+
+
+def _n_params(params_abs) -> int:
+    return sum(int(l.size) for l in jax.tree_util.tree_leaves(params_abs))
+
+
+def _active_params(cfg, n_total: int) -> int:
+    """Rough active-parameter count for MoE FLOPs (6*N_active*D)."""
+    if getattr(cfg, "moe", None) is None:
+        return n_total
+    moe_cfg = cfg.moe
+    # expert params counted at top_k/n_experts utilization
+    n_moe_layers = sum(1 for s in cfg.pattern if s.ffn == "moe") \
+        * cfg.repeats + sum(1 for s in cfg.remainder if s.ffn == "moe")
+    per_expert = 3 * moe_cfg.d_model * moe_cfg.d_ff \
+        if moe_cfg.activation == "swiglu" else 2 * moe_cfg.d_model * moe_cfg.d_ff
+    total_expert = n_moe_layers * moe_cfg.n_experts * per_expert
+    active_expert = n_moe_layers * moe_cfg.top_k * per_expert
+    return n_total - total_expert + active_expert
+
+
+def dryrun_one(arch_id: str, shape_name: str, *, multi_pod: bool = False,
+               rules_overrides: Optional[Dict[str, Any]] = None,
+               variant: str = "baseline",
+               cfg_overrides: Optional[Dict[str, Any]] = None,
+               microbatch: int = 1,
+               donate: bool = True) -> Dict[str, Any]:
+    """Lower + compile one combo on the production mesh; return the record.
+
+    ``cfg_overrides``: dataclasses.replace kwargs applied to the arch
+    config (e.g. {"remat": "dots", "cache_dtype": "f8"}); "moe.<field>"
+    keys address the nested MoE config. ``microbatch``: gradient-
+    accumulation factor for train shapes (peak-memory lever).
+    """
+    t0 = time.time()
+    mod = get_arch(arch_id)
+    if shape_name not in mod.SUPPORTED_SHAPES:
+        return {"arch": arch_id, "shape": shape_name, "skipped": True,
+                "reason": "unsupported shape (see DESIGN.md long_500k policy)"}
+    cfg = mod.full()
+    if cfg_overrides:
+        moe_kw = {k.split(".", 1)[1]: v for k, v in cfg_overrides.items()
+                  if k.startswith("moe.")}
+        plain = {k: v for k, v in cfg_overrides.items()
+                 if not k.startswith("moe.")}
+        if "cache_dtype" in plain and isinstance(plain["cache_dtype"], str):
+            plain["cache_dtype"] = {
+                "f8": jnp.float8_e4m3fn, "int8": jnp.int8,
+                "bf16": jnp.bfloat16}[plain["cache_dtype"]]
+        if moe_kw and getattr(cfg, "moe", None) is not None:
+            plain["moe"] = dataclasses.replace(cfg.moe, **moe_kw)
+        cfg = dataclasses.replace(cfg, **plain)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    if getattr(cfg, "moe", None) is not None and \
+            not (cfg_overrides and "moe.groups" in cfg_overrides):
+        # dispatch groups = data-parallel degree (routing stays shard-local)
+        data_deg = 1
+        for ax in ("pod", "data"):
+            if ax in mesh.axis_names:
+                data_deg *= mesh.shape[ax]
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, groups=data_deg))
+    _MOD_CACHE[cfg.name] = mod
+    fsdp = bool(getattr(mod, "FSDP", False))
+    rules = make_rules(fsdp=fsdp, extra=rules_overrides,
+                       mesh_axes=mesh.axis_names)
+
+    def compile_variant(cfg_v):
+        _MOD_CACHE[cfg_v.name] = mod
+        with mesh, sharding_ctx(mesh, rules):
+            args, in_specs, kind = _abstract_state(cfg_v, shape_name,
+                                                   rules, mesh)
+            in_sh = shd.shardings_from_specs(mesh, in_specs)
+            if kind == "train":
+                step = make_train_step(cfg_v, microbatch=microbatch)
+                dn = (0, 1) if donate else ()
+            elif kind == "prefill":
+                step = make_prefill_step(cfg_v)
+                dn = ()
+            else:
+                step = make_serve_step(cfg_v)
+                dn = (2,) if donate else ()
+            jitted = jax.jit(step, in_shardings=in_sh, donate_argnums=dn)
+            t_l0 = time.time()
+            lowered = jitted.lower(*args)
+            t_lower = time.time() - t_l0
+            t_c0 = time.time()
+            compiled = lowered.compile()
+            t_compile = time.time() - t_c0
+        cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0] if cost else {}
+        flops = float(cost.get("flops", 0.0))
+        nbytes = float(cost.get("bytes accessed", 0.0))
+        audit = collective_bytes_from_hlo(compiled.as_text())
+        return dict(args=args, kind=kind, compiled=compiled, flops=flops,
+                    bytes=nbytes, audit=audit, t_lower=t_lower,
+                    t_compile=t_compile)
+
+    # ---- two-point scan-cost correction ---------------------------------
+    # XLA cost_analysis counts a while-loop (lax.scan) body ONCE, not
+    # trip-count times. Compiling at scan_unroll=1 and scan_unroll=k gives
+    # body cost (B - A)/(k - 1); the linear extrapolation
+    #   corrected = A + (R - 1)/(k - 1) * (B - A)
+    # recovers the full-R cost exactly for flops / bytes / collectives.
+    R = cfg.repeats if not is_encdec(cfg) else cfg.n_enc_layers
+    k = next((kk for kk in (2, 3, 4, 5) if R % kk == 0), None)
+    va = compile_variant(cfg)
+    if R > 1 and k:
+        vb = compile_variant(dataclasses.replace(cfg, scan_unroll=k))
+        scale = (R - 1) / (k - 1)
+        flops = va["flops"] + scale * (vb["flops"] - va["flops"])
+        bytes_accessed = va["bytes"] + scale * (vb["bytes"] - va["bytes"])
+        coll_a, coll_b = va["audit"], vb["audit"]
+        collective_total = coll_a.total_bytes + scale * (
+            coll_b.total_bytes - coll_a.total_bytes)
+        collective_by_op = {
+            op: coll_a.bytes_by_op.get(op, 0) + scale * (
+                coll_b.bytes_by_op.get(op, 0) - coll_a.bytes_by_op.get(op, 0))
+            for op in set(coll_a.bytes_by_op) | set(coll_b.bytes_by_op)}
+        corrected = True
+    else:
+        flops, bytes_accessed = va["flops"], va["bytes"]
+        collective_total = va["audit"].total_bytes
+        collective_by_op = va["audit"].bytes_by_op
+        corrected = False
+    kind = va["kind"]
+    compiled = va["compiled"]
+    audit = va["audit"]
+    t_lower, t_compile = va["t_lower"], va["t_compile"]
+
+    # ---- analyses -------------------------------------------------------
+    try:
+        mem = compiled.memory_analysis()
+        mem_rec = {
+            "argument_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+            "output_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
+            "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
+            "generated_code_bytes": int(
+                getattr(mem, "generated_code_size_in_bytes", 0)),
+        }
+    except Exception as e:  # pragma: no cover
+        mem_rec = {"error": repr(e)}
+
+    n_chips = _mesh_devices(multi_pod)
+    # cost_analysis of the SPMD-partitioned module is PER-DEVICE
+    # (calibrated in tests/test_dryrun_costing.py): no /n_chips here.
+    compute_s = flops / PEAK_FLOPS
+    memory_s = bytes_accessed / HBM_BW
+    collective_s = collective_total / ICI_BW
+
+    params_abs = va["args"][0]
+    n_total = _n_params(params_abs)
+    n_active = _active_params(cfg, n_total)
+    shape = S.SHAPES[shape_name]
+    if kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        model_flops = 6 * n_active * tokens
+    elif kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        model_flops = 2 * n_active * tokens
+    else:
+        tokens = shape.global_batch
+        model_flops = 2 * n_active * tokens
+
+    record = {
+        "arch": arch_id, "shape": shape_name, "kind": kind,
+        "variant": variant,
+        "mesh": "2x16x16(pod,data,model)" if multi_pod
+                else "16x16(data,model)",
+        "n_chips": n_chips,
+        "fsdp": fsdp,
+        "rules_overrides": rules_overrides or {},
+        "n_params": n_total, "n_params_active": n_active,
+        "hlo_flops": flops, "hlo_bytes": bytes_accessed,
+        "scan_corrected": corrected,
+        "raw_uncorrected": {"flops": va["flops"], "bytes": va["bytes"],
+                            "collective_bytes": va["audit"].total_bytes},
+        "collective_bytes": collective_total,
+        "collective_by_op": collective_by_op,
+        "collective_counts": audit.count_by_op,
+        "memory": mem_rec,
+        "roofline": {
+            "compute_s": compute_s, "memory_s": memory_s,
+            "collective_s": collective_s,
+            "dominant": max(
+                [("compute", compute_s), ("memory", memory_s),
+                 ("collective", collective_s)], key=lambda kv: kv[1])[0],
+        },
+        "model_flops": model_flops,
+        # model_flops is global; hlo flops are per-device
+        "useful_flops_ratio": (model_flops / (flops * n_chips))
+                              if flops else None,
+        "t_lower_s": t_lower, "t_compile_s": t_compile,
+        "t_total_s": time.time() - t0,
+    }
+    return record
+
+
+def run_all(out_dir: str, multi_pod: bool, archs=None, shapes=None,
+            force: bool = False, variant: str = "baseline",
+            rules_overrides=None, cfg_overrides=None, microbatch: int = 1):
+    os.makedirs(out_dir, exist_ok=True)
+    archs = archs or canonical_ids()
+    shapes = shapes or list(S.SHAPES)
+    results = []
+    for arch in archs:
+        for shape in shapes:
+            tag = f"{arch}__{shape}__{'pod2' if multi_pod else 'pod1'}" \
+                  f"__{variant}"
+            path = os.path.join(out_dir, tag + ".json")
+            if os.path.exists(path) and not force:
+                print(f"[skip cached] {tag}")
+                continue
+            print(f"[dryrun] {tag} ...", flush=True)
+            try:
+                rec = dryrun_one(arch, shape, multi_pod=multi_pod,
+                                 variant=variant,
+                                 rules_overrides=rules_overrides,
+                                 cfg_overrides=cfg_overrides,
+                                 microbatch=microbatch)
+            except Exception:
+                rec = {"arch": arch, "shape": shape, "failed": True,
+                       "traceback": traceback.format_exc()}
+                print(rec["traceback"])
+            with open(path, "w") as f:
+                json.dump(rec, f, indent=2)
+            if rec.get("skipped"):
+                print(f"  -> skipped ({rec['reason']})")
+            elif rec.get("failed"):
+                print("  -> FAILED")
+            else:
+                r = rec["roofline"]
+                print(f"  -> ok: compute={r['compute_s']:.4f}s "
+                      f"memory={r['memory_s']:.4f}s "
+                      f"collective={r['collective_s']:.4f}s "
+                      f"dominant={r['dominant']} "
+                      f"(compile {rec['t_compile_s']:.0f}s)")
+            results.append(rec)
+    return results
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None,
+                    help="single arch id (default: all)")
+    ap.add_argument("--shape", default=None,
+                    help="single input shape (default: all)")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="reports/dryrun")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--rules", default=None,
+                    help="JSON dict of logical-axis rule overrides")
+    ap.add_argument("--cfg", default=None,
+                    help="JSON dict of config overrides (moe.* nested)")
+    ap.add_argument("--microbatch", type=int, default=1)
+    args = ap.parse_args()
+    overrides = json.loads(args.rules) if args.rules else None
+    cfg_over = json.loads(args.cfg) if args.cfg else None
+    archs = [args.arch] if args.arch else None
+    shapes = [args.shape] if args.shape else None
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    for mp in meshes:
+        run_all(args.out, mp, archs, shapes, force=args.force,
+                variant=args.variant, rules_overrides=overrides,
+                cfg_overrides=cfg_over, microbatch=args.microbatch)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""Production mesh builders.
+
+Functions, not module-level constants: importing this module must never
+touch jax device state (the dry-run sets XLA_FLAGS *before* first jax
+init; tests see the default single device).
+
+Production target: TPU v5e, 256 chips/pod.
+  single-pod : (16, 16)    -> ("data", "model")
+  multi-pod  : (2, 16, 16) -> ("pod", "data", "model")
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import numpy as np
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model_parallel: Optional[int] = None) -> Mesh:
+    """Small mesh over whatever devices exist (tests / examples)."""
+    devs = jax.devices()
+    n = len(devs)
+    mp = model_parallel or n
+    dp = n // mp
+    return Mesh(np.array(devs).reshape(dp, mp), ("data", "model"))
+
+
+def mesh_axis_names(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(mesh.axis_names)

@@ -1,0 +1,123 @@
+"""Sharding spec derivation: logical axes -> PartitionSpec trees.
+
+This is the launch-side companion of models/common.py. Everything the
+step functions take or return gets a spec here:
+
+  * params     — from the Boxed init tree's logical axes (via eval_shape,
+                 so no memory is allocated to learn the shapes)
+  * opt state  — m/v mirror the param specs; step is replicated
+  * batches    — tokens/labels sharded on batch; stub embeddings likewise
+  * caches     — by leaf name: k/v -> (batch, cache_seq, kv_heads, head_dim),
+                 mamba state -> (batch, heads, state, none), stacked layer
+                 dims replicated
+
+The rules table (models.common.make_rules) is the experiment surface: the
+baseline is the paper-faithful feature partition (model axis carries every
+feature dim), FSDP overlays add data-axis parameter sharding for the
+>=27B archs, and §Perf variants override individual entries.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..models.common import (Boxed, logical_to_spec, make_rules, unbox)
+
+
+def abstract_params(init_fn, *args):
+    """eval_shape an init function returning a Boxed tree ->
+    (abstract param tree (SDS leaves), logical tree)."""
+    boxed = jax.eval_shape(init_fn, *args)
+    return unbox(boxed)
+
+
+def param_specs(logical_tree, rules) -> Any:
+    return jax.tree_util.tree_map(
+        lambda names: logical_to_spec(names, rules), logical_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            n is None or isinstance(n, str) for n in x))
+
+
+def opt_specs(pspecs) -> Dict[str, Any]:
+    return {"m": pspecs, "v": pspecs, "step": P()}
+
+
+def abstract_opt_state(params_abstract) -> Dict[str, Any]:
+    f32 = lambda l: jax.ShapeDtypeStruct(l.shape, jnp.float32)
+    return {
+        "m": jax.tree_util.tree_map(f32, params_abstract),
+        "v": jax.tree_util.tree_map(f32, params_abstract),
+        "step": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def batch_specs(batch_abstract, rules) -> Any:
+    """tokens/labels (B,S) -> (batch, None); (B,S,D) stubs -> + embed."""
+    def one(path, leaf):
+        if leaf.ndim == 2:
+            return logical_to_spec(("batch", "seq"), rules)
+        if leaf.ndim == 3:
+            return logical_to_spec(("batch", "seq", "embed"), rules)
+        return P()
+    return jax.tree_util.tree_map_with_path(one, batch_abstract)
+
+
+_CACHE_LOGICAL = {
+    # name -> logical axes for the UNSTACKED leaf; a leading stacked
+    # "layers" dim is detected by ndim and prepended.
+    "k": ("batch", "cache_seq", "kv_heads", "head_dim"),
+    "v": ("batch", "cache_seq", "kv_heads", "head_dim"),
+    "cross_k": ("batch", "cache_seq", "kv_heads", "head_dim"),
+    "cross_v": ("batch", "cache_seq", "kv_heads", "head_dim"),
+    "state": ("batch", "heads", "state", "head_dim"),
+    "conv_x": ("batch", "conv", "heads"),
+    "conv_B": ("batch", "conv", "state"),
+    "conv_C": ("batch", "conv", "state"),
+    "index": (),
+}
+
+
+def cache_specs(cache_abstract, rules) -> Any:
+    def one(path, leaf):
+        name = None
+        for entry in reversed(path):
+            if isinstance(entry, jax.tree_util.DictKey):
+                name = str(entry.key)
+                break
+        logical = _CACHE_LOGICAL.get(name)
+        if logical is None:
+            return P()
+        extra = leaf.ndim - len(logical)
+        logical = ("layers",) * extra + logical
+        return logical_to_spec(logical, rules)
+    return jax.tree_util.tree_map_with_path(one, cache_abstract)
+
+
+def sanitize_specs(abstract_tree, specs_tree, mesh: Mesh) -> Any:
+    """Drop mesh-axis assignments whose size does not divide the dim.
+
+    E.g. kv_heads=8 cannot shard over model=16 -> that dim falls back to
+    replication (the faithful-but-wasteful baseline; §Perf explores
+    alternatives like head-dim sharding / kv padding). For tuple
+    assignments (("pod","data")) trailing axes are dropped one at a time
+    until the product divides.
+    """
+    from ..models.common import sanitize_spec_for_shape
+
+    def fix(leaf, spec):
+        if not isinstance(spec, P):
+            return spec
+        return sanitize_spec_for_shape(spec, leaf.shape, mesh)
+
+    return jax.tree_util.tree_map(fix, abstract_tree, specs_tree,
+                                  is_leaf=lambda x: isinstance(x, P))
+
+
+def shardings_from_specs(mesh: Mesh, specs) -> Any:
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,104 @@
+"""Step functions: train_step (AdamW) and serve_step (one-token decode).
+
+Built per-architecture: decoder-only LMs (transformer.py) and enc-dec
+(encdec.py) differ in their batch structure but expose the same step
+signatures to the launcher/dry-run:
+
+    train_step(params, opt_state, batch) -> (params, opt_state, metrics)
+    serve_step(params, token, cache)     -> (next_token, cache)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+from ..models import transformer as T
+from ..models import encdec as E
+from ..optim import OptConfig, adamw_update
+
+F32 = jnp.float32
+
+
+def is_encdec(cfg) -> bool:
+    return cfg.__class__.__name__ == "EncDecConfig"
+
+
+def make_train_step(cfg, opt_cfg: OptConfig = OptConfig(),
+                    microbatch: int = 1) -> Callable:
+    """AdamW train step; ``microbatch`` > 1 enables gradient accumulation
+    (splits the global batch into `microbatch` sequential micro-steps,
+    dividing peak activation memory by ~microbatch at the cost of weight
+    re-reads — a §Perf lever). The micro loop is FULLY UNROLLED so dry-run
+    cost analysis counts every micro-step."""
+    if is_encdec(cfg):
+        def loss_fn(params, batch):
+            loss, aux = E.loss(params, cfg, batch["frames"],
+                               batch["tokens"], batch["labels"])
+            return loss, aux
+    else:
+        def loss_fn(params, batch):
+            loss, aux = T.lm_loss(params, cfg, batch["tokens"],
+                                  batch["labels"],
+                                  batch.get("prefix_embeds"))
+            return loss, aux
+
+    def train_step(params, opt_state, batch):
+        if microbatch <= 1:
+            (loss, aux), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+        else:
+            def micro(i):
+                mb = jax.tree_util.tree_map(
+                    lambda x: x.reshape((microbatch,
+                                         x.shape[0] // microbatch)
+                                        + x.shape[1:])[i], batch)
+                return jax.value_and_grad(loss_fn, has_aux=True)(params,
+                                                                 mb)
+            (loss, aux), grads = micro(0)
+            for i in range(1, microbatch):     # static unroll
+                (l_i, a_i), g_i = micro(i)
+                loss = loss + l_i
+                aux = jax.tree_util.tree_map(lambda a, b: a + b, aux, a_i)
+                grads = jax.tree_util.tree_map(lambda a, b: a + b, grads,
+                                               g_i)
+            inv = 1.0 / microbatch
+            loss = loss * inv
+            aux = jax.tree_util.tree_map(lambda a: a * inv, aux)
+            grads = jax.tree_util.tree_map(lambda g: g * inv, grads)
+        params, opt_state, gnorm = adamw_update(params, grads, opt_state,
+                                                opt_cfg)
+        metrics = {"loss": loss.astype(F32), "grad_norm": gnorm, **aux}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg) -> Callable:
+    """Forward-only pass (inference prefill) returning last-token logits."""
+    if is_encdec(cfg):
+        def prefill(params, batch):
+            enc = E.encode(params, cfg, batch["frames"])
+            hidden = E.decode_train(params, cfg, batch["tokens"], enc)
+            from ..models import layers as L
+            return L.logits(params["embed"], hidden[:, -1:, :])
+    else:
+        def prefill(params, batch):
+            hidden, _ = T.forward(params, cfg, batch["tokens"],
+                                  batch.get("prefix_embeds"))
+            from ..models import layers as L
+            return L.logits(params["embed"], hidden[:, -1:, :])
+    return prefill
+
+
+def make_serve_step(cfg, sample: str = "greedy") -> Callable:
+    decode = E.decode_step if is_encdec(cfg) else T.decode_step
+
+    def serve_step(params, token, cache):
+        logits, cache = decode(params, cfg, token, cache)
+        nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        return nxt[:, None], cache
+
+    return serve_step

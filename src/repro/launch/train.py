@@ -1,0 +1,97 @@
+"""Training driver: ``python -m repro.launch.train --arch <id> [--smoke]``.
+
+Runs the full loop on whatever devices exist (CPU for local runs; the
+same code path drives a TPU slice when one is attached): data pipeline ->
+sharded train_step -> metrics -> periodic checkpoint.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from ..checkpoint import save_checkpoint
+from ..configs import get as get_arch
+from ..data import TokenDataConfig, frame_stub, patch_stub, \
+    synthetic_lm_batches
+from ..metrics import MetricsLogger
+from ..models import encdec as E
+from ..models import transformer as T
+from ..models.common import make_rules, sharding_ctx, unbox
+from ..optim import OptConfig, adamw_init, cosine_schedule
+from .mesh import make_host_mesh
+from .steps import is_encdec, make_train_step
+from . import sharding as shd
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced config (CPU-friendly)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--log-dir", default=None,
+                    help="JSONL metrics directory")
+    ap.add_argument("--microbatch", type=int, default=1)
+    args = ap.parse_args()
+
+    mod = get_arch(args.arch)
+    cfg = mod.smoke() if args.smoke else mod.full()
+    mesh = make_host_mesh()
+    rules = make_rules(mesh_axes=mesh.axis_names)
+    key = jax.random.PRNGKey(0)
+
+    with mesh, sharding_ctx(mesh, rules):
+        if is_encdec(cfg):
+            params, _ = unbox(E.init_params(key, cfg))
+        else:
+            params, _ = unbox(T.init_params(key, cfg))
+        opt = adamw_init(params)
+        step_fn = jax.jit(make_train_step(cfg, OptConfig(lr=args.lr),
+                                          microbatch=args.microbatch))
+        data = synthetic_lm_batches(TokenDataConfig(
+            vocab=cfg.vocab, seq_len=args.seq, batch=args.batch))
+        logger = MetricsLogger(args.log_dir,
+                               tokens_per_step=args.batch * args.seq)
+
+        for step in range(1, args.steps + 1):
+            batch = next(data)
+            if is_encdec(cfg):
+                batch = {"frames": frame_stub(args.batch, cfg.n_frames,
+                                              cfg.d_model, seed=step,
+                                              dtype=cfg.dtype),
+                         "tokens": batch["tokens"],
+                         "labels": batch["labels"]}
+            elif cfg.prefix_lm:
+                batch["prefix_embeds"] = patch_stub(
+                    args.batch, cfg.n_prefix, cfg.d_model, seed=step,
+                    dtype=cfg.dtype)
+            logger.timer.start()
+            params, opt, metrics = step_fn(params, opt, batch)
+            jax.block_until_ready(metrics["loss"])
+            dt = logger.timer.stop()
+            logger.log(step, {"loss": metrics["loss"],
+                              "grad_norm": metrics["grad_norm"]})
+            if step % args.log_every == 0:
+                print(logger.line(step, dt), flush=True)
+            if args.ckpt_dir and step % args.ckpt_every == 0:
+                path = save_checkpoint(args.ckpt_dir, step, params)
+                print(f"  saved {path}")
+        summ = logger.timer.summary()
+        if summ:
+            print(f"timing: mean {summ['mean_s']*1e3:.0f} ms/step, "
+                  f"p95 {summ['p95_s']*1e3:.0f} ms "
+                  f"({summ['steps_timed']} steps)")
+        logger.close()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from .logger import MetricsLogger, StepTimer
+
+__all__ = ["MetricsLogger", "StepTimer"]

@@ -1,0 +1,89 @@
+"""Metrics substrate: JSONL step logs + EMA-smoothed console lines +
+throughput accounting (tokens/s, step-time percentiles).
+
+Deliberately dependency-free (no tensorboard/wandb in this offline
+container); the JSONL format is trivially ingestible by either.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Any, Dict, Optional
+
+import numpy as np
+
+
+class StepTimer:
+    """Wall-clock per-step timing with warmup exclusion and percentiles."""
+
+    def __init__(self, warmup: int = 2):
+        self.warmup = warmup
+        self._times = []
+        self._t0 = None
+        self._count = 0
+
+    def start(self):
+        self._t0 = time.perf_counter()
+
+    def stop(self):
+        dt = time.perf_counter() - self._t0
+        self._count += 1
+        if self._count > self.warmup:
+            self._times.append(dt)
+        return dt
+
+    def summary(self) -> Dict[str, float]:
+        if not self._times:
+            return {}
+        arr = np.asarray(self._times)
+        return {
+            "steps_timed": len(arr),
+            "mean_s": float(arr.mean()),
+            "p50_s": float(np.percentile(arr, 50)),
+            "p95_s": float(np.percentile(arr, 95)),
+        }
+
+
+class MetricsLogger:
+    """Append-only JSONL metrics with EMA console summaries."""
+
+    def __init__(self, log_dir: Optional[str] = None, ema: float = 0.9,
+                 tokens_per_step: int = 0):
+        self.path = None
+        if log_dir:
+            os.makedirs(log_dir, exist_ok=True)
+            self.path = os.path.join(log_dir, "metrics.jsonl")
+            self._fh = open(self.path, "a")
+        self.ema_coef = ema
+        self._ema: Dict[str, float] = {}
+        self.tokens_per_step = tokens_per_step
+        self.timer = StepTimer()
+
+    def log(self, step: int, metrics: Dict[str, Any],
+            extra: Optional[Dict[str, Any]] = None) -> Dict[str, float]:
+        rec: Dict[str, Any] = {"step": step, "time": time.time()}
+        for k, v in metrics.items():
+            v = float(v)
+            rec[k] = v
+            self._ema[k] = v if k not in self._ema else \
+                self.ema_coef * self._ema[k] + (1 - self.ema_coef) * v
+        if extra:
+            rec.update(extra)
+        if self.path:
+            self._fh.write(json.dumps(rec) + "\n")
+            self._fh.flush()
+        return {k: self._ema[k] for k in metrics}
+
+    def line(self, step: int, step_time_s: float) -> str:
+        parts = [f"step {step:6d}"]
+        for k, v in self._ema.items():
+            parts.append(f"{k} {v:.4f}")
+        parts.append(f"{step_time_s*1e3:.0f} ms/step")
+        if self.tokens_per_step:
+            parts.append(f"{self.tokens_per_step/step_time_s:.0f} tok/s")
+        return "  ".join(parts)
+
+    def close(self):
+        if self.path:
+            self._fh.close()

@@ -1,0 +1,6 @@
+"""Model stack: pure-JAX assigned architectures with logical-axis sharding.
+
+layers (GQA/RoPE/SWA attention, MLP), moe (expert parallel), mamba2 (SSD),
+transformer (decoder-only + prefix-LM + prefill/decode serving),
+encdec (Whisper-style). See DESIGN.md §3.
+"""

@@ -1,0 +1,213 @@
+"""Model-stack substrate: boxed params with logical axes, sharding rules.
+
+The paper's partition-on-feature idea, made first-class: every parameter
+and major activation is annotated with *logical* axis names; a rules table
+maps logical axes onto mesh axes. "Feature" axes (embed/heads/mlp/experts/
+vocab) map to the `model` mesh axis — that IS the paper's column partition
+of the data/weight matrices; "sample" axes (batch) map to `data`/`pod`.
+Changing the rules table is how the §Perf hillclimb re-shards the system
+without touching model code.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+# --------------------------------------------------------------------------
+# Logical axis rules
+# --------------------------------------------------------------------------
+
+# default rules: classic TP ("feature partition") + DP on batch
+DEFAULT_RULES: Dict[str, Any] = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "embed": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "mlp": "model",
+    "experts": "model",
+    "expert_mlp": None,
+    "vocab": "model",
+    "layers": None,
+    "conv": None,
+    "state": None,          # mamba dstate
+    "cache_seq": None,
+    "frames": None,
+    "patches": None,
+}
+
+# FSDP overlay for models too big to replicate: param "embed"/"layers"
+# dims additionally sharded over the data axes.
+FSDP_OVERLAY: Dict[str, Any] = {
+    "embed": ("pod", "data"),
+}
+
+
+def make_rules(fsdp: bool = False, extra: Optional[Dict[str, Any]] = None,
+               mesh_axes: Sequence[str] = ("pod", "data", "model")):
+    rules = dict(DEFAULT_RULES)
+    if fsdp:
+        rules.update(FSDP_OVERLAY)
+    if extra:
+        rules.update(extra)
+    # drop mesh axes that don't exist on this mesh (e.g. "pod" single-pod)
+    def _filter(v):
+        if v is None:
+            return None
+        if isinstance(v, str):
+            return v if v in mesh_axes else None
+        vv = tuple(a for a in v if a in mesh_axes)
+        return vv if vv else None
+    return {k: _filter(v) for k, v in rules.items()}
+
+
+class _Ctx(threading.local):
+    def __init__(self):
+        self.mesh: Optional[Mesh] = None
+        self.rules: Optional[Dict[str, Any]] = None
+
+
+_CTX = _Ctx()
+
+
+@contextlib.contextmanager
+def sharding_ctx(mesh: Optional[Mesh], rules: Optional[Dict[str, Any]]):
+    """Activate (mesh, rules) for logical_constraint / make_specs."""
+    prev = (_CTX.mesh, _CTX.rules)
+    _CTX.mesh, _CTX.rules = mesh, rules
+    try:
+        yield
+    finally:
+        _CTX.mesh, _CTX.rules = prev
+
+
+def logical_to_spec(logical: Sequence[Optional[str]],
+                    rules: Optional[Dict[str, Any]] = None) -> P:
+    rules = rules if rules is not None else (_CTX.rules or {})
+    used = set()
+    parts = []
+    for name in logical:
+        axis = rules.get(name) if name is not None else None
+        # a mesh axis may appear at most once in a PartitionSpec
+        if axis is not None:
+            flat = (axis,) if isinstance(axis, str) else tuple(axis)
+            flat = tuple(a for a in flat if a not in used)
+            used.update(flat)
+            axis = (flat[0] if len(flat) == 1 else flat) if flat else None
+        parts.append(axis)
+    return P(*parts)
+
+
+def sanitize_spec_for_shape(spec: P, shape: Sequence[int], mesh: Mesh) -> P:
+    """Drop mesh-axis assignments whose size does not divide the dim
+    (replication fallback — e.g. kv_heads=8 over model=16). For tuple
+    assignments, trailing axes are dropped until the product divides."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for dim, entry in zip(shape, parts):
+        if entry is None:
+            out.append(None)
+            continue
+        axes = [entry] if isinstance(entry, str) else list(entry)
+        while axes:
+            prod = 1
+            for a in axes:
+                prod *= sizes[a]
+            if dim % prod == 0:
+                break
+            axes.pop()
+        out.append(None if not axes else
+                   (axes[0] if len(axes) == 1 else tuple(axes)))
+    return P(*out)
+
+
+def logical_constraint(x, logical: Sequence[Optional[str]]):
+    """with_sharding_constraint by logical names (no-op outside a ctx).
+    Non-divisible assignments fall back to replication on that dim."""
+    if _CTX.mesh is None or _CTX.rules is None:
+        return x
+    spec = logical_to_spec(logical, _CTX.rules)
+    spec = sanitize_spec_for_shape(spec, x.shape, _CTX.mesh)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(_CTX.mesh, spec))
+
+
+# --------------------------------------------------------------------------
+# Boxed params
+# --------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class Boxed:
+    """A parameter value together with its logical axis names."""
+    value: Any
+    logical: Tuple[Optional[str], ...]
+
+    def tree_flatten(self):
+        return (self.value,), self.logical
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], aux)
+
+
+def box(value, *logical):
+    assert value.ndim == len(logical), (value.shape, logical)
+    return Boxed(value, tuple(logical))
+
+
+def unbox(tree):
+    """Boxed tree -> (params, logical tree)."""
+    params = jax.tree_util.tree_map(
+        lambda b: b.value, tree, is_leaf=lambda x: isinstance(x, Boxed))
+    logical = jax.tree_util.tree_map(
+        lambda b: b.logical, tree, is_leaf=lambda x: isinstance(x, Boxed))
+    return params, logical
+
+
+def specs_from_logical(logical_tree, rules) -> Any:
+    """Logical-axes tree -> PartitionSpec tree (for in_shardings)."""
+    return jax.tree_util.tree_map(
+        lambda names: logical_to_spec(names, rules), logical_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            n is None or isinstance(n, str) for n in x))
+
+
+# --------------------------------------------------------------------------
+# Initializers
+# --------------------------------------------------------------------------
+
+def _normal(key, shape, dtype, scale):
+    return (scale * jax.random.normal(key, shape, jnp.float32)).astype(dtype)
+
+
+def dense_init(key, shape, logical, dtype=jnp.bfloat16, scale=None):
+    """Fan-in scaled init, boxed with logical axes."""
+    fan_in = shape[0] if len(shape) > 1 else shape[0]
+    scale = scale if scale is not None else fan_in ** -0.5
+    return box(_normal(key, shape, dtype, scale), *logical)
+
+
+def zeros_init(shape, logical, dtype=jnp.bfloat16):
+    return box(jnp.zeros(shape, dtype), *logical)
+
+
+def ones_init(shape, logical, dtype=jnp.bfloat16):
+    return box(jnp.ones(shape, dtype), *logical)
+
+
+def abstract_like(boxed_tree):
+    """Boxed tree -> boxed ShapeDtypeStructs (for eval_shape dry-runs)."""
+    return jax.tree_util.tree_map(
+        lambda b: Boxed(jax.ShapeDtypeStruct(b.value.shape, b.value.dtype),
+                        b.logical),
+        boxed_tree, is_leaf=lambda x: isinstance(x, Boxed))

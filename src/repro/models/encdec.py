@@ -1,0 +1,215 @@
+"""Encoder-decoder assembly (Whisper-style audio backbone).
+
+Per the assignment carve-out, the modality frontend (mel-spectrogram +
+conv feature extractor) is a STUB: ``input_specs`` provides precomputed
+frame embeddings (B, T_frames, D) — this module implements the
+transformer that consumes them:
+
+  encoder: [self-attn (bidirectional) + GELU MLP] x N, learned positions
+  decoder: [causal self-attn + cross-attn + GELU MLP] x N, learned
+           positions, KV cache decode
+
+Whisper-large-v3: 32 enc + 32 dec layers, d_model 1280, 20 heads,
+d_ff 5120, vocab 51866 [arXiv:2212.04356].
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import Boxed, dense_init
+from . import layers as L
+from .layers import AttnConfig, MLPConfig
+
+F32 = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class EncDecConfig:
+    name: str
+    vocab: int
+    d_model: int
+    n_enc_layers: int
+    n_dec_layers: int
+    attn: AttnConfig                 # self-attn (decoder: causal=True)
+    mlp: MLPConfig
+    n_frames: int = 1500             # encoder positions (whisper audio ctx)
+    max_target: int = 448            # decoder learned positions
+    dtype: Any = jnp.bfloat16
+    remat: str = "full"
+    use_pallas: bool = False
+    scan_unroll: int = 1             # lax.scan unroll (dry-run costing)
+    citation: str = ""
+
+
+def _enc_attn(cfg: EncDecConfig) -> AttnConfig:
+    return dataclasses.replace(cfg.attn, causal=False, rope_base=0.0)
+
+
+def _dec_attn(cfg: EncDecConfig) -> AttnConfig:
+    return dataclasses.replace(cfg.attn, causal=True, rope_base=0.0)
+
+
+def init_enc_block(key, cfg: EncDecConfig):
+    k1, k2 = jax.random.split(key)
+    return {
+        "norm_attn": L.init_layernorm(cfg.d_model, cfg.dtype),
+        "attn": L.init_attention(k1, _enc_attn(cfg), cfg.dtype),
+        "norm_mlp": L.init_layernorm(cfg.d_model, cfg.dtype),
+        "mlp": L.init_mlp(k2, cfg.mlp, cfg.dtype),
+    }
+
+
+def init_dec_block(key, cfg: EncDecConfig):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "norm_self": L.init_layernorm(cfg.d_model, cfg.dtype),
+        "self_attn": L.init_attention(k1, _dec_attn(cfg), cfg.dtype),
+        "norm_cross": L.init_layernorm(cfg.d_model, cfg.dtype),
+        "cross_attn": L.init_attention(k2, _dec_attn(cfg), cfg.dtype),
+        "norm_mlp": L.init_layernorm(cfg.d_model, cfg.dtype),
+        "mlp": L.init_mlp(k3, cfg.mlp, cfg.dtype),
+    }
+
+
+def init_params(key, cfg: EncDecConfig):
+    k_emb, k_enc, k_dec, kp1, kp2 = jax.random.split(key, 5)
+    enc_keys = jax.random.split(k_enc, cfg.n_enc_layers)
+    dec_keys = jax.random.split(k_dec, cfg.n_dec_layers)
+
+    def _stack(init_fn, keys):
+        stacked = jax.vmap(init_fn)(keys)
+        return jax.tree_util.tree_map(
+            lambda b: Boxed(b.value, ("layers",) + b.logical), stacked,
+            is_leaf=lambda x: isinstance(x, Boxed))
+
+    return {
+        "embed": L.init_embedding(k_emb, cfg.vocab, cfg.d_model, cfg.dtype),
+        "enc_pos": dense_init(kp1, (cfg.n_frames, cfg.d_model),
+                              ("frames", "embed"), cfg.dtype, scale=0.02),
+        "dec_pos": dense_init(kp2, (cfg.max_target, cfg.d_model),
+                              ("cache_seq", "embed"), cfg.dtype, scale=0.02),
+        "enc_blocks": _stack(lambda k: init_enc_block(k, cfg), enc_keys),
+        "dec_blocks": _stack(lambda k: init_dec_block(k, cfg), dec_keys),
+        "enc_norm": L.init_layernorm(cfg.d_model, cfg.dtype),
+        "dec_norm": L.init_layernorm(cfg.d_model, cfg.dtype),
+    }
+
+
+# --------------------------------------------------------------------------
+
+def encode(params, cfg: EncDecConfig, frames):
+    """frames: (B, T, D) stubbed conv features -> encoder states."""
+    x = frames.astype(cfg.dtype) + params["enc_pos"][:frames.shape[1]][None]
+
+    def body(x, blk):
+        h = L.layernorm(blk["norm_attn"], x)
+        x = x + L.attention_train(blk["attn"], h, _enc_attn(cfg))
+        h = L.layernorm(blk["norm_mlp"], x)
+        x = x + L.mlp(blk["mlp"], h, cfg.mlp)
+        return x, None
+
+    if cfg.remat != "none":
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["enc_blocks"],
+                        unroll=cfg.scan_unroll)
+    return L.layernorm(params["enc_norm"], x)
+
+
+def decode_train(params, cfg: EncDecConfig, tokens, enc_states):
+    """Teacher-forced decoder. tokens: (B,S) -> hidden (B,S,D)."""
+    x = L.embed(params["embed"], tokens)
+    # positions clamp to the learned table (longform decode beyond the
+    # 448-position whisper table — adaptation noted in DESIGN.md)
+    pos_idx = jnp.minimum(jnp.arange(tokens.shape[1]),
+                          params["dec_pos"].shape[0] - 1)
+    x = x + params["dec_pos"][pos_idx][None]
+    t_enc = enc_states.shape[1]
+    k_pos = jnp.arange(t_enc)
+
+    def body(x, blk):
+        h = L.layernorm(blk["norm_self"], x)
+        x = x + L.attention_train(blk["self_attn"], h, _dec_attn(cfg))
+        h = L.layernorm(blk["norm_cross"], x)
+        # cross-attention: kv from encoder states (projected per layer)
+        kc = jnp.einsum("btd,dhk->bthk", enc_states, blk["cross_attn"]["wk"])
+        vc = jnp.einsum("btd,dhk->bthk", enc_states, blk["cross_attn"]["wv"])
+        x = x + L.attention_train(blk["cross_attn"], h, _dec_attn(cfg),
+                                  kv_override=(kc, vc, k_pos))
+        h = L.layernorm(blk["norm_mlp"], x)
+        x = x + L.mlp(blk["mlp"], h, cfg.mlp)
+        return x, None
+
+    if cfg.remat != "none":
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["dec_blocks"],
+                        unroll=cfg.scan_unroll)
+    return L.layernorm(params["dec_norm"], x)
+
+
+def loss(params, cfg: EncDecConfig, frames, tokens, labels):
+    enc_states = encode(params, cfg, frames)
+    hidden = decode_train(params, cfg, tokens, enc_states)
+    ce = L.chunked_ce_loss(params["embed"], hidden, labels)
+    return ce, {"ce": ce}
+
+
+# --------------------------------------------------------------------------
+# decode step (serving)
+# --------------------------------------------------------------------------
+
+def init_cache(cfg: EncDecConfig, batch: int, max_seq: int,
+               abstract: bool = False):
+    """Self-attn KV caches (stacked over layers) + precomputed cross KV."""
+    self_c = L.init_attn_cache(batch, _dec_attn(cfg), max_seq, cfg.dtype,
+                               abstract=abstract)
+    r = cfg.n_dec_layers
+    if abstract:
+        stacked = jax.tree_util.tree_map(
+            lambda s: jax.ShapeDtypeStruct((r,) + s.shape, s.dtype), self_c)
+        cross = jax.ShapeDtypeStruct(
+            (r, batch, cfg.n_frames, cfg.attn.n_kv_heads,
+             cfg.attn.head_dim), cfg.dtype)
+    else:
+        stacked = jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a[None], (r,) + a.shape), self_c)
+        cross = jnp.zeros((r, batch, cfg.n_frames, cfg.attn.n_kv_heads,
+                           cfg.attn.head_dim), cfg.dtype)
+    return {"self": stacked, "cross_k": cross, "cross_v": cross}
+
+
+def decode_step(params, cfg: EncDecConfig, token, cache):
+    """One decoder token against cached self-KV and cross-KV."""
+    idx = cache["self"]["index"][0]
+    x = L.embed(params["embed"], token)
+    x = x + params["dec_pos"][jnp.minimum(idx, cfg.max_target - 1)][None,
+                                                                    None]
+    t_enc = cache["cross_k"].shape[2]
+    k_pos = jnp.arange(t_enc)
+
+    def body(x, inp):
+        blk, self_c, ck, cv = inp
+        h = L.layernorm(blk["norm_self"], x)
+        a, new_self = L.attention_decode(blk["self_attn"], h,
+                                         _dec_attn(cfg), self_c)
+        x = x + a
+        h = L.layernorm(blk["norm_cross"], x)
+        a, _ = L.attention_decode(blk["cross_attn"], h, _dec_attn(cfg),
+                                  {"index": self_c["index"]},
+                                  kv_override=(ck, cv, k_pos))
+        x = x + a
+        h = L.layernorm(blk["norm_mlp"], x)
+        x = x + L.mlp(blk["mlp"], h, cfg.mlp)
+        return x, new_self
+
+    x, new_self = jax.lax.scan(
+        body, x, (params["dec_blocks"], cache["self"], cache["cross_k"],
+                  cache["cross_v"]), unroll=cfg.scan_unroll)
+    x = L.layernorm(params["dec_norm"], x)
+    lg = L.logits(params["embed"], x)
+    new_cache = {"self": new_self, "cross_k": cache["cross_k"],
+                 "cross_v": cache["cross_v"]}
+    return lg, new_cache

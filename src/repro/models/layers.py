@@ -1,0 +1,410 @@
+"""Transformer building blocks — pure JAX, shape-polymorphic, shardable.
+
+Conventions
+-----------
+* activations: (batch B, seq S, embed D); attention heads H, kv heads Hk,
+  head dim Dh, GQA group G = H // Hk.
+* params are plain-array pytrees (unboxed); init_* functions return Boxed
+  trees carrying logical axis names (see common.py).
+* attention is computed in query chunks (pure-JAX flash-style) so the
+  S x T score tensor never materializes for long sequences; sliding-window
+  layers additionally slice the KV to the window, making local layers
+  O(S * W) instead of O(S^2).
+* every dot product accumulates in f32 (preferred_element_type) and
+  softmax runs in f32 — bf16 params are safe.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import (Boxed, box, dense_init, logical_constraint, ones_init,
+                     zeros_init)
+
+F32 = jnp.float32
+
+
+# --------------------------------------------------------------------------
+# Norms
+# --------------------------------------------------------------------------
+
+def init_rmsnorm(d: int, dtype=jnp.bfloat16):
+    return {"scale": ones_init((d,), ("embed",), dtype)}
+
+
+def rmsnorm(p, x, eps: float = 1e-6):
+    xf = x.astype(F32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(F32)).astype(x.dtype)
+
+
+def init_layernorm(d: int, dtype=jnp.bfloat16):
+    return {"scale": ones_init((d,), ("embed",), dtype),
+            "bias": zeros_init((d,), ("embed",), dtype)}
+
+
+def layernorm(p, x, eps: float = 1e-5):
+    xf = x.astype(F32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(F32) + p["bias"].astype(F32)).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# RoPE
+# --------------------------------------------------------------------------
+
+def rope(x, positions, base: float = 10000.0):
+    """x: (..., S, H, Dh) rotated by position; positions: (..., S)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = base ** (-jnp.arange(0, half, dtype=F32) / half)
+    angles = positions[..., None].astype(F32) * freqs          # (..., S, half)
+    angles = angles[..., None, :]                              # add head dim
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., :half].astype(F32), x[..., half:].astype(F32)
+    return jnp.concatenate([x1 * cos - x2 * sin,
+                            x2 * cos + x1 * sin], axis=-1).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Attention
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AttnConfig:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    qkv_bias: bool = False
+    rope_base: float = 10000.0
+    window: Optional[int] = None      # sliding-window size (local layers)
+    causal: bool = True               # False: encoder (bidirectional)
+    q_chunk: int = 1024               # flash-style query block
+
+
+def init_attention(key, cfg: AttnConfig, dtype=jnp.bfloat16):
+    ks = jax.random.split(key, 4)
+    d, h, hk, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    p = {
+        "wq": dense_init(ks[0], (d, h, dh), ("embed", "heads", "head_dim"),
+                         dtype),
+        "wk": dense_init(ks[1], (d, hk, dh), ("embed", "kv_heads",
+                                              "head_dim"), dtype),
+        "wv": dense_init(ks[2], (d, hk, dh), ("embed", "kv_heads",
+                                              "head_dim"), dtype),
+        "wo": dense_init(ks[3], (h, dh, d), ("heads", "head_dim", "embed"),
+                         dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = zeros_init((h, dh), ("heads", "head_dim"), dtype)
+        p["bk"] = zeros_init((hk, dh), ("kv_heads", "head_dim"), dtype)
+        p["bv"] = zeros_init((hk, dh), ("kv_heads", "head_dim"), dtype)
+    return p
+
+
+def _qkv(p, x, cfg: AttnConfig, positions, use_rope=True,
+         q_only: bool = False):
+    """Projections; q_only skips K/V (cross-attention supplies its own)."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+    if use_rope:
+        q = rope(q, positions, cfg.rope_base)
+    q = logical_constraint(q, ("batch", "seq", "heads", "head_dim"))
+    if q_only:
+        return q, None, None
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qkv_bias:
+        k, v = k + p["bk"], v + p["bv"]
+    if use_rope:
+        k = rope(k, positions, cfg.rope_base)
+    k = logical_constraint(k, ("batch", "seq", "kv_heads", "head_dim"))
+    v = logical_constraint(v, ("batch", "seq", "kv_heads", "head_dim"))
+    return q, k, v
+
+
+_F8_DTYPES = (jnp.float8_e4m3fn, jnp.float8_e5m2)
+
+
+def _sdpa(q, k, v, mask_bias):
+    """q: (B,Sq,Hk,G,Dh); k/v: (B,T,Hk,Dh); mask_bias: (Sq,T) or None.
+
+    f8 KV caches are consumed DIRECTLY (q is quantized to the cache dtype
+    and the MXU accumulates in f32) — dequantizing the cache up front
+    would materialize the full bf16 cache and erase the memory win.
+    """
+    scale = q.shape[-1] ** -0.5
+    out_dtype = q.dtype
+    if k.dtype in _F8_DTYPES:
+        q = (q.astype(F32) * scale).astype(k.dtype)
+        logits = jnp.einsum("bqhgd,bthd->bhgqt", q, k,
+                            preferred_element_type=F32)
+    else:
+        logits = jnp.einsum("bqhgd,bthd->bhgqt", q, k,
+                            preferred_element_type=F32) * scale
+    if mask_bias is not None:
+        logits = logits + mask_bias
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqt,bthd->bqhgd", probs.astype(v.dtype), v,
+                     preferred_element_type=F32)
+    return out.astype(out_dtype)
+
+
+def _mask_bias(q_pos, k_pos, causal: bool, window: Optional[int],
+               prefix_len: Optional[Any] = None):
+    """Additive f32 bias (Sq, T). q_pos/k_pos: int vectors of positions."""
+    neg = jnp.asarray(-1e30, F32)
+    ok = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if causal:
+        c = k_pos[None, :] <= q_pos[:, None]
+        if prefix_len is not None:   # prefix-LM: bidirectional prefix
+            c = c | (k_pos[None, :] < prefix_len)
+        ok &= c
+    if window is not None:
+        ok &= k_pos[None, :] > (q_pos[:, None] - window)
+    return jnp.where(ok, 0.0, neg)
+
+
+def attention_train(p, x, cfg: AttnConfig, positions=None,
+                    prefix_len=None, kv_override=None,
+                    return_kv: bool = False):
+    """Full-sequence attention, query-chunked. x: (B,S,D) -> (B,S,D).
+
+    kv_override: (k, v, k_positions) for cross-attention (enc-dec).
+    return_kv: also return the (post-RoPE) k, v for cache priming.
+    """
+    b, s, d = x.shape
+    hk = cfg.n_kv_heads
+    g = cfg.n_heads // hk
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    q, k, v = _qkv(p, x, cfg, positions, use_rope=cfg.rope_base > 0,
+                   q_only=kv_override is not None)
+    if kv_override is not None:
+        k, v, k_pos = kv_override
+    else:
+        k_pos = jnp.arange(s)
+    q = q.reshape(b, s, hk, g, cfg.head_dim)
+
+    chunk = min(cfg.q_chunk, s)
+    if s % chunk:
+        chunk = s  # fallback: ragged seq, single block
+    n_chunks = s // chunk
+
+    def one_chunk(ci):
+        q_c = jax.lax.dynamic_slice_in_dim(q, ci * chunk, chunk, axis=1)
+        qp = ci * chunk + jnp.arange(chunk)
+        if cfg.window is not None and kv_override is None:
+            # local layer: only the last `window + chunk` keys can be seen
+            span = min(cfg.window + chunk, k.shape[1])
+            start = jnp.clip(ci * chunk + chunk - span, 0,
+                             k.shape[1] - span)
+            k_c = jax.lax.dynamic_slice_in_dim(k, start, span, axis=1)
+            v_c = jax.lax.dynamic_slice_in_dim(v, start, span, axis=1)
+            kp = start + jnp.arange(span)
+        else:
+            k_c, v_c, kp = k, v, k_pos
+        bias = _mask_bias(qp, kp, cfg.causal and kv_override is None,
+                          cfg.window, prefix_len)
+        return _sdpa(q_c, k_c, v_c, bias)
+
+    if n_chunks == 1:
+        out = one_chunk(0)
+    else:
+        # static python loop (not lax.map): keeps the per-chunk memory
+        # bound AND keeps every chunk visible to HLO cost analysis (a
+        # while-loop body would be cost-counted once — see DESIGN.md).
+        outs = [one_chunk(ci) for ci in range(n_chunks)]
+        out = jnp.concatenate(outs, axis=1)
+    out = out.reshape(b, s, cfg.n_heads, cfg.head_dim)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"],
+                   preferred_element_type=F32).astype(x.dtype)
+    y = logical_constraint(y, ("batch", "seq", "embed"))
+    if return_kv:
+        return y, (k, v)
+    return y
+
+
+def prime_attn_cache(k, v, cfg: AttnConfig, max_seq: int,
+                     dtype=jnp.bfloat16):
+    """Build a decode cache from prefill k/v (B,S,Hk,Dh).
+
+    Full-attention layers: slots 0..S-1 hold positions 0..S-1 directly.
+    Windowed layers use the ring layout: position p lives at slot
+    p mod W, so the last W entries are rolled by S mod W.
+    """
+    b, s = k.shape[0], k.shape[1]
+    T = min(max_seq, cfg.window) if cfg.window is not None else max_seq
+    if cfg.window is not None and s >= T:
+        k_r = jnp.roll(k[:, -T:], s % T, axis=1)
+        v_r = jnp.roll(v[:, -T:], s % T, axis=1)
+    else:
+        pad = T - s
+        k_r = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v_r = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    return {"k": k_r.astype(dtype), "v": v_r.astype(dtype),
+            "index": jnp.asarray(s, jnp.int32)}
+
+
+def attention_decode(p, x, cfg: AttnConfig, cache: Dict[str, Any],
+                     kv_override=None, use_pallas: bool = False):
+    """One-token decode. x: (B,1,D); cache: {k,v: (B,T,Hk,Dh), index: ()}.
+
+    Returns (y, new_cache). The KV cache is ring-buffer-sized T =
+    min(window, max_seq) for sliding-window layers.
+    """
+    b = x.shape[0]
+    hk, g = cfg.n_kv_heads, cfg.n_heads // cfg.n_kv_heads
+    idx = cache["index"]
+    positions = jnp.broadcast_to(idx[None], (b, 1)) \
+        if idx.ndim else jnp.full((b, 1), idx)
+    q, k_new, v_new = _qkv(p, x, cfg, positions,
+                           use_rope=cfg.rope_base > 0,
+                           q_only=kv_override is not None)
+    if kv_override is not None:
+        k, v, k_pos = kv_override          # cross-attention: static cache
+        new_cache = cache
+        bias = None
+    else:
+        T = cache["k"].shape[1]
+        slot = jnp.mod(idx, T)             # ring buffer for windowed layers
+        k = _cache_update(cache["k"], k_new, slot)
+        v = _cache_update(cache["v"], v_new, slot)
+        new_cache = {"k": k, "v": v, "index": idx + 1}
+        if k.dtype != x.dtype and k.dtype not in _F8_DTYPES:
+            # non-f8 quantized cache: dequant fallback (f8 stays packed
+            # and is consumed directly by _sdpa)
+            k = k.astype(x.dtype)
+            v = v.astype(x.dtype)
+        # positions held in the ring: slot s holds absolute pos p with
+        # p mod T == s and p <= idx; invalid (future/unwritten) slots masked
+        slots = jnp.arange(T)
+        abs_pos = idx - jnp.mod(idx - slots, T)
+        valid = abs_pos >= 0
+        if cfg.window is not None:
+            valid &= abs_pos > idx - cfg.window
+        bias = jnp.where(valid, 0.0, -1e30).astype(F32)[None, :]  # (1, T)
+        k_pos = abs_pos
+    q = q.reshape(b, 1, hk, g, cfg.head_dim)
+    if use_pallas and kv_override is None and k.dtype not in _F8_DTYPES:
+        # streaming flash-decode kernel: one VMEM pass over the KV cache
+        from ..kernels.flash_decode import flash_decode as _fdec
+        bias_b = jnp.broadcast_to(bias, (b, k.shape[1])) \
+            if bias is not None else jnp.zeros((b, k.shape[1]), F32)
+        out = _fdec(q[:, 0], k, v, bias_b)[:, None]   # (B,1,Hk,G,Dh)
+    else:
+        out = _sdpa(q, k, v, bias)
+    out = out.reshape(b, 1, cfg.n_heads, cfg.head_dim)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"],
+                   preferred_element_type=F32).astype(x.dtype)
+    return logical_constraint(y, ("batch", "seq", "embed")), new_cache
+
+
+def _cache_update(buf, new, slot):
+    return jax.lax.dynamic_update_slice_in_dim(
+        buf, new.astype(buf.dtype), slot, axis=1)
+
+
+def init_attn_cache(batch: int, cfg: AttnConfig, max_seq: int,
+                    dtype=jnp.bfloat16, abstract: bool = False):
+    T = min(max_seq, cfg.window) if cfg.window is not None else max_seq
+    shape = (batch, T, cfg.n_kv_heads, cfg.head_dim)
+    if abstract:
+        arr = jax.ShapeDtypeStruct(shape, dtype)
+        idx = jax.ShapeDtypeStruct((), jnp.int32)
+        return {"k": arr, "v": arr, "index": idx}
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype),
+            "index": jnp.zeros((), jnp.int32)}
+
+
+# --------------------------------------------------------------------------
+# MLP
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MLPConfig:
+    d_model: int
+    d_ff: int
+    activation: str = "swiglu"        # swiglu | gelu
+
+
+def init_mlp(key, cfg: MLPConfig, dtype=jnp.bfloat16):
+    ks = jax.random.split(key, 3)
+    d, f = cfg.d_model, cfg.d_ff
+    p = {"wo": dense_init(ks[2], (f, d), ("mlp", "embed"), dtype)}
+    if cfg.activation == "swiglu":
+        p["wi_gate"] = dense_init(ks[0], (d, f), ("embed", "mlp"), dtype)
+        p["wi_up"] = dense_init(ks[1], (d, f), ("embed", "mlp"), dtype)
+    else:
+        p["wi"] = dense_init(ks[0], (d, f), ("embed", "mlp"), dtype)
+    return p
+
+
+def mlp(p, x, cfg: MLPConfig):
+    if cfg.activation == "swiglu":
+        h = jax.nn.silu(jnp.einsum("bsd,df->bsf", x, p["wi_gate"],
+                                   preferred_element_type=F32)) \
+            * jnp.einsum("bsd,df->bsf", x, p["wi_up"],
+                         preferred_element_type=F32)
+    else:
+        h = jax.nn.gelu(jnp.einsum("bsd,df->bsf", x, p["wi"],
+                                   preferred_element_type=F32))
+    h = logical_constraint(h.astype(x.dtype), ("batch", "seq", "mlp"))
+    y = jnp.einsum("bsf,fd->bsd", h, p["wo"], preferred_element_type=F32)
+    return logical_constraint(y.astype(x.dtype), ("batch", "seq", "embed"))
+
+
+# --------------------------------------------------------------------------
+# Embedding / unembedding / loss
+# --------------------------------------------------------------------------
+
+def init_embedding(key, vocab: int, d: int, dtype=jnp.bfloat16):
+    k1, k2 = jax.random.split(key)
+    return {
+        # input table rows gathered -> shard embed dim (FSDP overlay), not
+        # vocab (a vocab-sharded gather would all-gather the table).
+        "in_table": dense_init(k1, (vocab, d), ("vocab_in", "embed"), dtype,
+                               scale=1.0),
+        "out_table": dense_init(k2, (d, vocab), ("embed", "vocab"), dtype),
+    }
+
+
+def embed(p, tokens):
+    y = jnp.take(p["in_table"], tokens, axis=0)
+    return logical_constraint(y, ("batch", "seq", "embed"))
+
+
+def logits(p, x):
+    y = jnp.einsum("bsd,dv->bsv", x, p["out_table"],
+                   preferred_element_type=F32)
+    return logical_constraint(y, ("batch", "seq", "vocab"))
+
+
+def chunked_ce_loss(p, x, labels, chunk: int = 512):
+    """Mean cross-entropy without materializing (B,S,V) at once."""
+    b, s, d = x.shape
+    chunk = min(chunk, s)
+    if s % chunk:
+        chunk = s
+    n_chunks = s // chunk
+
+    total = jnp.zeros((), F32)
+    # static python loop for the same cost-analysis reason as attention
+    for ci in range(n_chunks):
+        x_c = jax.lax.dynamic_slice_in_dim(x, ci * chunk, chunk, axis=1)
+        l_c = jax.lax.dynamic_slice_in_dim(labels, ci * chunk, chunk, axis=1)
+        lg = logits(p, x_c)                                   # (B,C,V) f32
+        lse = jax.nn.logsumexp(lg, axis=-1)
+        gold = jnp.take_along_axis(lg, l_c[..., None], axis=-1)[..., 0]
+        total = total + jnp.sum(lse - gold)
+    return total / (b * s)

@@ -1,0 +1,261 @@
+"""Mamba-2 (SSD — state-space duality) layer  [arXiv:2405.21060].
+
+Chunked SSD algorithm (Dao & Gu 2024, Listing 1), TPU-adapted:
+  * the sequence is split into chunks of Q tokens; within a chunk the
+    quadratic "attention-like" form runs on the MXU (Q x Q matmuls),
+    across chunks a linear recurrence carries the (H, P, N) state —
+    implemented with an associative scan over chunk summaries, so the
+    cross-chunk depth is log(S/Q) rather than S/Q.
+  * heads H carry the logical axis "heads" -> `model` mesh axis: the
+    feature partition of the paper applied to SSD state heads (states
+    never cross heads, so the scan needs NO collectives — noted in
+    DESIGN.md §Arch-applicability).
+
+Decode is the O(1) recurrent update: state <- state * exp(a dt) + dt B x.
+
+Simplifications vs the reference CUDA impl (documented): depthwise causal
+conv width 4 on (x,B,C) as in the paper; no chunk-local Z normalization
+beyond the final RMSNorm-gate; real-valued scalar A per head (Mamba-2's
+choice).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import box, dense_init, logical_constraint, ones_init, zeros_init
+from .layers import init_rmsnorm, rmsnorm
+
+F32 = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class Mamba2Config:
+    d_model: int
+    n_heads: int             # value heads (d_inner = n_heads * head_dim)
+    head_dim: int            # P
+    d_state: int             # N
+    conv_width: int = 4
+    chunk: int = 256         # Q
+    n_groups: int = 1        # B/C groups (like GQA for SSM)
+
+
+def d_inner(cfg: Mamba2Config) -> int:
+    return cfg.n_heads * cfg.head_dim
+
+
+def init_mamba2(key, cfg: Mamba2Config, dtype=jnp.bfloat16):
+    ks = jax.random.split(key, 8)
+    d, di, n, g = cfg.d_model, d_inner(cfg), cfg.d_state, cfg.n_groups
+    p = {
+        # fused input projection: [z (gate), x, B, C, dt]
+        "in_z": dense_init(ks[0], (d, di), ("embed", "heads"), dtype),
+        "in_x": dense_init(ks[1], (d, di), ("embed", "heads"), dtype),
+        "in_B": dense_init(ks[2], (d, g * n), ("embed", "state"), dtype),
+        "in_C": dense_init(ks[3], (d, g * n), ("embed", "state"), dtype),
+        "in_dt": dense_init(ks[4], (d, cfg.n_heads), ("embed", "heads"),
+                            dtype),
+        "dt_bias": zeros_init((cfg.n_heads,), ("heads",), F32),
+        "A_log": box(jnp.log(jnp.linspace(1.0, 16.0, cfg.n_heads,
+                                          dtype=F32)), "heads"),
+        "D": ones_init((cfg.n_heads,), ("heads",), F32),
+        "conv_x": zeros_init((cfg.conv_width, di), ("conv", "heads"), dtype),
+        "conv_B": zeros_init((cfg.conv_width, g * n), ("conv", "state"),
+                             dtype),
+        "conv_C": zeros_init((cfg.conv_width, g * n), ("conv", "state"),
+                             dtype),
+        "norm": init_rmsnorm(di, dtype),
+        "out": dense_init(ks[5], (di, d), ("heads", "embed"), dtype),
+    }
+    return p
+
+
+def _causal_conv(x, w, state=None):
+    """Depthwise causal conv. x: (B,S,C), w: (W,C). state: (B,W-1,C) for
+    decode. Returns (y, new_state)."""
+    wdt = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], wdt - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state
+    xp = jnp.concatenate([pad, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :]
+            for i in range(wdt))
+    new_state = xp[:, -(wdt - 1):, :] if wdt > 1 else pad
+    return jax.nn.silu(y), new_state
+
+
+def _ssd_chunked(xh, dt, A, Bm, Cm, cfg: Mamba2Config):
+    """Chunked SSD. xh: (B,S,H,P); dt: (B,S,H) (post-softplus, f32);
+    A: (H,) negative reals (f32); Bm/Cm: (B,S,G,N). Returns (y, last_state).
+    """
+    b, s, h, pp = xh.shape
+    g, n = Bm.shape[2], Bm.shape[3]
+    q = min(cfg.chunk, s)
+    if s % q:
+        q = s
+    c = s // q
+    rep = h // g
+
+    # reshape to chunks
+    xc = xh.reshape(b, c, q, h, pp)
+    dtc = dt.reshape(b, c, q, h)
+    Bc = Bm.reshape(b, c, q, g, n)
+    Cc = Cm.reshape(b, c, q, g, n)
+
+    a_dt = A[None, None, None, :] * dtc                     # (B,C,Q,H) <= 0
+    seg = jnp.cumsum(a_dt, axis=2)                          # within-chunk
+    total = seg[:, :, -1, :]                                # (B,C,H)
+
+    # expand B/C groups to heads once: head hh uses group hh // rep
+    Bh = jnp.repeat(Bc.astype(F32), rep, axis=3)             # (B,C,Q,H,N)
+    Ch = jnp.repeat(Cc.astype(F32), rep, axis=3)             # (B,C,Q,H,N)
+
+    # ---- intra-chunk (quadratic, MXU): y_intra[t] =
+    #   C_t . sum_{u<=t} exp(seg_t - seg_u) dt_u B_u x_u
+    # L[t,u] = exp(seg_t - seg_u) for u <= t else 0.
+    # Mask BEFORE the exp: the u > t half has seg_t - seg_u >= 0 and can
+    # overflow; exp(inf)*0 would re-enter as NaN through the VJP of where.
+    diff = seg[:, :, :, None, :] - seg[:, :, None, :, :]         # (B,C,Q,Q,H)
+    causal = jnp.tril(jnp.ones((q, q), bool))
+    diff = jnp.where(causal[None, None, :, :, None], diff, -1e30)
+    L = jnp.exp(diff)
+    scores = jnp.einsum("bcthn,bcuhn->bctuh", Ch, Bh,
+                        preferred_element_type=F32)          # (B,C,Qt,Qu,H)
+    M = scores * L * dtc[:, :, None, :, :]
+    y_intra = jnp.einsum("bctuh,bcuhp->bcthp", M,
+                         xc.astype(F32), preferred_element_type=F32)
+
+    # ---- chunk summaries: state_c = sum_u exp(total - seg_u) dt_u B_u x_u
+    decay_out = jnp.exp(total[:, :, None, :] - seg)          # (B,C,Q,H)
+    BdtX = jnp.einsum("bcqhn,bcqh,bcqhp->bchnp", Bh,
+                      dtc * decay_out, xc.astype(F32),
+                      preferred_element_type=F32)            # (B,C,H,N,P)
+
+    # ---- inter-chunk associative scan over (log-decay, state) pairs:
+    # combining segments multiplies decays (adds logs) and carries
+    # state_right + state_left * decay_right.
+    def combine(left, right):
+        dl, sl = left
+        dr, sr = right
+        return dl + dr, sr + sl * jnp.exp(dr)[..., None, None]
+
+    cum_decay, cum_state = jax.lax.associative_scan(
+        combine, (total, BdtX), axis=1)
+    # state entering chunk i = cum_state[i-1]
+    zero_state = jnp.zeros_like(cum_state[:, :1])
+    prev_state = jnp.concatenate([zero_state, cum_state[:, :-1]], axis=1)
+
+    # ---- inter-chunk contribution: y_inter[t] = C_t exp(seg_t) prev_state
+    decay_in = jnp.exp(seg)                                  # (B,C,Q,H)
+    y_inter = jnp.einsum("bcqhn,bchnp,bcqh->bcqhp", Ch, prev_state,
+                         decay_in, preferred_element_type=F32)
+
+    y = (y_intra + y_inter).reshape(b, s, h, pp)
+    last_state = cum_state[:, -1]                            # (B,H,N,P)
+    return y, last_state
+
+
+def mamba2(p, x, cfg: Mamba2Config, use_pallas: bool = False,
+           return_cache: bool = False):
+    """Train/prefill forward. x: (B,S,D) -> (B,S,D).
+    return_cache: also return the decode cache (final SSM state + conv
+    tails) for prefill-then-decode serving."""
+    b, s, d = x.shape
+    z = jnp.einsum("bsd,de->bse", x, p["in_z"])
+    xh = jnp.einsum("bsd,de->bse", x, p["in_x"])
+    Bm = jnp.einsum("bsd,de->bse", x, p["in_B"])
+    Cm = jnp.einsum("bsd,de->bse", x, p["in_C"])
+    dt = jnp.einsum("bsd,dh->bsh", x, p["in_dt"],
+                    preferred_element_type=F32)
+    xh, cx = _causal_conv(xh, p["conv_x"])
+    Bm, cb = _causal_conv(Bm, p["conv_B"])
+    Cm, cc = _causal_conv(Cm, p["conv_C"])
+    xh = logical_constraint(xh, ("batch", "seq", "heads"))
+
+    h, pp, n, g = cfg.n_heads, cfg.head_dim, cfg.d_state, cfg.n_groups
+    xh = xh.reshape(b, s, h, pp)
+    Bm = Bm.reshape(b, s, g, n)
+    Cm = Cm.reshape(b, s, g, n)
+    dt = jax.nn.softplus(dt + p["dt_bias"][None, None, :])
+    A = -jnp.exp(p["A_log"])
+
+    y, last_state = _ssd_chunked(xh, dt, A, Bm, Cm, cfg)
+    y = y + xh.astype(F32) * p["D"][None, None, :, None]
+    y = y.reshape(b, s, h * pp).astype(x.dtype)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z.astype(F32)).astype(x.dtype))
+    out = jnp.einsum("bse,ed->bsd", y, p["out"],
+                     preferred_element_type=F32).astype(x.dtype)
+    out = logical_constraint(out, ("batch", "seq", "embed"))
+    if return_cache:
+        return out, {"state": last_state, "conv_x": cx, "conv_B": cb,
+                     "conv_C": cc}
+    return out
+
+
+# --------------------------------------------------------------------------
+# Decode (recurrent O(1) step)
+# --------------------------------------------------------------------------
+
+def init_mamba_cache(batch: int, cfg: Mamba2Config, dtype=jnp.bfloat16,
+                     abstract: bool = False):
+    h, pp, n, g = cfg.n_heads, cfg.head_dim, cfg.d_state, cfg.n_groups
+    di = h * pp
+    shapes = {
+        "state": ((batch, h, n, pp), F32),
+        "conv_x": ((batch, cfg.conv_width - 1, di), dtype),
+        "conv_B": ((batch, cfg.conv_width - 1, g * n), dtype),
+        "conv_C": ((batch, cfg.conv_width - 1, g * n), dtype),
+    }
+    if abstract:
+        return {k: jax.ShapeDtypeStruct(sh, dt) for k, (sh, dt)
+                in shapes.items()}
+    return {k: jnp.zeros(sh, dt) for k, (sh, dt) in shapes.items()}
+
+
+def mamba2_decode(p, x, cfg: Mamba2Config, cache: Dict[str, Any]):
+    """One-token step. x: (B,1,D); cache holds SSM state + conv tails."""
+    b = x.shape[0]
+    h, pp, n, g = cfg.n_heads, cfg.head_dim, cfg.d_state, cfg.n_groups
+    z = jnp.einsum("bsd,de->bse", x, p["in_z"])
+    xh = jnp.einsum("bsd,de->bse", x, p["in_x"])
+    Bm = jnp.einsum("bsd,de->bse", x, p["in_B"])
+    Cm = jnp.einsum("bsd,de->bse", x, p["in_C"])
+    dt = jnp.einsum("bsd,dh->bsh", x, p["in_dt"],
+                    preferred_element_type=F32)
+    xh, cx = _causal_conv(xh, p["conv_x"], cache["conv_x"])
+    Bm, cb = _causal_conv(Bm, p["conv_B"], cache["conv_B"])
+    Cm, cc = _causal_conv(Cm, p["conv_C"], cache["conv_C"])
+
+    xh = xh.reshape(b, h, pp)
+    xh = logical_constraint(xh, ("batch", "heads", None))
+    Bm = Bm.reshape(b, g, n)
+    Cm = Cm.reshape(b, g, n)
+    dt = jax.nn.softplus(dt[:, 0] + p["dt_bias"][None, :])    # (B,H)
+    dt = logical_constraint(dt, ("batch", "heads"))
+    A = -jnp.exp(p["A_log"])                                  # (H,)
+    rep = h // g
+    Bh = jnp.repeat(Bm, rep, axis=1).astype(F32)              # (B,H,N)
+    Ch = jnp.repeat(Cm, rep, axis=1).astype(F32)
+    # keep the head axis model-sharded through the state update — without
+    # these constraints XLA loses `heads` on the (B,H,N)/(B,H) repeats and
+    # all-gathers the (B,H,N,P) state per layer per token (§Perf pair 2)
+    Bh = logical_constraint(Bh, ("batch", "heads", None))
+    Ch = logical_constraint(Ch, ("batch", "heads", None))
+
+    decay = jnp.exp(A[None, :] * dt)                          # (B,H)
+    upd = jnp.einsum("bhn,bh,bhp->bhnp", Bh, dt, xh.astype(F32))
+    upd = logical_constraint(upd, ("batch", "heads", None, None))
+    state = cache["state"] * decay[..., None, None] + upd
+    state = logical_constraint(state, ("batch", "heads", None, None))
+    y = jnp.einsum("bhn,bhnp->bhp", Ch, state)                # (B,H,P)
+    y = y + xh.astype(F32) * p["D"][None, :, None]
+    y = y.reshape(b, 1, h * pp).astype(x.dtype)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z.astype(F32)).astype(x.dtype))
+    out = jnp.einsum("bse,ed->bsd", y, p["out"],
+                     preferred_element_type=F32).astype(x.dtype)
+    new_cache = {"state": state, "conv_x": cx, "conv_B": cb, "conv_C": cc}
+    return logical_constraint(out, ("batch", "seq", "embed")), new_cache

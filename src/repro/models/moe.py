@@ -1,0 +1,150 @@
+"""Mixture-of-Experts layer: top-k router + capacity-bounded dispatch.
+
+Dispatch design (TPU/SPMD-native):
+  * tokens are processed in ``groups`` independent dispatch groups that
+    line up with the data-parallel mesh axis — routing never crosses a
+    data shard (the all-to-all happens only across the expert/model axis),
+    exactly the communication pattern of expert parallelism.
+  * within a group, the position of each (token, choice) inside its
+    expert's capacity buffer comes from a stable argsort over expert ids
+    (O(T log T)) — NOT a cumulative one-hot sum: a (T*k, E) cumsum lowers
+    to a quadratic-cost reduce-window that both bloats real HBM traffic
+    and poisons HLO cost analysis.
+  * capacity-dropped tokens fall into a sentinel row; the combine gathers
+    each choice's slot and weights by the renormalized router probs.
+
+Expert weights carry the logical axis "experts" -> `model` mesh axis
+(expert parallelism = the paper's feature partition applied to the expert
+dimension). Router: softmax -> top-k -> renormalize over the selected k
+(granite/llama4 convention). Switch-style load-balance aux loss returned
+for the train objective.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import dense_init, logical_constraint
+from ..kernels import ops as kops
+
+F32 = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    d_model: int
+    d_ff: int                 # per-expert hidden
+    n_experts: int
+    top_k: int
+    capacity_factor: float = 1.25
+    activation: str = "swiglu"
+    groups: int = 1           # dispatch groups (= data-parallel degree)
+
+
+def init_moe(key, cfg: MoEConfig, dtype=jnp.bfloat16):
+    ks = jax.random.split(key, 4)
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    p = {
+        "router": dense_init(ks[0], (d, e), ("embed", "experts"), dtype,
+                             scale=d ** -0.5),
+        "wo": dense_init(ks[3], (e, f, d), ("experts", "expert_mlp",
+                                            "embed"), dtype),
+    }
+    if cfg.activation == "swiglu":
+        p["wi_gate"] = dense_init(ks[1], (e, d, f),
+                                  ("experts", "embed", "expert_mlp"), dtype)
+        p["wi_up"] = dense_init(ks[2], (e, d, f),
+                                ("experts", "embed", "expert_mlp"), dtype)
+    else:
+        p["wi"] = dense_init(ks[1], (e, d, f),
+                             ("experts", "embed", "expert_mlp"), dtype)
+    return p
+
+
+def _capacity(tokens: int, cfg: MoEConfig) -> int:
+    cap = int(tokens * cfg.top_k * cfg.capacity_factor / cfg.n_experts)
+    return max(8, -(-cap // 8) * 8)  # multiple of 8, at least 8
+
+
+def _dispatch_group(xt, top_e, cap: int, e: int, k: int):
+    """One dispatch group. xt: (T,D); top_e: (T,k) expert ids.
+    Returns (buckets (E,cap,D), slot (T*k,), keep (T*k,))."""
+    t, d = xt.shape
+    flat_e = top_e.reshape(-1)                                # (T*k,)
+    # stable sort by expert id; position within expert = sorted rank -
+    # expert segment start (first-come-first-served in token order).
+    order = jnp.argsort(flat_e, stable=True)
+    counts = jnp.zeros((e,), jnp.int32).at[flat_e].add(1)
+    starts = jnp.cumsum(counts) - counts                      # (E,) cheap
+    pos_sorted = jnp.arange(t * k, dtype=jnp.int32) - starts[flat_e[order]]
+    pos = jnp.zeros((t * k,), jnp.int32).at[order].set(pos_sorted)
+    keep = pos < cap
+    slot = flat_e * cap + jnp.where(keep, pos, 0)
+    # gather tokens into buckets (+1 sentinel row absorbs drops)
+    src = jnp.repeat(jnp.arange(t), k)
+    buckets = jnp.zeros((e * cap + 1, d), xt.dtype)
+    buckets = buckets.at[jnp.where(keep, slot, e * cap)].add(
+        jnp.where(keep[:, None], xt[src], 0).astype(xt.dtype))
+    return buckets[:-1].reshape(e, cap, d), slot, keep
+
+
+def moe(p, x, cfg: MoEConfig, use_pallas: bool = False
+        ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B,S,D) -> (y, aux_loss)."""
+    b, s, d = x.shape
+    t = b * s
+    e, k = cfg.n_experts, cfg.top_k
+    g = cfg.groups if t % cfg.groups == 0 else 1
+    tg = t // g
+    cap = _capacity(tg, cfg)
+
+    xt = x.reshape(g, tg, d)
+    xt = logical_constraint(xt, ("batch", None, "embed"))
+
+    router_logits = jnp.einsum("gtd,de->gte", xt, p["router"],
+                               preferred_element_type=F32)
+    probs = jax.nn.softmax(router_logits, axis=-1)            # (G,T,E) f32
+    top_w, top_e = jax.lax.top_k(probs, k)                    # (G,T,k)
+    top_w = top_w / jnp.maximum(jnp.sum(top_w, -1, keepdims=True), 1e-9)
+
+    # -- load-balance aux (Switch): E * sum_e f_e * P_e, averaged over groups
+    occupancy = jax.vmap(
+        lambda te: jnp.zeros((e,), F32).at[te.reshape(-1)].add(1.0)
+    )(top_e) / (tg * k)
+    aux = e * jnp.mean(jnp.sum(occupancy * jnp.mean(probs, axis=1), -1))
+
+    buckets, slot, keep = jax.vmap(
+        lambda xg, teg: _dispatch_group(xg, teg, cap, e, k))(xt, top_e)
+    # buckets: (G, E, cap, D) — experts sharded on model, groups on data
+    buckets = logical_constraint(buckets, ("batch", "experts", None,
+                                           "embed"))
+
+    # -- expert FFN (batched over groups x experts)
+    if cfg.activation == "swiglu":
+        h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", buckets, p["wi_gate"],
+                                   preferred_element_type=F32)) * \
+            jnp.einsum("gecd,edf->gecf", buckets, p["wi_up"],
+                       preferred_element_type=F32)
+    else:
+        h = jax.nn.gelu(jnp.einsum("gecd,edf->gecf", buckets, p["wi"],
+                                   preferred_element_type=F32))
+    h = logical_constraint(h.astype(x.dtype),
+                           ("batch", "experts", None, "expert_mlp"))
+    eo = jnp.einsum("gecf,efd->gecd", h, p["wo"],
+                    preferred_element_type=F32).astype(x.dtype)
+    eo = eo.reshape(g, e * cap, d)
+
+    # -- combine: each (token, choice) reads its slot
+    gathered = jax.vmap(lambda eog, sg, kg:
+                        jnp.where(kg[:, None], eog[sg], 0))(eo, slot, keep)
+    per_tok = gathered.reshape(g * tg, k, d)
+    w_flat = top_w.reshape(g * tg, k).astype(per_tok.dtype)
+    if use_pallas:
+        y = kops.moe_combine(per_tok, w_flat)
+    else:
+        y = jnp.einsum("tkd,tk->td", per_tok, w_flat)
+    y = y.reshape(b, s, d)
+    return logical_constraint(y, ("batch", "seq", "embed")), aux

@@ -1,0 +1,382 @@
+"""Decoder-only model assembly: layer patterns, scan-over-repeats, remat.
+
+An architecture is a repeating PATTERN of blocks (plus an optional
+unscanned remainder), e.g.
+    dense LM        : pattern [attn+mlp] x L
+    gemma3          : pattern [local x5, global x1] x 10  + 2 remainder
+    jamba           : pattern [attn, mamba x7] with moe on odd positions
+    mamba2          : pattern [mamba] x 48 (no FFN)
+Params for each pattern position are stacked over repeats (leading R dim)
+and the forward pass is a single ``lax.scan`` over R — HLO size stays
+O(pattern), not O(layers), which is what makes the 72-layer 398B dry-run
+compile tractable.
+
+Blocks are pre-norm residual:  x += mixer(norm(x));  x += ffn(norm(x)).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import Boxed, box, dense_init, logical_constraint
+from . import layers as L
+from .layers import AttnConfig, MLPConfig
+from .moe import MoEConfig, init_moe, moe
+from .mamba2 import (Mamba2Config, init_mamba2, init_mamba_cache, mamba2,
+                     mamba2_decode)
+
+F32 = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    kind: str                    # "attn" | "mamba"
+    ffn: str = "dense"           # "dense" | "moe" | "none"
+    window: Optional[int] = None  # sliding window (attn only)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int
+    pattern: Tuple[LayerSpec, ...]
+    attn: Optional[AttnConfig] = None
+    mlp: Optional[MLPConfig] = None
+    moe: Optional[MoEConfig] = None
+    mamba: Optional[Mamba2Config] = None
+    norm: str = "rmsnorm"                # rmsnorm | layernorm
+    prefix_lm: bool = False              # paligemma-style prefix attention
+    n_prefix: int = 0                    # prefix length (e.g. image patches)
+    scale_embed: bool = False            # gemma convention
+    learned_pos: int = 0                 # >0: learned abs positions (whisper)
+    dtype: Any = jnp.bfloat16
+    moe_aux_weight: float = 0.01
+    remat: str = "full"                  # none | dots | full
+    use_pallas: bool = False
+    scan_unroll: int = 1                 # lax.scan unroll (dry-run costing)
+    cache_dtype: Any = None              # KV-cache dtype override (e.g.
+                                         # f8_e4m3 quantized serving cache)
+    citation: str = ""
+
+    @property
+    def repeats(self) -> int:
+        return self.n_layers // len(self.pattern)
+
+    @property
+    def remainder(self) -> Tuple[LayerSpec, ...]:
+        return self.pattern[: self.n_layers % len(self.pattern)]
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+def _norm_init(cfg: ModelConfig):
+    return (L.init_rmsnorm(cfg.d_model, cfg.dtype) if cfg.norm == "rmsnorm"
+            else L.init_layernorm(cfg.d_model, cfg.dtype))
+
+
+def _norm_apply(cfg: ModelConfig, p, x):
+    return (L.rmsnorm(p, x) if cfg.norm == "rmsnorm"
+            else L.layernorm(p, x))
+
+
+def _attn_cfg(cfg: ModelConfig, spec: LayerSpec) -> AttnConfig:
+    return dataclasses.replace(cfg.attn, window=spec.window)
+
+
+def init_block(key, cfg: ModelConfig, spec: LayerSpec):
+    ks = jax.random.split(key, 4)
+    p: Dict[str, Any] = {"norm_mix": _norm_init(cfg)}
+    if spec.kind == "attn":
+        p["attn"] = L.init_attention(ks[0], _attn_cfg(cfg, spec), cfg.dtype)
+    else:
+        p["mamba"] = init_mamba2(ks[0], cfg.mamba, cfg.dtype)
+    if spec.ffn != "none":
+        p["norm_ffn"] = _norm_init(cfg)
+        if spec.ffn == "moe":
+            p["moe"] = init_moe(ks[1], cfg.moe, cfg.dtype)
+        else:
+            p["mlp"] = L.init_mlp(ks[1], cfg.mlp, cfg.dtype)
+    return p
+
+
+def init_params(key, cfg: ModelConfig):
+    """Returns a Boxed tree:
+       {embed, blocks: [per-pattern-position stacked over repeats],
+        rem_blocks: [...], final_norm}"""
+    k_emb, k_blocks, k_rem, k_fin = jax.random.split(key, 4)
+    params: Dict[str, Any] = {
+        "embed": L.init_embedding(k_emb, cfg.vocab, cfg.d_model, cfg.dtype),
+        "final_norm": _norm_init(cfg),
+    }
+    if cfg.learned_pos:
+        params["pos_embed"] = dense_init(
+            jax.random.fold_in(k_emb, 7), (cfg.learned_pos, cfg.d_model),
+            ("cache_seq", "embed"), cfg.dtype, scale=0.02)
+
+    r = cfg.repeats
+    blocks = []
+    for pos, spec in enumerate(cfg.pattern):
+        keys = jax.random.split(jax.random.fold_in(k_blocks, pos), r)
+        stacked = jax.vmap(lambda k: init_block(k, cfg, spec))(keys)
+        # vmap stacks leaves; prepend "layers" to the logical axes
+        stacked = jax.tree_util.tree_map(
+            lambda b: Boxed(b.value, ("layers",) + b.logical),
+            stacked, is_leaf=lambda x: isinstance(x, Boxed))
+        blocks.append(stacked)
+    params["blocks"] = blocks
+    params["rem_blocks"] = [
+        init_block(jax.random.fold_in(k_rem, i), cfg, spec)
+        for i, spec in enumerate(cfg.remainder)]
+    return params
+
+
+# --------------------------------------------------------------------------
+# forward (train / prefill)
+# --------------------------------------------------------------------------
+
+def _apply_block(cfg: ModelConfig, spec: LayerSpec, p, x, prefix_len,
+                 aux_acc):
+    h = _norm_apply(cfg, p["norm_mix"], x)
+    if spec.kind == "attn":
+        h = L.attention_train(p["attn"], h, _attn_cfg(cfg, spec),
+                              prefix_len=prefix_len)
+    else:
+        h = mamba2(p["mamba"], h, cfg.mamba, cfg.use_pallas)
+    x = x + h
+    if spec.ffn != "none":
+        h = _norm_apply(cfg, p["norm_ffn"], x)
+        if spec.ffn == "moe":
+            h, aux = moe(p["moe"], h, cfg.moe, cfg.use_pallas)
+            aux_acc = aux_acc + aux
+        else:
+            h = L.mlp(p["mlp"], h, cfg.mlp)
+        x = x + h
+    return x, aux_acc
+
+
+def _remat_policy(cfg: ModelConfig):
+    if cfg.remat == "none":
+        return None
+    if cfg.remat == "dots":
+        return jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+    return jax.checkpoint_policies.nothing_saveable
+
+
+def forward(params, cfg: ModelConfig, tokens, prefix_embeds=None):
+    """tokens: (B,S) int32; prefix_embeds: (B,P,D) (VLM/audio stub).
+    Returns (hidden (B,S',D), moe_aux) where S' = P + S."""
+    x = L.embed(params["embed"], tokens)
+    if cfg.scale_embed:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    if cfg.learned_pos:
+        s = x.shape[1]
+        x = x + params["pos_embed"][:s][None]
+    prefix_len = cfg.n_prefix if cfg.prefix_lm else None
+
+    def body_fn(x, block_slice):
+        aux = jnp.zeros((), F32)
+        for pos, spec in enumerate(cfg.pattern):
+            x, aux = _apply_block(cfg, spec, block_slice[pos], x,
+                                  prefix_len, aux)
+        return x, aux
+
+    policy = _remat_policy(cfg)
+    if policy is not None:
+        body_fn = jax.checkpoint(body_fn, policy=policy)
+
+    def scan_body(carry, block_slice):
+        return body_fn(carry, block_slice)
+
+    if cfg.repeats > 0:
+        x, auxs = jax.lax.scan(scan_body, x, params["blocks"],
+                               unroll=cfg.scan_unroll)
+        aux_total = jnp.sum(auxs)
+    else:
+        aux_total = jnp.zeros((), F32)
+    for p_blk, spec in zip(params["rem_blocks"], cfg.remainder):
+        x, aux_total = _apply_block(cfg, spec, p_blk, x, prefix_len,
+                                    aux_total)
+    x = _norm_apply(cfg, params["final_norm"], x)
+    return x, aux_total
+
+
+def lm_loss(params, cfg: ModelConfig, tokens, labels, prefix_embeds=None):
+    """Next-token CE over the token positions (prefix positions excluded)."""
+    hidden, aux = forward(params, cfg, tokens, prefix_embeds)
+    if prefix_embeds is not None:
+        hidden = hidden[:, prefix_embeds.shape[1]:, :]
+    ce = L.chunked_ce_loss(params["embed"], hidden, labels)
+    return ce + cfg.moe_aux_weight * aux, {"ce": ce, "moe_aux": aux}
+
+
+# --------------------------------------------------------------------------
+# prefill (forward that also primes the decode cache)
+# --------------------------------------------------------------------------
+
+def _apply_block_prefill(cfg, spec, p, x, prefix_len, aux_acc, max_seq):
+    kv_dtype = cfg.cache_dtype if cfg.cache_dtype is not None else cfg.dtype
+    h = _norm_apply(cfg, p["norm_mix"], x)
+    if spec.kind == "attn":
+        acfg = _attn_cfg(cfg, spec)
+        h, (k, v) = L.attention_train(p["attn"], h, acfg,
+                                      prefix_len=prefix_len,
+                                      return_kv=True)
+        cache = L.prime_attn_cache(k, v, acfg, max_seq, kv_dtype)
+    else:
+        h, cache = mamba2(p["mamba"], h, cfg.mamba, cfg.use_pallas,
+                          return_cache=True)
+    x = x + h
+    if spec.ffn != "none":
+        h = _norm_apply(cfg, p["norm_ffn"], x)
+        if spec.ffn == "moe":
+            h, aux = moe(p["moe"], h, cfg.moe, cfg.use_pallas)
+            aux_acc = aux_acc + aux
+        else:
+            h = L.mlp(p["mlp"], h, cfg.mlp)
+        x = x + h
+    return x, aux_acc, cache
+
+
+def prefill(params, cfg: ModelConfig, tokens, prefix_embeds=None,
+            max_seq: int = 0):
+    """Forward pass that also PRIMES the decode cache (prefill-then-decode
+    serving flow). Returns (last-token logits, cache)."""
+    x = L.embed(params["embed"], tokens)
+    if cfg.scale_embed:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    if cfg.learned_pos:
+        x = x + params["pos_embed"][:x.shape[1]][None]
+    s_total = x.shape[1]
+    max_seq = max_seq or s_total
+    assert max_seq >= s_total, "cache shorter than the prompt"
+    prefix_len = cfg.n_prefix if cfg.prefix_lm else None
+
+    def scan_body(carry, block_slice):
+        x = carry
+        aux = jnp.zeros((), F32)
+        caches = []
+        for pos, spec in enumerate(cfg.pattern):
+            x, aux, c = _apply_block_prefill(cfg, spec, block_slice[pos],
+                                             x, prefix_len, aux, max_seq)
+            caches.append(c)
+        return x, caches
+
+    if cfg.repeats > 0:
+        x, blocks_cache = jax.lax.scan(scan_body, x, params["blocks"],
+                                       unroll=cfg.scan_unroll)
+    else:
+        blocks_cache = []
+    rem_cache = []
+    aux = jnp.zeros((), F32)
+    for p_blk, spec in zip(params["rem_blocks"], cfg.remainder):
+        x, aux, c = _apply_block_prefill(cfg, spec, p_blk, x, prefix_len,
+                                         aux, max_seq)
+        rem_cache.append(c)
+    x = _norm_apply(cfg, params["final_norm"], x)
+    lg = L.logits(params["embed"], x[:, -1:, :])
+    return lg, {"blocks": blocks_cache, "rem_blocks": rem_cache}
+
+
+# --------------------------------------------------------------------------
+# decode (one token against a cache)
+# --------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
+               abstract: bool = False):
+    """Cache pytree mirroring the block structure; stacked over repeats."""
+    kv_dtype = cfg.cache_dtype if cfg.cache_dtype is not None else cfg.dtype
+
+    def one(spec: LayerSpec):
+        if spec.kind == "attn":
+            return L.init_attn_cache(batch, _attn_cfg(cfg, spec), max_seq,
+                                     kv_dtype, abstract=abstract)
+        return init_mamba_cache(batch, cfg.mamba, cfg.dtype,
+                                abstract=abstract)
+
+    def stack(tree, r):
+        if abstract:
+            return jax.tree_util.tree_map(
+                lambda s: jax.ShapeDtypeStruct((r,) + s.shape, s.dtype), tree)
+        return jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a[None], (r,) + a.shape), tree)
+
+    return {
+        "blocks": [stack(one(spec), cfg.repeats) for spec in cfg.pattern],
+        "rem_blocks": [one(spec) for spec in cfg.remainder],
+    }
+
+
+def _apply_block_decode(cfg: ModelConfig, spec: LayerSpec, p, x, cache):
+    h = _norm_apply(cfg, p["norm_mix"], x)
+    if spec.kind == "attn":
+        h, cache = L.attention_decode(p["attn"], h, _attn_cfg(cfg, spec),
+                                      cache, use_pallas=cfg.use_pallas)
+    else:
+        h, cache = mamba2_decode(p["mamba"], h, cfg.mamba, cache)
+    x = x + h
+    if spec.ffn != "none":
+        h = _norm_apply(cfg, p["norm_ffn"], x)
+        if spec.ffn == "moe":
+            h, _ = moe(p["moe"], h, cfg.moe, cfg.use_pallas)
+        else:
+            h = L.mlp(p["mlp"], h, cfg.mlp)
+        x = x + h
+    return x, cache
+
+
+def decode_step(params, cfg: ModelConfig, token, cache):
+    """token: (B,1) int32. Returns (logits (B,1,V), new_cache)."""
+    x = L.embed(params["embed"], token)
+    if cfg.scale_embed:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    if cfg.learned_pos:
+        # position from the first attn cache index
+        idx = _first_attn_index(cfg, cache)
+        x = x + params["pos_embed"][idx][None, None]
+
+    def scan_body(carry, inp):
+        x = carry
+        block_slice, cache_slice = inp
+        new_cache = []
+        for pos, spec in enumerate(cfg.pattern):
+            x, c = _apply_block_decode(cfg, spec, block_slice[pos],
+                                       x, cache_slice[pos])
+            new_cache.append(c)
+        return x, new_cache
+
+    if cfg.repeats > 0:
+        x, new_blocks = jax.lax.scan(scan_body, x,
+                                     (params["blocks"], cache["blocks"]),
+                                     unroll=cfg.scan_unroll)
+    else:
+        new_blocks = cache["blocks"]
+    new_rem = []
+    for p_blk, spec, c in zip(params["rem_blocks"], cfg.remainder,
+                              cache["rem_blocks"]):
+        x, c = _apply_block_decode(cfg, spec, p_blk, x, c)
+        new_rem.append(c)
+    x = _norm_apply(cfg, params["final_norm"], x)
+    lg = L.logits(params["embed"], x)
+    return lg, {"blocks": new_blocks, "rem_blocks": new_rem}
+
+
+def _first_attn_index(cfg: ModelConfig, cache):
+    for pos, spec in enumerate(cfg.pattern):
+        if spec.kind == "attn":
+            return cache["blocks"][pos]["index"][0]
+    for pos, spec in enumerate(cfg.remainder):
+        if spec.kind == "attn":
+            return cache["rem_blocks"][pos]["index"]
+    return jnp.zeros((), jnp.int32)

@@ -1,0 +1,5 @@
+from .adamw import adamw_init, adamw_update, OptConfig
+from .schedules import cosine_schedule, linear_warmup
+
+__all__ = ["adamw_init", "adamw_update", "OptConfig", "cosine_schedule",
+           "linear_warmup"]

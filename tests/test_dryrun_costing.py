@@ -1,0 +1,71 @@
+"""Calibration of the dry-run costing methodology.
+
+Two facts the roofline relies on, pinned by tests:
+  1. cost_analysis() of an SPMD-partitioned module reports PER-DEVICE
+     flops (a sharded matmul reports total/shards).
+  2. a lax.scan body is counted ONCE regardless of trip count, and the
+     two-point scan_unroll extrapolation recovers the full cost.
+Run in a subprocess so the 4-device flag doesn't leak.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import json
+import jax, jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+out = {}
+mesh = Mesh(np.array(jax.devices()).reshape(4), ("model",))
+M = N = K = 512
+a = jax.ShapeDtypeStruct((M, K), jnp.float32)
+b = jax.ShapeDtypeStruct((K, N), jnp.float32)
+jt = jax.jit(lambda a, b: a @ b,
+             in_shardings=(NamedSharding(mesh, P(None, None)),
+                           NamedSharding(mesh, P(None, "model"))))
+ca = jt.lower(a, b).compile().cost_analysis()
+out["matmul_flops"] = float(ca["flops"])
+out["matmul_expected_per_device"] = 2.0 * M * N * K / 4
+
+def scanned(x, ws, unroll):
+    def body(x, w):
+        return jnp.tanh(x @ w), None
+    y, _ = jax.lax.scan(body, x, ws, unroll=unroll)
+    return y
+
+x = jax.ShapeDtypeStruct((128, 256), jnp.float32)
+ws = jax.ShapeDtypeStruct((8, 256, 256), jnp.float32)
+fl = {}
+for u in (1, 2):
+    ca = jax.jit(lambda x, ws, u=u: scanned(x, ws, u)).lower(
+        x, ws).compile().cost_analysis()
+    fl[u] = float(ca["flops"])
+R, k = 8, 2
+out["scan_corrected"] = fl[1] + (R - 1) / (k - 1) * (fl[2] - fl[1])
+out["scan_expected"] = 2.0 * 128 * 256 * 256 * 8
+print(json.dumps(out))
+"""
+
+
+@pytest.mark.slow
+def test_costing_calibration():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    res = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=300)
+    assert res.returncode == 0, res.stderr[-2000:]
+    out = json.loads(res.stdout.strip().splitlines()[-1])
+    # (1) per-device semantics
+    assert out["matmul_flops"] == pytest.approx(
+        out["matmul_expected_per_device"], rel=0.01)
+    # (2) two-point scan correction recovers the full-trip cost (tanh
+    # transcendentals add a small constant; 5% slack)
+    assert out["scan_corrected"] == pytest.approx(out["scan_expected"],
+                                                  rel=0.05)

@@ -1,0 +1,75 @@
+"""Lemma 5 / Corollary 6 — numerical certification of the paper's
+one-coordinate-per-round information propagation."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.feasible_set import SpanOracle
+from repro.core.hard_instance import ChainInstance, chain_matrix
+from repro.core.partition import even_partition
+
+
+def _chain_oracle(d, kappa, lam, m):
+    c = lam * (kappa - 1) / 4
+    H = c * chain_matrix(d, kappa) + lam * np.eye(d)
+    b = np.zeros(d)
+    b[0] = c
+    return SpanOracle(H=H, b=b, part=even_partition(d, m))
+
+
+@pytest.mark.parametrize("m", [1, 2, 3, 4, 6])
+def test_corollary6_certified(m):
+    so = _chain_oracle(d=24, kappa=16.0, lam=1.0, m=m)
+    assert so.certify_corollary6(23)
+
+
+@given(m=st.integers(1, 5), kappa=st.floats(2.0, 400.0))
+@settings(max_examples=15, deadline=None)
+def test_corollary6_property(m, kappa):
+    so = _chain_oracle(d=20, kappa=kappa, lam=1.0, m=m)
+    assert so.certify_corollary6(19)
+
+
+def test_propagation_is_tight():
+    """The bound is achieved: support reaches coordinate k-1 at round k
+    (the span rules DO advance one coordinate per round)."""
+    so = _chain_oracle(d=16, kappa=25.0, lam=1.0, m=4)
+    for k in range(1, 16):
+        so.step()
+        sup = so.union_support()
+        assert sup.max() == k - 1, f"round {k}: support {sup}"
+
+
+def test_error_floor_holds_for_best_feasible_point():
+    """f(best point in W^(k)) - f* >= the paper's floor, for every k."""
+    d, kappa, lam = 40, 49.0, 1.0
+    ci = ChainInstance(d=d, kappa=kappa, lam=lam)
+    so = _chain_oracle(d, kappa, lam, m=4)
+    ws = np.asarray(ci.w_star())
+    fstar = float(ci.f_star())
+    import jax.numpy as jnp
+    for k in range(1, 30):
+        so.step()
+        best = so.best_point(ws)
+        gap = float(ci.value(jnp.asarray(best))) - fstar
+        floor = ci.error_floor(k)
+        if floor < 1e-5:      # below f32 resolution of f-values: stop
+            break
+        assert gap >= floor * (1 - 1e-5), (k, gap, floor)
+
+
+def test_separable_function_stays_blocked():
+    """On a block-diagonal H (Thm 4 instance), machine j's subspace stays
+    inside its own block and coordinate 1 of each block never appears
+    unless that block's linear term is nonzero."""
+    d, m = 12, 3
+    blk = np.array([[2.0, -1, 0, 0], [-1, 2, -1, 0], [0, -1, 2, -1],
+                    [0, 0, -1, 1.5]])
+    H = np.kron(np.eye(m), blk)
+    b = np.zeros(d)
+    b[0] = 1.0    # only machine 0's block is "seeded"
+    so = SpanOracle(H=H, b=b, part=even_partition(d, m))
+    for _ in range(8):
+        so.step()
+    sup = so.union_support()
+    assert sup.size and sup.max() <= 3  # never leaves block 0

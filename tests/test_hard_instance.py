@@ -1,0 +1,113 @@
+"""The Theorem-2/3/4 hard instances: exact solutions and proof quantities."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.hard_instance import (ChainInstance, SeparableInstance,
+                                      chain_matrix, tridiag_bands,
+                                      tridiag_matvec)
+from repro.core.bounds import (thm2_strongly_convex, thm3_smooth_convex,
+                               thm4_incremental, agd_upper_bound)
+
+
+def test_chain_matrix_structure():
+    A = chain_matrix(6, 25.0)
+    assert np.allclose(A, A.T)
+    assert np.allclose(np.diag(A)[:-1], 2.0)
+    assert A[5, 5] == pytest.approx((5 + 3) / (5 + 1))
+    evals = np.linalg.eigvalsh(A)
+    assert evals.min() > 0  # positive definite
+
+
+def test_bands_match_dense():
+    diag, off = tridiag_bands(8, 16.0)
+    A = chain_matrix(8, 16.0)
+    v = np.random.RandomState(0).randn(8)
+    np.testing.assert_allclose(tridiag_matvec(jnp.asarray(diag),
+                                              jnp.asarray(off),
+                                              jnp.asarray(v)),
+                               A @ v, atol=1e-5)
+
+
+@pytest.mark.parametrize("kappa", [4.0, 16.0, 100.0])
+def test_w_star_is_minimizer(kappa):
+    ci = ChainInstance(d=80, kappa=kappa, lam=0.5)
+    ws = ci.w_star()
+    g = ci.gradient(ws)
+    # gradient vanishes (up to the q^d boundary truncation the paper uses)
+    assert float(jnp.linalg.norm(g)) < 1e-3 * max(1.0, float(
+        jnp.linalg.norm(ws)))
+    # and perturbations increase f
+    f0 = float(ci.value(ws))
+    for seed in range(3):
+        dw = 0.01 * jax.random.normal(jax.random.PRNGKey(seed), (80,))
+        assert float(ci.value(ws + dw)) > f0
+
+
+def test_condition_number():
+    kappa, lam = 36.0, 0.7
+    ci = ChainInstance(d=40, kappa=kappa, lam=lam)
+    H = lam * (kappa - 1) / 4 * chain_matrix(40, kappa) + lam * np.eye(40)
+    evals = np.linalg.eigvalsh(H)
+    # paper: f is lam-strongly convex with condition number kappa; the
+    # chain construction approaches these as d grows (Nesterov bounds)
+    assert evals.min() >= lam - 1e-6
+    assert evals.max() <= kappa * lam + 1e-6
+
+
+def test_error_floor_decreasing_and_positive():
+    ci = ChainInstance(d=100, kappa=64.0, lam=1.0)
+    floors = [ci.error_floor(k) for k in range(0, 50, 5)]
+    assert all(f > 0 for f in floors)
+    assert all(a > b for a, b in zip(floors, floors[1:]))
+
+
+def test_lower_bound_rounds_scaling():
+    # Omega(sqrt(kappa) log(1/eps)): quadrupling kappa ~doubles the bound
+    r1 = thm2_strongly_convex(64.0, 1.0, 1.0, 1e-6).rounds
+    r2 = thm2_strongly_convex(256.0, 1.0, 1.0, 1e-6).rounds
+    assert 1.5 < r2 / r1 < 2.5
+    # and log eps scaling
+    r3 = thm2_strongly_convex(64.0, 1.0, 1.0, 1e-12).rounds
+    assert 1.5 < r3 / r1 < 2.5
+
+
+def test_thm3_scaling():
+    r1 = thm3_smooth_convex(1.0, 1.0, 1e-4).rounds
+    r2 = thm3_smooth_convex(1.0, 1.0, 1e-6).rounds
+    assert 8 < r2 / r1 < 12  # sqrt(1/eps): x100 eps -> x10 rounds
+
+
+def test_thm4_dominates_thm2():
+    # incremental bound has the extra n term
+    n, kappa = 64, 100.0
+    r_inc = thm4_incremental(n, kappa, 1.0, 1.0, 1e-8).rounds
+    r_non = thm2_strongly_convex(kappa, 1.0, 1.0, 1e-8).rounds
+    assert r_inc > r_non
+
+
+def test_upper_bounds_dominate_lower_bounds():
+    for kappa in [9.0, 100.0, 2500.0]:
+        lb = thm2_strongly_convex(kappa, 1.0, 1.0, 1e-8).rounds
+        ub = agd_upper_bound(kappa, 1.0, 1.0, 1e-8)
+        assert ub >= lb, (kappa, lb, ub)
+
+
+def test_separable_instance():
+    si = SeparableInstance(m=4, n=16, d_per_component=10, kappa=25.0)
+    ws = si.w_star()
+    assert ws.shape == (si.d,)
+    g = si.gradient(ws)
+    assert float(jnp.linalg.norm(g)) < 1e-3
+    assert si.lower_bound_rounds(1e-6) > 0
+
+
+def test_erm_embedding_matches_chain():
+    ci = ChainInstance(d=24, kappa=16.0, lam=0.3)
+    B, y, lam = ci.as_erm_data()
+    w = np.random.RandomState(1).randn(24)
+    f_erm = 0.5 * np.linalg.norm(B @ w - y) ** 2 + 0.5 * lam * w @ w
+    f_chain = float(ci.value(jnp.asarray(w)))
+    const = 0.5 * np.linalg.norm(y) ** 2
+    assert f_erm - const == pytest.approx(f_chain, abs=1e-4)

@@ -1,0 +1,94 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+
+TOL = {jnp.float32: dict(atol=2e-4, rtol=2e-4),
+       jnp.bfloat16: dict(atol=3e-2, rtol=3e-2)}
+
+
+@pytest.mark.parametrize("n,d", [(8, 8), (48, 64), (300, 200), (513, 129),
+                                 (1024, 512)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_feature_matvec_sweep(n, d, dtype):
+    k = jax.random.PRNGKey(n * 1000 + d)
+    A = jax.random.normal(k, (n, d)).astype(dtype)
+    w = jax.random.normal(jax.random.PRNGKey(1), (d,)).astype(dtype)
+    got = ops.feature_matvec(A, w)
+    want = ref.feature_matvec_ref(A, w)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **TOL[dtype])
+
+
+@pytest.mark.parametrize("n,d", [(16, 16), (96, 48), (257, 130)])
+@pytest.mark.parametrize("nrhs", [1, 3])
+def test_feature_rmatvec_sweep(n, d, nrhs):
+    k = jax.random.PRNGKey(7)
+    A = jax.random.normal(k, (n, d))
+    r = jax.random.normal(jax.random.PRNGKey(8), (n, nrhs))
+    r = r[:, 0] if nrhs == 1 else r
+    got = ops.feature_rmatvec(A, r)
+    want = ref.feature_rmatvec_ref(A, r) if nrhs == 1 else A.T @ r
+    np.testing.assert_allclose(got, want, atol=2e-4, rtol=2e-4)
+
+
+def test_batched_rhs_matches_loop():
+    k = jax.random.PRNGKey(3)
+    A = jax.random.normal(k, (64, 40))
+    W = jax.random.normal(jax.random.PRNGKey(4), (40, 5))
+    got = ops.feature_matvec(A, W)
+    for i in range(5):
+        np.testing.assert_allclose(got[:, i], A @ W[:, i], atol=2e-4,
+                                   rtol=2e-4)
+
+
+@given(d=st.integers(2, 600), seed=st.integers(0, 50))
+@settings(max_examples=25, deadline=None)
+def test_tridiag_property(d, seed):
+    k = jax.random.PRNGKey(seed)
+    diag = jax.random.normal(k, (d,))
+    off = jax.random.normal(jax.random.PRNGKey(seed + 1), (d - 1,))
+    v = jax.random.normal(jax.random.PRNGKey(seed + 2), (d,))
+    got = ops.tridiag_matvec(diag, off, v)
+    want = ref.tridiag_matvec_ref(diag, off, v)
+    np.testing.assert_allclose(got, want, atol=1e-4, rtol=1e-4)
+
+
+def test_tridiag_identity_and_shift():
+    d = 300
+    v = jax.random.normal(jax.random.PRNGKey(0), (d,))
+    # identity
+    got = ops.tridiag_matvec(jnp.ones(d), jnp.zeros(d - 1), v)
+    np.testing.assert_allclose(got, v, atol=1e-6)
+    # pure shift structure: diag=0, off=1 -> out[k] = v[k-1] + v[k+1]
+    got = ops.tridiag_matvec(jnp.zeros(d), jnp.ones(d - 1), v)
+    want = jnp.zeros(d).at[:-1].add(v[1:]).at[1:].add(v[:-1])
+    np.testing.assert_allclose(got, want, atol=1e-6)
+
+
+@pytest.mark.parametrize("t,k,d", [(5, 1, 16), (37, 4, 96), (256, 8, 64)])
+def test_moe_combine_sweep(t, k, d):
+    key = jax.random.PRNGKey(t)
+    x = jax.random.normal(key, (t, k, d))
+    w = jax.random.normal(jax.random.PRNGKey(k), (t, k))
+    got = ops.moe_combine(x, w)
+    want = ref.moe_combine_ref(x, w)
+    np.testing.assert_allclose(got, want, atol=2e-4, rtol=2e-4)
+
+
+def test_kernels_used_by_erm_path():
+    """ops wrappers compute the ERM round quantities correctly."""
+    from repro.core import make_random_erm
+    from repro.core.partition import even_partition
+    prob = make_random_erm(n=40, d=32, seed=0)
+    part = even_partition(32, 4)
+    w = jax.random.normal(jax.random.PRNGKey(5), (32,))
+    wjs = part.split_vector(w)
+    Ajs = part.split_columns(prob.A)
+    z = sum(ops.feature_matvec(Aj, wj) for Aj, wj in zip(Ajs, wjs))
+    np.testing.assert_allclose(z, prob.A @ w, atol=1e-4, rtol=1e-4)

@@ -1,0 +1,81 @@
+"""Property tests (hypothesis) for layer-level invariants."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.layers import (layernorm, rmsnorm, rope, init_rmsnorm,
+                                 init_layernorm)
+from repro.models.common import unbox
+
+
+@given(seed=st.integers(0, 50), scale=st.floats(0.1, 10.0))
+@settings(max_examples=20, deadline=None)
+def test_rmsnorm_scale_invariance(seed, scale):
+    """rmsnorm(c*x) == rmsnorm(x) for any c > 0."""
+    p, _ = unbox(init_rmsnorm(32, jnp.float32))
+    x = jax.random.normal(jax.random.PRNGKey(seed), (2, 4, 32))
+    np.testing.assert_allclose(rmsnorm(p, x * scale), rmsnorm(p, x),
+                               atol=1e-4, rtol=1e-3)
+
+
+@given(seed=st.integers(0, 50), shift=st.floats(-5.0, 5.0))
+@settings(max_examples=20, deadline=None)
+def test_layernorm_shift_invariance(seed, shift):
+    """layernorm(x + c) == layernorm(x) for any constant c."""
+    p, _ = unbox(init_layernorm(32, jnp.float32))
+    x = jax.random.normal(jax.random.PRNGKey(seed), (2, 4, 32))
+    np.testing.assert_allclose(layernorm(p, x + shift), layernorm(p, x),
+                               atol=1e-4, rtol=1e-3)
+
+
+@given(seed=st.integers(0, 30), offset=st.integers(0, 100))
+@settings(max_examples=15, deadline=None)
+def test_rope_relative_position_property(seed, offset):
+    """RoPE inner products depend only on RELATIVE position:
+    <rope(q, i), rope(k, j)> == <rope(q, i+c), rope(k, j+c)>."""
+    dh = 32
+    ks = jax.random.split(jax.random.PRNGKey(seed), 2)
+    q = jax.random.normal(ks[0], (1, 1, 1, dh))
+    k = jax.random.normal(ks[1], (1, 1, 1, dh))
+    pos_q = jnp.array([[3]])
+    pos_k = jnp.array([[11]])
+    dot1 = jnp.vdot(rope(q, pos_q), rope(k, pos_k))
+    dot2 = jnp.vdot(rope(q, pos_q + offset), rope(k, pos_k + offset))
+    np.testing.assert_allclose(dot1, dot2, atol=1e-3, rtol=1e-3)
+
+
+@given(seed=st.integers(0, 30))
+@settings(max_examples=10, deadline=None)
+def test_rope_norm_preservation(seed):
+    """RoPE is a rotation: it preserves vector norms."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (1, 5, 2, 64))
+    pos = jnp.arange(5)[None, :]
+    y = rope(x, pos)
+    np.testing.assert_allclose(jnp.linalg.norm(y, axis=-1),
+                               jnp.linalg.norm(x, axis=-1),
+                               atol=1e-4, rtol=1e-4)
+
+
+@given(m=st.integers(2, 6), kappa=st.floats(4.0, 256.0),
+       seed=st.integers(0, 20))
+@settings(max_examples=10, deadline=None)
+def test_algorithm_budget_property(m, kappa, seed):
+    """EVERY family algorithm respects the paper's O(n+d)/round budget,
+    for random machine counts and condition numbers."""
+    from repro.core import ChainInstance, ERMProblem, squared_loss
+    from repro.core.partition import even_partition
+    from repro.core.runtime import LocalDistERM
+    from repro.core.algorithms import dagd, disco_f
+    ci = ChainInstance(d=24, kappa=kappa, lam=0.5)
+    B, y, lam = ci.as_erm_data()
+    n = B.shape[0]
+    prob = ERMProblem(A=jnp.asarray(B) * np.sqrt(n),
+                      y=jnp.asarray(y) * np.sqrt(n),
+                      loss=squared_loss(), lam=lam)
+    L = prob.smoothness_bound()
+    for algo in (dagd, disco_f):
+        dist = LocalDistERM(prob, even_partition(prob.d, m))
+        algo(dist, rounds=10, L=L, lam=lam)
+        dist.comm.ledger.assert_budget(n=prob.n, d=prob.d)

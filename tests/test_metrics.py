@@ -1,0 +1,37 @@
+"""Metrics substrate: JSONL logging, EMA, timer percentiles."""
+import json
+import time
+
+from repro.metrics import MetricsLogger, StepTimer
+
+
+def test_jsonl_roundtrip(tmp_path):
+    lg = MetricsLogger(str(tmp_path), tokens_per_step=100)
+    for s in range(5):
+        lg.log(s, {"loss": 2.0 - 0.1 * s})
+    lg.close()
+    lines = [json.loads(l) for l in
+             open(tmp_path / "metrics.jsonl").read().splitlines()]
+    assert len(lines) == 5
+    assert lines[-1]["loss"] == 1.6
+    assert lines[0]["step"] == 0
+
+
+def test_ema_smoothing():
+    lg = MetricsLogger(None, ema=0.5)
+    lg.log(0, {"loss": 4.0})
+    out = lg.log(1, {"loss": 0.0})
+    assert out["loss"] == 2.0
+    line = lg.line(1, 0.01)
+    assert "loss 2.0000" in line
+
+
+def test_timer_excludes_warmup():
+    t = StepTimer(warmup=1)
+    for _ in range(4):
+        t.start()
+        time.sleep(0.01)
+        t.stop()
+    s = t.summary()
+    assert s["steps_timed"] == 3
+    assert 0.005 < s["p50_s"] < 0.1

@@ -1,0 +1,134 @@
+"""Per-architecture smoke tests (reduced same-family configs, CPU).
+
+For each of the 10 assigned archs: one forward/train step asserting
+output shapes + finite values, and one decode step against a cache.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import canonical_ids, get
+from repro.models.common import unbox
+from repro.models import transformer as T
+from repro.models import encdec as E
+from repro.launch.steps import is_encdec, make_serve_step, make_train_step
+from repro.optim import adamw_init
+
+ARCHS = canonical_ids()
+B, S = 2, 64
+
+
+def _lm_batch(cfg, key):
+    n_prefix = cfg.n_prefix if cfg.prefix_lm else 0
+    tokens = jax.random.randint(key, (B, S - n_prefix), 0, cfg.vocab)
+    batch = {"tokens": tokens, "labels": jnp.zeros_like(tokens)}
+    if n_prefix:
+        batch["prefix_embeds"] = jax.random.normal(
+            key, (B, n_prefix, cfg.d_model)).astype(cfg.dtype)
+    return batch
+
+
+def _encdec_batch(cfg, key):
+    tokens = jax.random.randint(key, (B, 32), 0, cfg.vocab)
+    return {
+        "frames": jax.random.normal(
+            key, (B, cfg.n_frames, cfg.d_model)).astype(cfg.dtype),
+        "tokens": tokens, "labels": jnp.zeros_like(tokens),
+    }
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_train_step(arch):
+    mod = get(arch)
+    cfg = mod.smoke()
+    key = jax.random.PRNGKey(0)
+    if is_encdec(cfg):
+        params, _ = unbox(E.init_params(key, cfg))
+        batch = _encdec_batch(cfg, key)
+    else:
+        params, _ = unbox(T.init_params(key, cfg))
+        batch = _lm_batch(cfg, key)
+    opt = adamw_init(params)
+    step = jax.jit(make_train_step(cfg))
+    new_params, new_opt, metrics = step(params, opt, batch)
+    assert jnp.isfinite(metrics["loss"]), arch
+    assert jnp.isfinite(metrics["grad_norm"]), arch
+    # params actually changed
+    leaves_old = jax.tree_util.tree_leaves(params)
+    leaves_new = jax.tree_util.tree_leaves(new_params)
+    assert any(
+        not jnp.array_equal(a, b) for a, b in zip(leaves_old, leaves_new))
+    # no NaNs anywhere in the updated tree
+    assert all(jnp.all(jnp.isfinite(l.astype(jnp.float32)))
+               for l in leaves_new if l.dtype != jnp.int32)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_decode_step(arch):
+    mod = get(arch)
+    cfg = mod.smoke()
+    key = jax.random.PRNGKey(1)
+    if is_encdec(cfg):
+        params, _ = unbox(E.init_params(key, cfg))
+        cache = E.init_cache(cfg, B, 32)
+    else:
+        params, _ = unbox(T.init_params(key, cfg))
+        cache = T.init_cache(cfg, B, 32)
+    serve = jax.jit(make_serve_step(cfg))
+    tok = jnp.zeros((B, 1), jnp.int32)
+    for _ in range(3):
+        tok, cache = serve(params, tok, cache)
+    assert tok.shape == (B, 1)
+    assert jnp.all((tok >= 0) & (tok < cfg.vocab))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_config_matches_assignment(arch):
+    """The full() configs carry the exact assigned hyperparameters."""
+    spec = {
+        "granite-moe-1b-a400m": dict(L=24, d=1024, H=16, kv=8, V=49155),
+        "whisper-large-v3": dict(L=32, d=1280, H=20, kv=20, V=51866),
+        "jamba-1-5-large-398b": dict(L=72, d=8192, H=64, kv=8, V=65536),
+        "mamba2-780m": dict(L=48, d=1536, V=50280),
+        "qwen1-5-32b": dict(L=64, d=5120, H=40, kv=40, V=152064),
+        "stablelm-12b": dict(L=40, d=5120, H=32, kv=8, V=100352),
+        "paligemma-3b": dict(L=18, d=2048, H=8, kv=1, V=257216),
+        "gemma3-27b": dict(L=62, d=5376, H=32, kv=16, V=262144),
+        "starcoder2-15b": dict(L=40, d=6144, H=48, kv=4, V=49152),
+        "llama4-maverick-400b-a17b": dict(L=48, d=5120, H=40, kv=8,
+                                          V=202048),
+    }[arch]
+    cfg = get(arch).full()
+    assert cfg.vocab == spec["V"]
+    assert cfg.d_model == spec["d"]
+    if is_encdec(cfg):
+        assert cfg.n_enc_layers == spec["L"]
+        assert cfg.n_dec_layers == spec["L"]
+        assert cfg.attn.n_heads == spec["H"]
+    else:
+        assert cfg.n_layers == spec["L"]
+        if "H" in spec:
+            assert cfg.attn.n_heads == spec["H"]
+            assert cfg.attn.n_kv_heads == spec["kv"]
+    assert cfg.citation
+
+
+def test_moe_expert_counts():
+    assert get("granite-moe-1b-a400m").full().moe.n_experts == 32
+    assert get("granite-moe-1b-a400m").full().moe.top_k == 8
+    assert get("jamba-1.5-large-398b").full().moe.n_experts == 16
+    assert get("jamba-1.5-large-398b").full().moe.top_k == 2
+    assert get("llama4-maverick-400b-a17b").full().moe.n_experts == 128
+    assert get("llama4-maverick-400b-a17b").full().moe.top_k == 1
+
+
+def test_pattern_structure():
+    jamba = get("jamba-1.5-large-398b").full()
+    assert len(jamba.pattern) == 8
+    kinds = [s.kind for s in jamba.pattern]
+    assert kinds.count("attn") == 1 and kinds.count("mamba") == 7
+    gem = get("gemma3-27b").full()
+    assert len(gem.pattern) == 6
+    wins = [s.window for s in gem.pattern]
+    assert wins.count(None) == 1  # 5 local : 1 global
+    assert gem.repeats == 10 and len(gem.remainder) == 2

@@ -1,0 +1,89 @@
+"""Substrate: optimizer, schedules, data pipeline, checkpointing."""
+import os
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.optim import (OptConfig, adamw_init, adamw_update,
+                         cosine_schedule, linear_warmup)
+from repro.data import TokenDataConfig, frame_stub, patch_stub, \
+    synthetic_lm_batches
+from repro.checkpoint import latest_step, restore_checkpoint, \
+    save_checkpoint
+
+
+def test_adamw_minimizes_quadratic():
+    params = {"w": jnp.array([5.0, -3.0]), "b": jnp.array(2.0)}
+    opt = adamw_init(params)
+    cfg = OptConfig(lr=0.1, weight_decay=0.0, grad_clip=0.0)
+
+    def loss(p):
+        return jnp.sum(p["w"] ** 2) + p["b"] ** 2
+
+    for _ in range(200):
+        grads = jax.grad(loss)(params)
+        params, opt, gnorm = adamw_update(params, grads, opt, cfg)
+    assert float(loss(params)) < 1e-3
+    assert int(opt["step"]) == 200
+
+
+def test_adamw_bf16_params_f32_moments():
+    params = {"w": jnp.ones((4,), jnp.bfloat16)}
+    opt = adamw_init(params)
+    assert opt["m"]["w"].dtype == jnp.float32
+    grads = {"w": jnp.ones((4,), jnp.bfloat16)}
+    new_params, opt, _ = adamw_update(params, grads, opt, OptConfig())
+    assert new_params["w"].dtype == jnp.bfloat16
+
+
+def test_grad_clip():
+    params = {"w": jnp.zeros((3,))}
+    opt = adamw_init(params)
+    big = {"w": jnp.full((3,), 1e6)}
+    _, _, gnorm = adamw_update(params, big, opt,
+                               OptConfig(grad_clip=1.0))
+    assert float(gnorm) > 1e5  # reported raw norm
+
+
+def test_schedules():
+    assert float(linear_warmup(0, 10, 1.0)) == pytest.approx(0.1)
+    assert float(linear_warmup(100, 10, 1.0)) == 1.0
+    peak = cosine_schedule(10, 10, 110, 3e-4)
+    end = cosine_schedule(110, 10, 110, 3e-4)
+    assert float(peak) == pytest.approx(3e-4, rel=0.01)
+    assert float(end) == pytest.approx(3e-5, rel=0.05)
+
+
+def test_lm_pipeline_learnable_structure():
+    cfg = TokenDataConfig(vocab=64, seq_len=32, batch=4, seed=0)
+    it = synthetic_lm_batches(cfg)
+    b1 = next(it)
+    assert b1["tokens"].shape == (4, 32)
+    assert b1["labels"].shape == (4, 32)
+    # labels are next-token shifted
+    np.testing.assert_array_equal(b1["tokens"][:, 1:], b1["labels"][:, :-1])
+    # bigram structure: successor repeats far above chance
+    toks = np.asarray(b1["tokens"]).reshape(-1)
+    labs = np.asarray(b1["labels"]).reshape(-1)
+    # can't know succ table here; just check determinism across seeds
+    b2 = next(synthetic_lm_batches(cfg))
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+
+
+def test_stubs():
+    f = frame_stub(2, 10, 16)
+    p = patch_stub(3, 4, 8)
+    assert f.shape == (2, 10, 16) and p.shape == (3, 4, 8)
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(6).reshape(2, 3).astype(jnp.float32),
+            "nested": {"b": jnp.ones((4,), jnp.bfloat16)}}
+    d = str(tmp_path)
+    save_checkpoint(d, 7, tree)
+    assert latest_step(d) == 7
+    like = jax.tree_util.tree_map(jnp.zeros_like, tree)
+    restored = restore_checkpoint(d, 7, like)
+    np.testing.assert_array_equal(restored["a"], tree["a"])
+    assert restored["nested"]["b"].dtype == jnp.bfloat16

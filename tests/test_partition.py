@@ -1,0 +1,65 @@
+"""Feature-partition bookkeeping invariants (unit + property)."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.partition import FeaturePartition, even_partition
+
+
+@given(d=st.integers(1, 200), m=st.integers(1, 16))
+@settings(max_examples=50, deadline=None)
+def test_even_partition_covers(d, m):
+    if d < m:
+        with pytest.raises(ValueError):
+            even_partition(d, m)
+        return
+    part = even_partition(d, m)
+    assert sum(part.block_sizes) == d
+    assert part.m == m
+    # blocks are contiguous, disjoint, complete
+    seen = []
+    for j in range(m):
+        seen.extend(list(part.coords(j)))
+    assert seen == list(range(d))
+
+
+@given(d=st.integers(2, 100), m=st.integers(1, 8), seed=st.integers(0, 99))
+@settings(max_examples=30, deadline=None)
+def test_split_concat_roundtrip(d, m, seed):
+    if d < m:
+        return
+    part = even_partition(d, m)
+    rng = np.random.RandomState(seed)
+    w = jnp.asarray(rng.randn(d))
+    blocks = part.split_vector(w)
+    assert np.allclose(part.concat_blocks(blocks), w)
+    stacked = part.pad_blocks(blocks)
+    assert stacked.shape == (m, part.d_max)
+    unpadded = part.unpad_blocks(stacked)
+    assert np.allclose(part.concat_blocks(unpadded), w)
+
+
+def test_owner():
+    part = FeaturePartition(d=10, block_sizes=(3, 3, 4))
+    assert [part.owner(i) for i in range(10)] == \
+        [0, 0, 0, 1, 1, 1, 2, 2, 2, 2]
+
+
+def test_column_split_matches_matmul():
+    rng = np.random.RandomState(0)
+    A = jnp.asarray(rng.randn(7, 12))
+    w = jnp.asarray(rng.randn(12))
+    part = even_partition(12, 5)
+    Ajs = part.split_columns(A)
+    wjs = part.split_vector(w)
+    z = sum(Aj @ wj for Aj, wj in zip(Ajs, wjs))
+    assert np.allclose(z, A @ w, atol=1e-6)
+
+
+def test_mask_marks_padding():
+    part = FeaturePartition(d=7, block_sizes=(4, 3))
+    m = np.asarray(part.mask())
+    assert m.shape == (2, 4)
+    assert m[0].tolist() == [1, 1, 1, 1]
+    assert m[1].tolist() == [1, 1, 1, 0]

@@ -1,0 +1,51 @@
+"""LocalDistERM vs ShardedDistERM (shard_map) parity — run in a
+subprocess so the 8-device XLA flag doesn't leak into other tests."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import jax, jax.numpy as jnp
+from repro.core import CommLedger, make_random_erm
+from repro.core.partition import even_partition
+from repro.core.runtime import LocalDistERM, run_sharded
+from repro.core.algorithms import dagd, dgd, disco_f
+
+prob = make_random_erm(n=32, d=48, loss="squared", lam=0.05, seed=4)
+L = prob.smoothness_bound()
+part = even_partition(48, 8)
+out = {}
+for name, algo in [("dgd", dgd), ("dagd", dagd), ("disco_f", disco_f)]:
+    w_sh, led = run_sharded(prob, lambda d_, r: algo(d_, r, L=L,
+                                                     lam=prob.lam),
+                            rounds=25)
+    dist = LocalDistERM(prob, part)
+    w_lo = dist.gather_w(algo(dist, 25, L=L, lam=prob.lam))
+    out[name] = {
+        "max_diff": float(jnp.max(jnp.abs(w_sh - w_lo))),
+        "sharded_ops": led.op_counts(),
+        "local_ops": dist.comm.ledger.op_counts(),
+    }
+print(json.dumps(out))
+"""
+
+
+@pytest.mark.slow
+def test_shard_map_parity():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    res = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert res.returncode == 0, res.stderr[-3000:]
+    out = json.loads(res.stdout.strip().splitlines()[-1])
+    for name, rec in out.items():
+        assert rec["max_diff"] < 1e-4, (name, rec)
+        # identical communication structure per round (trace-time count
+        # for sharded == per-round python count for local)
+        assert set(rec["sharded_ops"]) == set(rec["local_ops"]), name
