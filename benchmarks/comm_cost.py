@@ -1,35 +1,35 @@
 """Communication-cost comparison: partition-on-feature (this paper) vs
 partition-on-sample (Arjevani-Shamir [1]) per-round budgets.
 
-Feature partition rounds are MEASURED from the CommLedger of a real DAGD
-run; the sample-partition figure is the model O(m d) bits/round that [1]
-allows (each machine broadcasts an R^d iterate). The derived column shows
-the ratio — the paper's motivating observation that feature partition
-wins when d >> n."""
+Thin CLI wrapper over the ``repro.experiments`` sweep subsystem (preset
+``comm-cost``, fixed-rounds mode). Feature-partition rounds are MEASURED
+from the CommLedger of a real DAGD run; the sample-partition figure is
+the model O(m d) bits/round that [1] allows (each machine broadcasts an
+R^d iterate). The derived column shows the ratio — the paper's motivating
+observation that feature partition wins when d >> n.
+
+Full JSON + Markdown reports: ``python -m repro.experiments.sweep
+--preset comm-cost``.
+"""
 from __future__ import annotations
 
-import jax.numpy as jnp
+from repro.experiments import PRESETS, run_sweep
 
-from repro.core import make_random_erm
-from repro.core.partition import even_partition
-from repro.core.runtime import LocalDistERM
-from repro.core.algorithms import dagd
 from .common import emit
 
 
-def run(m: int = 8):
-    for (n, d) in ((256, 64), (64, 256), (64, 4096)):
-        prob = make_random_erm(n=n, d=d, seed=1)
-        part = even_partition(d, m)
-        dist = LocalDistERM(prob, part)
-        L = prob.smoothness_bound()
-        dagd(dist, rounds=20, L=L, lam=prob.lam)
-        led = dist.comm.ledger
-        feature_bytes = led.bytes_per_round()
-        sample_bytes = m * d * 4        # [1]'s per-round broadcast budget
+def run():
+    result = run_sweep(PRESETS["comm-cost"])
+    for r in result.records:
+        n = int(r.instance_params["n"])
+        d = int(r.instance_params["d"])
+        feature = r.bytes_per_round
+        sample = r.sample_model_bytes_per_round
         emit(f"comm_cost/n{n}_d{d}/feature_bytes_per_round",
-             f"{feature_bytes:.0f}",
-             f"sample_model={sample_bytes};ratio={sample_bytes/max(feature_bytes,1):.1f}x")
+             f"{feature:.0f}",
+             f"sample_model={sample:.0f};"
+             f"ratio={sample / max(feature, 1):.1f}x")
+    return result
 
 
 if __name__ == "__main__":

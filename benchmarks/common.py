@@ -1,38 +1,16 @@
-"""Shared benchmark utilities."""
+"""Shared benchmark utilities.
+
+Rounds-to-eps measurement and the hard-instance ERM embeddings moved to
+``repro.experiments`` (sweep/_run_cell and instances.chain_erm); the
+theorem benchmarks are thin wrappers over that subsystem now.
+"""
 from __future__ import annotations
 
 import time
-from typing import Callable, List
+from typing import Callable
 
 import numpy as np
 import jax
-import jax.numpy as jnp
-
-from repro.core import ChainInstance, ERMProblem, squared_loss
-from repro.core.partition import even_partition
-from repro.core.runtime import LocalDistERM
-
-
-def chain_erm(d: int, kappa: float, lam: float):
-    """Hard instance as an ERM problem (exact embedding)."""
-    ci = ChainInstance(d=d, kappa=kappa, lam=lam)
-    B, y, lam_ = ci.as_erm_data()
-    n = B.shape[0]
-    prob = ERMProblem(A=jnp.asarray(B) * np.sqrt(n),
-                      y=jnp.asarray(y) * np.sqrt(n),
-                      loss=squared_loss(), lam=lam_)
-    return ci, prob
-
-
-def rounds_to_eps(prob, part, algo, eps: float, fstar: float,
-                  max_rounds: int, **algo_kw):
-    """Measured communication rounds to reach f - f* <= eps."""
-    dist = LocalDistERM(prob, part)
-    _, aux = algo(dist, rounds=max_rounds, history=True, **algo_kw)
-    for k, w in enumerate(aux["iterates"], start=1):
-        if float(prob.value(dist.gather_w(w))) - fstar <= eps:
-            return k, dist.comm.ledger
-    return None, dist.comm.ledger
 
 
 def timeit(fn: Callable, n_iter: int = 20, warmup: int = 3) -> float:

@@ -2,28 +2,29 @@
 bounds: Theorems 2-4 hold FOR ANY m, and the matching algorithms' round
 counts are m-independent (communication rounds don't degrade as the
 feature partition spreads wider). Measured: DAGD rounds-to-eps across
-m in {1, 2, 4, 8} at fixed kappa must be constant."""
+m in {1, 2, 4, 8} at fixed kappa must be constant.
+
+Thin CLI wrapper over the ``repro.experiments`` sweep subsystem (preset
+``m-invariance``)."""
 from __future__ import annotations
 
-import jax.numpy as jnp
+from repro.experiments import PRESETS, run_sweep
 
-from repro.core.partition import even_partition
-from repro.core.algorithms import dagd
-from .common import chain_erm, emit, rounds_to_eps
+from .common import emit
 
 
-def run(kappa: float = 64.0, d: int = 128, eps: float = 1e-6):
-    ci, prob = chain_erm(d, kappa, lam=0.5)
-    fstar = float(prob.value(jnp.asarray(ci.w_star())))
-    L = prob.smoothness_bound()
+def run():
+    result = run_sweep(PRESETS["m-invariance"])
     base = None
-    for m in (1, 2, 4, 8):
-        part = even_partition(prob.d, m)
-        k, led = rounds_to_eps(prob, part, dagd, eps, fstar,
-                               max_rounds=1500, L=L, lam=prob.lam)
-        base = base or k
-        emit(f"m_invariance/m{m}/dagd/rounds_to_eps", k,
-             f"vs_m1={k/base:.3f};bytes_per_round={led.bytes_per_round():.0f}")
+    for r in result.records:
+        m = int(r.instance_params["m"])
+        k = r.measured_rounds if r.measured_rounds is not None else -1
+        if base is None and k > 0:
+            base = k
+        ratio = k / base if (k > 0 and base) else float("nan")
+        emit(f"m_invariance/m{m}/{r.algorithm}/rounds_to_eps", k,
+             f"vs_m1={ratio:.3f};bytes_per_round={r.bytes_per_round:.0f}")
+    return result
 
 
 if __name__ == "__main__":

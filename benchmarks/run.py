@@ -1,17 +1,47 @@
 """Benchmark harness — one function per paper claim/table.
 
-Prints ``name,us_per_call,derived`` CSV rows:
+Default mode prints ``name,us_per_call,derived`` CSV rows:
   thm2_rounds      — Theorem 2 tightness (rounds vs lower bound, x kappa)
   thm3_rounds      — Theorem 3 (smooth convex)
   thm4_incremental — Theorem 4 (incremental family, x n)
+  m_invariance     — round counts constant across machine counts
   comm_cost        — feature- vs sample-partition per-round bytes
   kernel_bench     — Pallas/jnp hot-loop microbenchmarks
   roofline         — dry-run roofline terms per (arch x shape x mesh)
+
+The theorem rows are thin wrappers over ``repro.experiments``; pass
+``--sweeps`` to additionally write the full JSON + Markdown reports to
+``docs/results/`` (equivalent to ``python -m repro.experiments.sweep
+--preset all``), or ``--sweep NAME`` for a single preset.
 """
 from __future__ import annotations
 
+import argparse
+import sys
+from typing import Optional, Sequence
 
-def main() -> None:
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    parser = argparse.ArgumentParser(prog="python -m benchmarks.run")
+    parser.add_argument("--sweeps", action="store_true",
+                        help="run every sweep preset and write reports "
+                             "under docs/results/")
+    parser.add_argument("--sweep", action="append", default=[],
+                        help="run one named sweep preset (repeatable)")
+    parser.add_argument("--out", default=None,
+                        help="report directory (default docs/results)")
+    args = parser.parse_args(argv)
+
+    if args.sweeps or args.sweep:
+        from repro.experiments.sweep import main as sweep_main
+        presets = ["all"] if args.sweeps else args.sweep
+        sweep_argv = []
+        for p in presets:
+            sweep_argv += ["--preset", p]
+        if args.out:
+            sweep_argv += ["--out", args.out]
+        return sweep_main(sweep_argv)
+
     print("name,us_per_call,derived")
     from . import (comm_cost, kernel_bench, m_invariance,
                    moe_dispatch_ablation, roofline, thm2_rounds,
@@ -24,7 +54,8 @@ def main() -> None:
     kernel_bench.run()
     moe_dispatch_ablation.run()
     roofline.run()
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

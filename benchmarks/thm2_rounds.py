@@ -1,35 +1,30 @@
 """Theorem 2 (strongly convex): measured rounds-to-eps vs the lower bound.
 
-One row per (kappa, algorithm): the tightness table of the paper's main
-result. derived column = measured_rounds / lower_bound (constant factor;
-tight iff bounded as kappa grows).
+Thin CLI wrapper over the ``repro.experiments`` sweep subsystem (preset
+``thm2``): one row per (kappa, algorithm) — the tightness table of the
+paper's main result. derived column = measured_rounds / lower_bound
+(constant factor; tight iff bounded as kappa grows).
+
+Full JSON + Markdown reports: ``python -m repro.experiments.sweep
+--preset thm2``.
 """
 from __future__ import annotations
 
-import numpy as np
-import jax.numpy as jnp
+from repro.experiments import PRESETS, run_sweep
 
-from repro.core.bounds import thm2_strongly_convex
-from repro.core.partition import even_partition
-from repro.core.algorithms import dagd, dgd, disco_f
-from .common import chain_erm, emit, rounds_to_eps, timeit
+from .common import emit
 
 
-def run(eps: float = 1e-6, d: int = 160, lam: float = 0.5, m: int = 4):
-    for kappa in (16.0, 64.0, 256.0):
-        ci, prob = chain_erm(d, kappa, lam)
-        part = even_partition(prob.d, m)
-        fstar = float(prob.value(jnp.asarray(ci.w_star())))
-        L = prob.smoothness_bound()
-        wstar_norm = float(jnp.linalg.norm(ci.w_star()))
-        lb = thm2_strongly_convex(kappa, lam, wstar_norm, eps).rounds
-        for name, algo in (("dagd", dagd), ("dgd", dgd),
-                           ("disco_f", disco_f)):
-            k, led = rounds_to_eps(prob, part, algo, eps, fstar,
-                                   max_rounds=3000, L=L, lam=lam)
-            ratio = (k / lb) if (k and lb) else float("nan")
-            emit(f"thm2/kappa{int(kappa)}/{name}/rounds_to_eps",
-                 k if k else -1, f"lb={lb:.1f};ratio={ratio:.2f}")
+def run():
+    result = run_sweep(PRESETS["thm2"])
+    for r in result.records:
+        kappa = int(r.instance_params["kappa"])
+        k = r.measured_rounds if r.measured_rounds is not None else -1
+        lb = r.bound_rounds
+        ratio = r.ratio if r.ratio is not None else float("nan")
+        emit(f"thm2/kappa{kappa}/{r.algorithm}/rounds_to_eps", k,
+             f"lb={lb:.1f};ratio={ratio:.2f}")
+    return result
 
 
 if __name__ == "__main__":

@@ -1,59 +1,29 @@
 """Theorem 3 (smooth convex, lam = 0): rounds-to-eps vs the lower bound.
 
-Hard instance: Nesterov's smooth chain f(w) = L/4 (1/2 w^T A w - <e1, w>)
-with plain tridiagonal A — embedded as an un-regularized least-squares ERM
-so the same feature-partitioned algorithms run unchanged.
+Thin CLI wrapper over the ``repro.experiments`` sweep subsystem (preset
+``thm3``). The hard instance — Nesterov's smooth chain embedded as an
+un-regularized least-squares ERM — now lives in
+``repro.experiments.instances.smooth_chain_erm``; eps is relative to the
+initial gap f(0) - f* (the sublinear regime).
+
+Full JSON + Markdown reports: ``python -m repro.experiments.sweep
+--preset thm3``.
 """
 from __future__ import annotations
 
-import numpy as np
-import jax.numpy as jnp
+from repro.experiments import PRESETS, run_sweep
 
-from repro.core import ERMProblem, squared_loss
-from repro.core.bounds import thm3_smooth_convex
-from repro.core.partition import even_partition
-from repro.core.algorithms import dagd, dgd
-from .common import emit, rounds_to_eps
+from .common import emit
 
 
-def _smooth_chain_erm(d: int, L: float):
-    A = np.zeros((d, d))
-    idx = np.arange(d)
-    A[idx, idx] = 2.0
-    A[idx[:-1], idx[:-1] + 1] = -1.0
-    A[idx[:-1] + 1, idx[:-1]] = -1.0
-    c = L / 4.0
-    evals, evecs = np.linalg.eigh(A)
-    B = (evecs * np.sqrt(np.clip(c * evals, 0, None))) @ evecs.T
-    rhs = np.zeros(d)
-    rhs[0] = c
-    y = np.linalg.lstsq(B.T, rhs, rcond=None)[0]
-    n = d
-    prob = ERMProblem(A=jnp.asarray(B) * np.sqrt(n),
-                      y=jnp.asarray(y) * np.sqrt(n),
-                      loss=squared_loss(), lam=0.0)
-    # w*(i) = 1 - i/(d+1)  (Nesterov 2.1.2 boundary solution)
-    wstar = 1.0 - np.arange(1, d + 1) / (d + 1.0)
-    return prob, jnp.asarray(wstar)
-
-
-def run(d: int = 128, L: float = 1.0, m: int = 4):
-    prob, wstar = _smooth_chain_erm(d, L)
-    part = even_partition(d, m)
-    fstar = float(prob.value(wstar))
-    Lb = prob.smoothness_bound()
-    for eps_frac in (1e-2, 1e-3):
-        # eps relative to the f(0) - f* scale, as Thm 3 is sublinear
-        gap0 = float(prob.value(jnp.zeros(d))) - fstar
-        eps = eps_frac * gap0
-        lb = thm3_smooth_convex(L, float(jnp.linalg.norm(wstar)),
-                                eps).rounds
-        for name, algo in (("dagd", dagd), ("dgd", dgd)):
-            k, _ = rounds_to_eps(prob, part, algo, eps, fstar,
-                                 max_rounds=4000, L=Lb, lam=0.0)
-            ratio = (k / lb) if (k and lb) else float("nan")
-            emit(f"thm3/eps{eps_frac:g}/{name}/rounds_to_eps",
-                 k if k else -1, f"lb={lb:.1f};ratio={ratio:.2f}")
+def run():
+    result = run_sweep(PRESETS["thm3"])
+    for r in result.records:
+        k = r.measured_rounds if r.measured_rounds is not None else -1
+        ratio = r.ratio if r.ratio is not None else float("nan")
+        emit(f"thm3/eps{r.eps:g}/{r.algorithm}/rounds_to_eps", k,
+             f"lb={r.bound_rounds:.1f};ratio={ratio:.2f}")
+    return result
 
 
 if __name__ == "__main__":

@@ -2,41 +2,30 @@
 bound Omega((sqrt(n kappa) + n) log(1/eps)), on the HARD chain instance
 embedded as ERM — the bound is worst-case over functions, so the
 comparison is only meaningful on a hard f. Each stochastic step = one
-communication round, per the paper's Definition 3.2 model."""
+communication round, per the paper's Definition 3.2 model.
+
+Thin CLI wrapper over the ``repro.experiments`` sweep subsystem (preset
+``thm4``). Full JSON + Markdown reports: ``python -m
+repro.experiments.sweep --preset thm4``.
+"""
 from __future__ import annotations
 
-import numpy as np
-import jax.numpy as jnp
+from repro.experiments import PRESETS, run_sweep
 
-from repro.core.bounds import thm4_incremental
-from repro.core.partition import even_partition
-from repro.core.runtime import LocalDistERM
-from repro.core.algorithms import dsvrg
-from .common import chain_erm, emit
+from .common import emit
 
 
-def run(m: int = 4, eps: float = 1e-4, kappa: float = 64.0):
-    for n in (16, 32, 64):
-        # chain hard function on d = n coords: the ERM has n samples
-        ci, prob = chain_erm(d=n, kappa=kappa, lam=0.5)
-        wstar = jnp.asarray(ci.w_star())
-        fstar = float(prob.value(wstar))
-        kap = prob.smoothness_bound() / prob.lam
-        L_max = float(jnp.max(jnp.sum(prob.A ** 2, axis=1))) + prob.lam
-        part = even_partition(prob.d, m)
-        dist = LocalDistERM(prob, part)
-        _, aux = dsvrg(dist, rounds=30000, L_max=L_max, lam=prob.lam,
-                       history=True, seed=7, eta=1.0 / (4.0 * L_max))
-        k = None
-        for i, w in enumerate(aux["iterates"], start=1):
-            if float(prob.value(dist.gather_w(w))) - fstar <= eps:
-                k = i
-                break
-        lb = thm4_incremental(n, kap, prob.lam,
-                              float(jnp.linalg.norm(wstar)), eps).rounds
-        ratio = (k / lb) if (k and lb) else float("nan")
-        emit(f"thm4/n{n}/dsvrg/rounds_to_eps", k if k else -1,
-             f"lb={lb:.0f};ratio={ratio:.2f};kappa={kap:.1f}")
+def run():
+    result = run_sweep(PRESETS["thm4"])
+    for r in result.records:
+        n = int(r.instance_params["n"])
+        kappa = r.instance_params["kappa"]
+        k = r.measured_rounds if r.measured_rounds is not None else -1
+        ratio = r.ratio if r.ratio is not None else float("nan")
+        emit(f"thm4/n{n}/{r.algorithm}/rounds_to_eps", k,
+             f"lb={r.bound_rounds:.0f};ratio={ratio:.2f};"
+             f"kappa={kappa:.1f}")
+    return result
 
 
 if __name__ == "__main__":

@@ -39,6 +39,10 @@ def dsvrg(dist, rounds: int, L_max: float, lam: float = 0.0,
         w_snap = w
         dist.end_round()
         used += 1
+        if history:
+            # the snapshot consumes a round: record the (unchanged)
+            # iterate so history index k == communication round k
+            iterates.append(w)
         # --- inner loop: one scalar-ReduceAll round per stochastic step
         for _ in range(min(epoch_len, rounds - used)):
             i = int(rng.randint(n))

@@ -1,0 +1,49 @@
+"""Bound-certification experiment harness.
+
+Ties the paper's three artifact layers into one reproducible story:
+
+  * hard instances + closed-form lower bounds (``core.hard_instance``,
+    ``core.bounds``) — the theory,
+  * the metered Definition-1 communication model (``core.comm``,
+    ``core.runtime``) — the measurement apparatus,
+  * the algorithm family F^{lam,L} / I^{lam,L} (``core.algorithms``) —
+    the subjects.
+
+``registry``  — algorithms self-describe (family membership, incremental
+                or not, how to derive their hyper-parameters from a
+                problem); anything registered is certified automatically.
+``instances`` — builders for the Theorem-2/3/4 hard instances and for
+                real workloads (lasso, logistic) as ``InstanceBundle``s.
+``sweep``     — declarative grid runner: instance grid x algorithms x eps,
+                measured rounds/bytes against the matching BoundReport.
+``report``    — renders a sweep into machine-readable JSON + generated
+                Markdown under ``docs/results/``.
+
+CLI:  PYTHONPATH=src python -m repro.experiments.sweep --preset thm2-small
+"""
+import importlib
+
+from .registry import (ALGORITHM_REGISTRY, AlgoContext, AlgorithmSpec,
+                       get_algorithm, register_algorithm)
+from .instances import INSTANCE_BUILDERS, InstanceBundle, build_instance
+
+# sweep/report exports are lazy (PEP 562) so `python -m
+# repro.experiments.sweep` does not import the module twice (runpy warns).
+_LAZY = {
+    "PRESETS": ".sweep", "SweepRecord": ".sweep", "SweepResult": ".sweep",
+    "SweepSpec": ".sweep", "run_sweep": ".sweep",
+    "write_report": ".report", "default_results_dir": ".report",
+}
+
+__all__ = [
+    "ALGORITHM_REGISTRY", "AlgoContext", "AlgorithmSpec",
+    "get_algorithm", "register_algorithm",
+    "INSTANCE_BUILDERS", "InstanceBundle", "build_instance",
+    *sorted(_LAZY),
+]
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        return getattr(importlib.import_module(_LAZY[name], __name__), name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,374 @@
+"""Declarative sweep runner: instance grids x registered algorithms x eps.
+
+A ``SweepSpec`` names an instance family, a parameter grid, the algorithms
+to run, and the accuracy targets. ``run_sweep`` instantiates each grid
+point, drives every algorithm through the ``CommLedger``-metered
+``LocalDistERM`` runtime, measures rounds-to-eps from the iterate history,
+and pairs each measurement with the closed-form ``BoundReport`` the
+algorithm's registry entry says must lower-bound it:
+
+    non-incremental (F^{lam,L}), lam > 0   ->  Theorem 2
+    non-incremental (F^{lam,L}), lam = 0   ->  Theorem 3
+    incremental     (I^{lam,L})            ->  Theorem 4
+
+On hard instances the record carries ``certified``: measured >= bound.
+If eps was not reached within the round budget, the run still certifies
+whenever budget >= bound (rounds-to-eps > budget >= bound).
+
+CLI:
+    PYTHONPATH=src python -m repro.experiments.sweep --preset thm2-small
+    PYTHONPATH=src python -m repro.experiments.sweep --preset all --out docs/results
+
+Each preset writes ``docs/results/<preset>.json`` + ``<preset>.md`` and
+refreshes ``docs/results/README.md``. Exit status is non-zero if any
+certification fails — the harness is self-checking.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import itertools
+import sys
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.bounds import (BoundReport, thm2_strongly_convex,
+                               thm3_smooth_convex, thm4_incremental)
+from repro.core.runtime import LocalDistERM
+
+from .instances import InstanceBundle, build_instance
+from .registry import AlgorithmSpec, get_algorithm
+
+
+# --------------------------------------------------------------------------
+# Spec / record / result
+# --------------------------------------------------------------------------
+
+Grid = Union[Dict[str, Sequence], Sequence[Dict[str, object]]]
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepSpec:
+    name: str
+    instance: str                     # key into INSTANCE_BUILDERS
+    grid: Grid                        # dict of lists (product) or list of dicts
+    algorithms: Tuple[str, ...]
+    eps: Tuple[float, ...] = (1e-6,)
+    eps_mode: str = "abs"             # "abs" | "rel" (x (f(0) - f*))
+    max_rounds: int = 3000
+    mode: str = "to_eps"              # "to_eps" | "fixed_rounds"
+    fixed_rounds: int = 20
+    note: str = ""
+
+    def grid_points(self) -> List[Dict[str, object]]:
+        if isinstance(self.grid, dict):
+            keys = list(self.grid)
+            return [dict(zip(keys, vals))
+                    for vals in itertools.product(*(self.grid[k]
+                                                    for k in keys))]
+        return [dict(pt) for pt in self.grid]
+
+
+@dataclasses.dataclass
+class SweepRecord:
+    instance_kind: str
+    instance_label: str
+    instance_params: Dict[str, float]
+    hard: bool
+    algorithm: str
+    family: str
+    incremental: bool
+    accelerated: bool
+    eps: Optional[float]              # as specified (rel or abs)
+    eps_abs: Optional[float]
+    measured_rounds: Optional[int]
+    max_rounds: int
+    bound_theorem: Optional[str]
+    bound_rounds: Optional[float]
+    ratio: Optional[float]            # measured / bound
+    certified: Optional[bool]         # only meaningful on hard instances
+    ledger_rounds: int
+    bytes_per_round: float
+    total_bytes: int
+    op_counts: Dict[str, int]
+    budget_ok: bool
+    sample_model_bytes_per_round: float   # Arjevani-Shamir O(m d)/round
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class SweepResult:
+    spec: SweepSpec
+    records: List[SweepRecord]
+    command: str
+
+    def summary(self) -> Dict[str, int]:
+        applicable = [r for r in self.records if r.certified is not None]
+        return dict(
+            records=len(self.records),
+            certifiable=len(applicable),
+            certified=sum(1 for r in applicable if r.certified),
+            failed=sum(1 for r in applicable if not r.certified),
+        )
+
+    def to_dict(self) -> dict:
+        spec = dataclasses.asdict(self.spec)
+        spec["grid"] = (self.spec.grid if isinstance(self.spec.grid, list)
+                        else {k: list(v) for k, v in self.spec.grid.items()})
+        return dict(schema_version=1, command=self.command, spec=spec,
+                    summary=self.summary(),
+                    records=[r.to_dict() for r in self.records])
+
+
+# --------------------------------------------------------------------------
+# Measurement
+# --------------------------------------------------------------------------
+
+def _gap_series(bundle: InstanceBundle, iterates) -> np.ndarray:
+    """Suboptimality f(w_k) - f* for every recorded iterate, evaluated in
+    one vmapped pass (iterates are stacked per-machine blocks)."""
+    stk = jnp.stack(iterates)                     # (K, m, d_max)
+    ws = jnp.concatenate(
+        [stk[:, j, :b] for j, b in enumerate(bundle.part.block_sizes)],
+        axis=-1)                                  # (K, d)
+    vals = jax.jit(jax.vmap(bundle.objective))(ws)
+    return np.asarray(vals) - bundle.fstar
+
+
+def _bound_for(bundle: InstanceBundle, algo: AlgorithmSpec,
+               eps_abs: float) -> Optional[BoundReport]:
+    """The theorem bound certifying this (instance, algorithm) pair, as
+    declared by the algorithm's registry entry."""
+    p, ctx = bundle.params, bundle.ctx
+    if bundle.wstar_norm is None:
+        return None
+    sc_theorem, smooth_theorem = algo.certifying_theorem
+    theorem = sc_theorem if ctx.lam > 0 else smooth_theorem
+    if theorem == "thm4":
+        n_comp = int(p.get("n", bundle.prob.n))
+        kappa = float(p.get("kappa", ctx.L / max(ctx.lam, 1e-30)))
+        return thm4_incremental(n_comp, kappa, ctx.lam, bundle.wstar_norm,
+                                eps_abs)
+    if theorem == "thm2":
+        kappa = float(p.get("kappa", ctx.L / ctx.lam))
+        return thm2_strongly_convex(kappa, ctx.lam, bundle.wstar_norm,
+                                    eps_abs)
+    return thm3_smooth_convex(float(p.get("L", ctx.L)), bundle.wstar_norm,
+                              eps_abs)
+
+
+def _ledger_fields(dist: LocalDistERM, bundle: InstanceBundle) -> dict:
+    led = dist.comm.ledger
+    try:
+        led.assert_budget(n=bundle.prob.n, d=bundle.prob.d)
+        budget_ok = True
+    except AssertionError:
+        budget_ok = False
+    return dict(ledger_rounds=led.rounds,
+                bytes_per_round=float(led.bytes_per_round()),
+                total_bytes=int(led.total_bytes()),
+                op_counts=led.op_counts(), budget_ok=budget_ok,
+                sample_model_bytes_per_round=float(
+                    bundle.ctx.m * bundle.prob.d * 4))
+
+
+def _run_cell(bundle: InstanceBundle, algo: AlgorithmSpec,
+              spec: SweepSpec, max_rounds: int) -> List[SweepRecord]:
+    """One (instance, algorithm) cell: a single metered run at the full
+    round budget, then every eps threshold read off the same history."""
+    base = dict(instance_kind=bundle.kind, instance_label=bundle.label,
+                instance_params=dict(bundle.params), hard=bundle.hard,
+                algorithm=algo.name, family=algo.family,
+                incremental=algo.incremental, accelerated=algo.accelerated,
+                max_rounds=(spec.fixed_rounds
+                            if spec.mode == "fixed_rounds" else max_rounds))
+    kwargs = algo.make_kwargs(bundle.ctx)
+
+    if spec.mode == "fixed_rounds":
+        dist = LocalDistERM(bundle.prob, bundle.part)
+        algo.fn(dist, rounds=spec.fixed_rounds, **kwargs)
+        return [SweepRecord(**base, eps=None, eps_abs=None,
+                            measured_rounds=None, bound_theorem=None,
+                            bound_rounds=None, ratio=None, certified=None,
+                            **_ledger_fields(dist, bundle))]
+
+    dist = LocalDistERM(bundle.prob, bundle.part)
+    _, aux = algo.fn(dist, rounds=max_rounds, history=True, **kwargs)
+    gaps = _gap_series(bundle, aux["iterates"])
+    gap0 = float(bundle.objective(jnp.zeros((bundle.prob.d,)))
+                 - bundle.fstar)
+    led = _ledger_fields(dist, bundle)
+
+    records = []
+    for eps in spec.eps:
+        eps_abs = eps * gap0 if spec.eps_mode == "rel" else eps
+        hits = np.nonzero(gaps <= eps_abs)[0]
+        measured = int(hits[0]) + 1 if hits.size else None
+        bound = _bound_for(bundle, algo, eps_abs)
+        bound_rounds = bound.rounds if bound else None
+        ratio = (measured / bound_rounds
+                 if measured and bound_rounds else None)
+        if not bundle.hard or bound_rounds is None:
+            certified = None
+        elif measured is not None:
+            certified = measured >= bound_rounds
+        else:
+            # eps unreached: rounds-to-eps > max_rounds, so the inequality
+            # holds whenever the budget itself already exceeds the bound.
+            certified = True if max_rounds >= bound_rounds else None
+        records.append(SweepRecord(
+            **base, eps=eps, eps_abs=eps_abs, measured_rounds=measured,
+            bound_theorem=bound.theorem if bound else None,
+            bound_rounds=bound_rounds, ratio=ratio, certified=certified,
+            **led))
+    return records
+
+
+def run_sweep(spec: SweepSpec, max_rounds: Optional[int] = None,
+              verbose: bool = False) -> SweepResult:
+    max_rounds = max_rounds or spec.max_rounds
+    records: List[SweepRecord] = []
+    for point in spec.grid_points():
+        bundle = build_instance(spec.instance, **point)
+        for name in spec.algorithms:
+            algo = get_algorithm(name)
+            cell = _run_cell(bundle, algo, spec, max_rounds)
+            records.extend(cell)
+            if verbose:
+                for r in cell:
+                    meas = (str(r.measured_rounds)
+                            if r.measured_rounds is not None
+                            else f">{r.max_rounds}")
+                    bnd = (f"{r.bound_rounds:.1f}" if r.bound_rounds
+                           is not None else "-")
+                    cert = {True: "ok", False: "FAIL", None: "n/a"}[
+                        r.certified]
+                    print(f"  {r.instance_label} {r.algorithm:>9} "
+                          f"eps={r.eps} rounds={meas} bound={bnd} "
+                          f"certified={cert}", file=sys.stderr)
+    if spec.name in PRESETS:
+        command = (f"PYTHONPATH=src python -m repro.experiments.sweep "
+                   f"--preset {spec.name}")
+    else:
+        command = (f"repro.experiments.run_sweep(<ad-hoc SweepSpec "
+                   f"{spec.name!r}>)")
+    return SweepResult(spec=spec, records=records, command=command)
+
+
+# --------------------------------------------------------------------------
+# Presets
+# --------------------------------------------------------------------------
+
+PRESETS: Dict[str, SweepSpec] = {s.name: s for s in [
+    SweepSpec(
+        name="thm2-small", instance="thm2_chain",
+        grid=dict(d=[96], kappa=[16.0, 64.0], lam=[0.5], m=[4]),
+        algorithms=("dagd", "dgd", "disco_f"), eps=(1e-6,),
+        max_rounds=2500,
+        note="CPU-minutes Theorem-2 certification (acceptance preset)."),
+    SweepSpec(
+        name="thm2", instance="thm2_chain",
+        grid=dict(d=[160], kappa=[16.0, 64.0, 256.0], lam=[0.5], m=[4]),
+        algorithms=("dagd", "dgd", "disco_f"), eps=(1e-6,),
+        max_rounds=3000,
+        note="Theorem-2 tightness table (mirrors benchmarks/thm2_rounds)."),
+    SweepSpec(
+        name="thm3", instance="thm3_chain",
+        grid=dict(d=[128], L=[1.0], m=[4]),
+        algorithms=("dagd", "dgd", "prox_dagd"), eps=(1e-2, 1e-3),
+        eps_mode="rel", max_rounds=4000,
+        note="Theorem-3 smooth-convex certification; eps relative to "
+             "f(0) - f* (sublinear regime)."),
+    SweepSpec(
+        name="thm4-small", instance="thm4_separable",
+        grid=dict(n=[16], kappa=[64.0], lam=[0.5], m=[4]),
+        algorithms=("dsvrg",), eps=(1e-4,), max_rounds=12000,
+        note="Incremental-family certification, smallest n."),
+    SweepSpec(
+        name="thm4", instance="thm4_separable",
+        grid=dict(n=[16, 32, 64], kappa=[64.0], lam=[0.5], m=[4]),
+        algorithms=("dsvrg",), eps=(1e-4,), max_rounds=30000,
+        note="Theorem-4 incremental family vs n (mirrors "
+             "benchmarks/thm4_incremental)."),
+    SweepSpec(
+        name="m-invariance", instance="thm2_chain",
+        grid=dict(d=[128], kappa=[64.0], lam=[0.5], m=[1, 2, 4, 8]),
+        algorithms=("dagd",), eps=(1e-6,), max_rounds=1500,
+        note="Round counts must be m-independent (the bounds hold for "
+             "ANY m)."),
+    SweepSpec(
+        name="lasso", instance="lasso",
+        grid=dict(n=[128], d=[256], m=[4], tau=[2e-3]),
+        algorithms=("prox_dagd",), eps=(1e-4, 1e-6), max_rounds=2500,
+        note="Composite workload: block-local prox, Thm-3 overlay as "
+             "context (instance is not hard)."),
+    SweepSpec(
+        name="logistic", instance="logistic",
+        grid=dict(n=[256], d=[96], m=[4], lam=[1e-2]),
+        algorithms=("dagd", "dgd", "disco_f", "bcd"),
+        eps=(1e-4, 1e-6), eps_mode="rel", max_rounds=2000,
+        note="GLM workload; Thm-2 overlay as context (instance is not "
+             "hard)."),
+    SweepSpec(
+        name="comm-cost", instance="random_ridge",
+        grid=[dict(n=256, d=64, m=8), dict(n=64, d=256, m=8),
+              dict(n=64, d=4096, m=8)],
+        algorithms=("dagd",), mode="fixed_rounds", fixed_rounds=20,
+        note="Feature-partition bytes/round (measured) vs the sample-"
+             "partition O(m d)/round model of Arjevani-Shamir."),
+]}
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.experiments.sweep",
+        description="Run a bound-certification sweep and write JSON + "
+                    "Markdown reports.")
+    parser.add_argument("--preset", action="append", required=True,
+                        choices=sorted(PRESETS) + ["all"],
+                        help="preset name (repeatable), or 'all'")
+    parser.add_argument("--out", default=None,
+                        help="output directory (default: docs/results at "
+                             "the repo root)")
+    parser.add_argument("--max-rounds", type=int, default=None,
+                        help="override the preset round budget")
+    parser.add_argument("--no-report", action="store_true",
+                        help="run and print, but write nothing")
+    parser.add_argument("-q", "--quiet", action="store_true")
+    args = parser.parse_args(argv)
+
+    from .report import default_results_dir, write_report
+
+    names = sorted(PRESETS) if "all" in args.preset else args.preset
+    out_dir = args.out or default_results_dir()
+    failed = 0
+    for name in names:
+        spec = PRESETS[name]
+        if not args.quiet:
+            print(f"[sweep] {name}: instance={spec.instance} "
+                  f"algorithms={','.join(spec.algorithms)}",
+                  file=sys.stderr)
+        result = run_sweep(spec, max_rounds=args.max_rounds,
+                           verbose=not args.quiet)
+        summ = result.summary()
+        failed += summ["failed"]
+        line = (f"[sweep] {name}: {summ['records']} records, "
+                f"{summ['certified']}/{summ['certifiable']} certified")
+        if not args.no_report:
+            json_path, md_path = write_report(result, out_dir)
+            line += f" -> {json_path}, {md_path}"
+        print(line)
+    if failed:
+        print(f"[sweep] CERTIFICATION FAILED for {failed} record(s): a "
+              f"measured round count fell below its lower bound",
+              file=sys.stderr)
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,97 @@
+"""Deterministic stand-in for ``hypothesis`` when it is not installed.
+
+Registered by ``conftest.py`` as the ``hypothesis`` module so property
+tests still collect and run: ``@given`` replays each test over a small
+fixed spread of examples (range endpoints + seeded pseudo-random fills)
+instead of hypothesis' adaptive search. Only the API surface this suite
+uses is provided: ``given(**kwargs)``, ``settings(max_examples=,
+deadline=)``, and ``strategies.integers/floats/sampled_from/booleans``.
+"""
+from __future__ import annotations
+
+import random
+import types
+
+_MAX_FALLBACK_EXAMPLES = 6
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, i: int, n: int, rng: random.Random):
+        return self._draw(i, n, rng)
+
+
+def _integers(min_value, max_value):
+    def draw(i, n, rng):
+        if i == 0:
+            return min_value
+        if i == 1 and max_value != min_value:
+            return max_value
+        return rng.randint(min_value, max_value)
+    return _Strategy(draw)
+
+
+def _floats(min_value, max_value, **_ignored):
+    def draw(i, n, rng):
+        if i == 0:
+            return float(min_value)
+        if i == 1:
+            return float(max_value)
+        return rng.uniform(min_value, max_value)
+    return _Strategy(draw)
+
+
+def _sampled_from(elements):
+    seq = list(elements)
+
+    def draw(i, n, rng):
+        return seq[i % len(seq)]
+    return _Strategy(draw)
+
+
+def _booleans():
+    return _sampled_from([False, True])
+
+
+def settings(**kwargs):
+    """Records max_examples on the function; everything else is ignored."""
+    def deco(fn):
+        fn._fallback_settings = kwargs
+        return fn
+    return deco
+
+
+def given(*args, **strats):
+    if args:
+        raise TypeError("hypothesis fallback supports keyword strategies "
+                        "only, e.g. @given(m=st.integers(1, 5))")
+
+    def deco(fn):
+        conf = getattr(fn, "_fallback_settings", {})
+        n = min(int(conf.get("max_examples", _MAX_FALLBACK_EXAMPLES)),
+                _MAX_FALLBACK_EXAMPLES)
+        names = sorted(strats)
+        rng = random.Random(f"{fn.__module__}.{fn.__qualname__}")
+        cases = [{k: strats[k].example(i, n, rng) for k in names}
+                 for i in range(n)]
+
+        # Deliberately NOT functools.wraps: pytest must see the (*a, **kw)
+        # signature, not the strategy parameters, or it would try to
+        # resolve them as fixtures.
+        def wrapper(*a, **kw):
+            for case in cases:
+                fn(*a, **{**kw, **case})
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        return wrapper
+    return deco
+
+
+strategies = types.SimpleNamespace(
+    integers=_integers, floats=_floats, sampled_from=_sampled_from,
+    booleans=_booleans)
+
+__all__ = ["given", "settings", "strategies"]

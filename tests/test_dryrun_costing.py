@@ -22,6 +22,14 @@ import jax, jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+def cost(compiled):
+    # newer jax returns a per-partition list of dicts (same guard as
+    # repro.launch.dryrun)
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca
+
 out = {}
 mesh = Mesh(np.array(jax.devices()).reshape(4), ("model",))
 M = N = K = 512
@@ -30,7 +38,7 @@ b = jax.ShapeDtypeStruct((K, N), jnp.float32)
 jt = jax.jit(lambda a, b: a @ b,
              in_shardings=(NamedSharding(mesh, P(None, None)),
                            NamedSharding(mesh, P(None, "model"))))
-ca = jt.lower(a, b).compile().cost_analysis()
+ca = cost(jt.lower(a, b).compile())
 out["matmul_flops"] = float(ca["flops"])
 out["matmul_expected_per_device"] = 2.0 * M * N * K / 4
 
@@ -44,8 +52,8 @@ x = jax.ShapeDtypeStruct((128, 256), jnp.float32)
 ws = jax.ShapeDtypeStruct((8, 256, 256), jnp.float32)
 fl = {}
 for u in (1, 2):
-    ca = jax.jit(lambda x, ws, u=u: scanned(x, ws, u)).lower(
-        x, ws).compile().cost_analysis()
+    ca = cost(jax.jit(lambda x, ws, u=u: scanned(x, ws, u)).lower(
+        x, ws).compile())
     fl[u] = float(ca["flops"])
 R, k = 8, 2
 out["scan_corrected"] = fl[1] + (R - 1) / (k - 1) * (fl[2] - fl[1])

@@ -4,6 +4,10 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
+
+# `hypothesis` may be absent: tests/conftest.py installs the deterministic
+# fallback (tests/_hypothesis_fallback.py) before collection, so this
+# import — and every other property-test module — collects cleanly.
 from hypothesis import given, settings, strategies as st
 
 from repro.core.erm import LOSSES, make_random_erm
