@@ -30,6 +30,11 @@ def run(small: bool = True):
     us = timeit(lambda: jref_rmv(A, r))
     emit("kernel/feature_rmatvec/jnp_ref", f"{us:.1f}",
          f"gflops={2*n*d/us/1e3:.2f}")
+    h = jax.random.normal(jax.random.PRNGKey(4), (n,), jnp.float32) ** 2
+    jref_hvp = jax.jit(ref.feature_hvp_ref)
+    us = timeit(lambda: jref_hvp(A, h, r))
+    emit("kernel/feature_hvp/jnp_ref", f"{us:.1f}",
+         f"gflops={2*n*d/us/1e3:.2f}")
 
     dd = 65536
     diag = jax.random.normal(k, (dd,))

@@ -7,6 +7,7 @@ Default mode prints ``name,us_per_call,derived`` CSV rows:
   m_invariance     — round counts constant across machine counts
   comm_cost        — feature- vs sample-partition per-round bytes
   kernel_bench     — Pallas/jnp hot-loop microbenchmarks
+  oracle_backends  — einsum vs Pallas-kernel per-round wall-clock
   roofline         — dry-run roofline terms per (arch x shape x mesh)
 
 The theorem rows are thin wrappers over ``repro.experiments``; pass
@@ -44,14 +45,15 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
 
     print("name,us_per_call,derived")
     from . import (comm_cost, kernel_bench, m_invariance,
-                   moe_dispatch_ablation, roofline, thm2_rounds,
-                   thm3_rounds, thm4_incremental)
+                   moe_dispatch_ablation, oracle_backends, roofline,
+                   thm2_rounds, thm3_rounds, thm4_incremental)
     thm2_rounds.run()
     thm3_rounds.run()
     thm4_incremental.run()
     m_invariance.run()
     comm_cost.run()
     kernel_bench.run()
+    oracle_backends.run()
     moe_dispatch_ablation.run()
     roofline.run()
     return 0

@@ -20,11 +20,26 @@ Backends:
 
 The two backends are required to produce bit-comparable iterates (up to
 reduction order), which ``tests/test_runtime_parity.py`` asserts.
+
+Orthogonal to the execution backend is the **oracle backend**: how the
+per-machine GEMVs inside ``response``/``pgrad``/``phvp`` are computed.
+
+  * ``"einsum"`` — plain ``jnp`` contractions (XLA decides the schedule);
+    the CPU default and the reference semantics.
+  * ``"kernel"`` — the MXU-tiled Pallas kernels in ``repro.kernels``
+    (``feature_matvec``/``feature_rmatvec``/``feature_hvp``), ``vmap``-ed
+    over the stacked machine axis in local mode and applied directly to
+    the local shard inside ``shard_map``; the TPU default.
+
+The paper meters communication *rounds*, never local FLOPs, so the oracle
+backend MUST be invisible to the ``CommLedger`` — the conformance suite
+(``tests/test_ledger_invariance.py``) pins that invariant.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
+import os
 from typing import Callable, Optional, Tuple
 
 import numpy as np
@@ -36,16 +51,52 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from .comm import CommLedger, LocalCommunicator, ShardMapCommunicator
 from .erm import ERMProblem, GLMLoss
 from .partition import FeaturePartition, even_partition
+from ..kernels import ops as kops
+
+
+# --------------------------------------------------------------------------
+# Oracle-backend dispatch
+# --------------------------------------------------------------------------
+
+ORACLE_BACKENDS = ("einsum", "kernel")
+
+_BACKEND_ENV = "REPRO_ORACLE_BACKEND"
+
+
+def resolve_oracle_backend(backend: Optional[str] = None) -> str:
+    """Resolve an oracle-backend choice to ``"einsum"`` or ``"kernel"``.
+
+    ``None``/``"auto"`` consults the ``REPRO_ORACLE_BACKEND`` env var and
+    then the platform: Pallas kernels compile for TPU, so ``"kernel"`` is
+    the TPU default; everywhere else the kernels would run in interpret
+    mode (correct but slow), so ``"einsum"`` is the default.
+    """
+    if backend in (None, "auto"):
+        backend = os.environ.get(_BACKEND_ENV, "").strip() or None
+    if backend in (None, "auto"):
+        backend = "kernel" if jax.default_backend() == "tpu" else "einsum"
+    if backend not in ORACLE_BACKENDS:
+        raise ValueError(
+            f"unknown oracle backend {backend!r}; expected one of "
+            f"{ORACLE_BACKENDS + ('auto',)}")
+    return backend
 
 
 class LocalDistERM:
-    """m machines simulated on host; blocks stacked: A (m,n,dmax), w (m,dmax)."""
+    """m machines simulated on host; blocks stacked: A (m,n,dmax), w (m,dmax).
+
+    ``backend`` selects the oracle compute path ("einsum" | "kernel" |
+    "auto"/None for the platform default); the kernel path ``vmap``s the
+    Pallas kernels over the stacked machine axis.
+    """
 
     def __init__(self, prob: ERMProblem, part: FeaturePartition,
-                 ledger: Optional[CommLedger] = None):
+                 ledger: Optional[CommLedger] = None,
+                 backend: Optional[str] = None):
         self.prob = prob
         self.part = part
         self.comm = LocalCommunicator(part.m, ledger)
+        self.backend = resolve_oracle_backend(backend)
         self.A_stk = part.pad_blocks(part.split_columns(prob.A))  # (m,n,dmax)
         self.mask = part.mask()                                   # (m,dmax)
         self.n = prob.n
@@ -59,19 +110,31 @@ class LocalDistERM:
 
     def response(self, w_stk, tag="z=Aw"):
         """z = sum_j A_j w_j : one ReduceAll of an R^n vector."""
-        local = jnp.einsum("mnd,md->mn", self.A_stk, w_stk)
+        if self.backend == "kernel":
+            local = jax.vmap(kops.feature_matvec)(self.A_stk, w_stk)
+        else:
+            local = jnp.einsum("mnd,md->mn", self.A_stk, w_stk)
         return self.comm.reduce_all(local, tag=tag)
 
     def pgrad(self, w_stk, z):
         """f'_j(w) for every j, stacked — local compute only."""
         lgrad = self.loss.grad(z, self.y)                     # (n,)
-        g = jnp.einsum("mnd,n->md", self.A_stk, lgrad) / self.n
+        if self.backend == "kernel":
+            g = jax.vmap(kops.feature_rmatvec,
+                         in_axes=(0, None))(self.A_stk, lgrad) / self.n
+        else:
+            g = jnp.einsum("mnd,n->md", self.A_stk, lgrad) / self.n
         return (g + self.lam * w_stk) * self.mask
 
     def phvp(self, v_stk, z, av):
         """(f''(w) v)^[j] stacked, given reduced z=Aw and av=Av — local."""
         h = self.loss.hess(z, self.y)
-        out = jnp.einsum("mnd,n->md", self.A_stk, h * av) / self.n
+        if self.backend == "kernel":
+            out = jax.vmap(kops.feature_hvp,
+                           in_axes=(0, None, None))(self.A_stk, h, av) \
+                / self.n
+        else:
+            out = jnp.einsum("mnd,n->md", self.A_stk, h * av) / self.n
         return (out + self.lam * v_stk) * self.mask
 
     def dot(self, u_stk, v_stk, tag="dot"):
@@ -117,27 +180,41 @@ class ShardedDistERM:
     """
 
     def __init__(self, A_loc, y, loss: GLMLoss, lam: float, n: int,
-                 axis: str = "model", ledger: Optional[CommLedger] = None):
+                 axis: str = "model", ledger: Optional[CommLedger] = None,
+                 backend: Optional[str] = None):
         self.A_loc = A_loc
         self.y = y
         self.loss = loss
         self.lam = lam
         self.n = n
         self.comm = ShardMapCommunicator(axis, ledger)
+        self.backend = resolve_oracle_backend(backend)
 
     def zeros_like_w(self):
         return jnp.zeros((self.A_loc.shape[1],))
 
     def response(self, w_loc, tag="z=Aw"):
-        return self.comm.reduce_all(self.A_loc @ w_loc, tag=tag)
+        if self.backend == "kernel":
+            local = kops.feature_matvec(self.A_loc, w_loc)
+        else:
+            local = self.A_loc @ w_loc
+        return self.comm.reduce_all(local, tag=tag)
 
     def pgrad(self, w_loc, z):
-        return self.A_loc.T @ self.loss.grad(z, self.y) / self.n \
-            + self.lam * w_loc
+        lgrad = self.loss.grad(z, self.y)
+        if self.backend == "kernel":
+            g = kops.feature_rmatvec(self.A_loc, lgrad)
+        else:
+            g = self.A_loc.T @ lgrad
+        return g / self.n + self.lam * w_loc
 
     def phvp(self, v_loc, z, av):
         h = self.loss.hess(z, self.y)
-        return self.A_loc.T @ (h * av) / self.n + self.lam * v_loc
+        if self.backend == "kernel":
+            out = kops.feature_hvp(self.A_loc, h, av)
+        else:
+            out = self.A_loc.T @ (h * av)
+        return out / self.n + self.lam * v_loc
 
     def dot(self, u_loc, v_loc, tag="dot"):
         return self.comm.reduce_scalar(jnp.vdot(u_loc, v_loc), tag=tag)
@@ -166,14 +243,16 @@ class ShardedDistERM:
 
 def run_sharded(prob: ERMProblem, algorithm_body: Callable, rounds: int,
                 mesh: Optional[Mesh] = None, axis: str = "model",
-                ledger: Optional[CommLedger] = None):
+                ledger: Optional[CommLedger] = None,
+                backend: Optional[str] = None):
     """Run ``algorithm_body(dist, rounds) -> w_loc`` under shard_map with the
     data matrix column-sharded over ``axis``.
 
     ``algorithm_body`` receives a ``ShardedDistERM`` and a static round
     count and must return the machine-local block of the final iterate.
-    Returns the assembled global w (d,) and the per-round ledger (counts are
-    trace-time: ops per traced call).
+    ``backend`` picks the oracle compute path (see
+    ``resolve_oracle_backend``). Returns the assembled global w (d,) and
+    the per-round ledger (counts are trace-time: ops per traced call).
     """
     from jax.experimental.shard_map import shard_map  # local import: jax>=0.4
 
@@ -189,14 +268,18 @@ def run_sharded(prob: ERMProblem, algorithm_body: Callable, rounds: int,
         pad = 0
         A = prob.A
     led = ledger if ledger is not None else CommLedger()
+    backend = resolve_oracle_backend(backend)
 
     def body(A_loc, y):
         dist = ShardedDistERM(A_loc, y, prob.loss, prob.lam, prob.n,
-                              axis=axis, ledger=led)
+                              axis=axis, ledger=led, backend=backend)
         return algorithm_body(dist, rounds)
 
+    # pallas_call has no shard_map replication rule; the kernel path
+    # opts out of the (purely diagnostic) replication check.
     fn = shard_map(body, mesh=mesh,
                    in_specs=(P(None, axis), P(None)),
-                   out_specs=P(axis))
+                   out_specs=P(axis),
+                   check_rep=(backend != "kernel"))
     w = jax.jit(fn)(A, prob.y)
     return (w[:d] if pad else w), led

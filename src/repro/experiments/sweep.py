@@ -37,7 +37,7 @@ import jax.numpy as jnp
 
 from repro.core.bounds import (BoundReport, thm2_strongly_convex,
                                thm3_smooth_convex, thm4_incremental)
-from repro.core.runtime import LocalDistERM
+from repro.core.runtime import LocalDistERM, resolve_oracle_backend
 
 from .instances import InstanceBundle, build_instance
 from .registry import AlgorithmSpec, get_algorithm
@@ -96,6 +96,7 @@ class SweepRecord:
     op_counts: Dict[str, int]
     budget_ok: bool
     sample_model_bytes_per_round: float   # Arjevani-Shamir O(m d)/round
+    oracle_backend: str = "einsum"        # compute path; never affects rounds
 
     def to_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -178,26 +179,29 @@ def _ledger_fields(dist: LocalDistERM, bundle: InstanceBundle) -> dict:
 
 
 def _run_cell(bundle: InstanceBundle, algo: AlgorithmSpec,
-              spec: SweepSpec, max_rounds: int) -> List[SweepRecord]:
+              spec: SweepSpec, max_rounds: int,
+              backend: Optional[str] = None) -> List[SweepRecord]:
     """One (instance, algorithm) cell: a single metered run at the full
     round budget, then every eps threshold read off the same history."""
+    backend = resolve_oracle_backend(backend)
     base = dict(instance_kind=bundle.kind, instance_label=bundle.label,
                 instance_params=dict(bundle.params), hard=bundle.hard,
                 algorithm=algo.name, family=algo.family,
                 incremental=algo.incremental, accelerated=algo.accelerated,
+                oracle_backend=backend,
                 max_rounds=(spec.fixed_rounds
                             if spec.mode == "fixed_rounds" else max_rounds))
     kwargs = algo.make_kwargs(bundle.ctx)
 
     if spec.mode == "fixed_rounds":
-        dist = LocalDistERM(bundle.prob, bundle.part)
+        dist = LocalDistERM(bundle.prob, bundle.part, backend=backend)
         algo.fn(dist, rounds=spec.fixed_rounds, **kwargs)
         return [SweepRecord(**base, eps=None, eps_abs=None,
                             measured_rounds=None, bound_theorem=None,
                             bound_rounds=None, ratio=None, certified=None,
                             **_ledger_fields(dist, bundle))]
 
-    dist = LocalDistERM(bundle.prob, bundle.part)
+    dist = LocalDistERM(bundle.prob, bundle.part, backend=backend)
     _, aux = algo.fn(dist, rounds=max_rounds, history=True, **kwargs)
     gaps = _gap_series(bundle, aux["iterates"])
     gap0 = float(bundle.objective(jnp.zeros((bundle.prob.d,)))
@@ -230,14 +234,21 @@ def _run_cell(bundle: InstanceBundle, algo: AlgorithmSpec,
 
 
 def run_sweep(spec: SweepSpec, max_rounds: Optional[int] = None,
-              verbose: bool = False) -> SweepResult:
+              verbose: bool = False,
+              backend: Optional[str] = None) -> SweepResult:
+    """``backend`` selects the oracle compute path ("einsum" | "kernel" |
+    None/"auto" for the platform default). It changes local FLOP
+    scheduling only; the CommLedger is bit-invariant to it (asserted by
+    tests/test_ledger_invariance.py). Measured rounds-to-eps agree as
+    well, up to float reassociation shifting an eps-threshold crossing
+    by a round on TPU."""
     max_rounds = max_rounds or spec.max_rounds
     records: List[SweepRecord] = []
     for point in spec.grid_points():
         bundle = build_instance(spec.instance, **point)
         for name in spec.algorithms:
             algo = get_algorithm(name)
-            cell = _run_cell(bundle, algo, spec, max_rounds)
+            cell = _run_cell(bundle, algo, spec, max_rounds, backend=backend)
             records.extend(cell)
             if verbose:
                 for r in cell:
@@ -337,6 +348,11 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                              "the repo root)")
     parser.add_argument("--max-rounds", type=int, default=None,
                         help="override the preset round budget")
+    parser.add_argument("--backend", default="auto",
+                        choices=["auto", "einsum", "kernel"],
+                        help="oracle compute path (auto: kernel on TPU, "
+                             "einsum elsewhere); the comm ledger is "
+                             "invariant to it")
     parser.add_argument("--no-report", action="store_true",
                         help="run and print, but write nothing")
     parser.add_argument("-q", "--quiet", action="store_true")
@@ -354,7 +370,7 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                   f"algorithms={','.join(spec.algorithms)}",
                   file=sys.stderr)
         result = run_sweep(spec, max_rounds=args.max_rounds,
-                           verbose=not args.quiet)
+                           verbose=not args.quiet, backend=args.backend)
         summ = result.summary()
         failed += summ["failed"]
         line = (f"[sweep] {name}: {summ['records']} records, "

@@ -2,6 +2,7 @@
 
 feature_matvec / feature_rmatvec : the ERM hot loop of every algorithm in
     the paper's family (A_j w_j and A_j^T r per round, per machine).
+feature_hvp    : fused HVP data term A_j^T (h ⊙ av) for DISCO-F's CG.
 tridiag_matvec : hard-instance Hessian apply (banded, one-VMEM-pass).
 moe_combine    : top-k expert-output combine (beyond-paper hot spot).
 

@@ -14,7 +14,14 @@ block stays resident in VMEM while partial products accumulate into it
 
 Batched right-hand sides are supported (w: (d_j, B), r: (n, B)) because
 DISCO-F's CG and the benchmark harness evaluate multiple vectors at once;
-B=1 recovers the GEMV.
+B=1 recovers the GEMV. The batch axis is tiled into BLOCK_B-wide VMEM
+blocks of its own (a third grid axis), so a wide RHS panel (B > 128)
+never forces the whole panel into one block.
+
+``feature_hvp`` is the fused Hessian-vector-product data term: machine j
+needs A_j^T (h ⊙ av) where h = l''(z) and av = Av are shared R^n vectors.
+Fusing the Hadamard into the reduction pass keeps the scaled residual
+block VMEM-resident instead of materializing h ⊙ av in HBM first.
 """
 from __future__ import annotations
 
@@ -33,8 +40,9 @@ BLOCK_B = 128
 
 
 def _matvec_kernel(a_ref, w_ref, o_ref):
-    """Grid (n_blocks, d_blocks): o[i] += A[i, j] @ w[j]; j innermost."""
-    j = pl.program_id(1)
+    """Grid (n_blocks, b_blocks, d_blocks): o[i,b] += A[i,j] @ w[j,b];
+    the contraction axis j is innermost so o stays VMEM-resident."""
+    j = pl.program_id(2)
 
     @pl.when(j == 0)
     def _init():
@@ -45,7 +53,8 @@ def _matvec_kernel(a_ref, w_ref, o_ref):
 
 
 def feature_matvec(A_j, w_j, *, block_n: int = BLOCK_N,
-                   block_d: int = BLOCK_D, interpret: bool | None = None):
+                   block_d: int = BLOCK_D, block_b: int = BLOCK_B,
+                   interpret: bool | None = None):
     """z_j = A_j @ w_j.  A_j: (n, d_j); w_j: (d_j,) or (d_j, B)."""
     squeeze = w_j.ndim == 1
     if squeeze:
@@ -53,18 +62,18 @@ def feature_matvec(A_j, w_j, *, block_n: int = BLOCK_N,
     n, dj = A_j.shape
     b = w_j.shape[1]
     bn, bd = min(block_n, _rup(n)), min(block_d, _rup(dj))
-    bb = min(BLOCK_B, _rup(b))
+    bb = min(block_b, _rup(b))
     A_p = _pad2(A_j, bn, bd)
     w_p = _pad2(w_j, bd, bb)
-    grid = (A_p.shape[0] // bn, A_p.shape[1] // bd)
+    grid = (A_p.shape[0] // bn, w_p.shape[1] // bb, A_p.shape[1] // bd)
     out = pl.pallas_call(
         _matvec_kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((bn, bd), lambda i, j: (i, j)),
-            pl.BlockSpec((bd, w_p.shape[1]), lambda i, j: (j, 0)),
+            pl.BlockSpec((bn, bd), lambda i, k, j: (i, j)),
+            pl.BlockSpec((bd, bb), lambda i, k, j: (j, k)),
         ],
-        out_specs=pl.BlockSpec((bn, w_p.shape[1]), lambda i, j: (i, 0)),
+        out_specs=pl.BlockSpec((bn, bb), lambda i, k, j: (i, k)),
         out_shape=jax.ShapeDtypeStruct((A_p.shape[0], w_p.shape[1]),
                                        _acc_dtype(A_j.dtype)),
         interpret=_interp(interpret),
@@ -74,8 +83,9 @@ def feature_matvec(A_j, w_j, *, block_n: int = BLOCK_N,
 
 
 def _rmatvec_kernel(a_ref, r_ref, o_ref):
-    """Grid (d_blocks, n_blocks): o[j] += A[i, j]^T @ r[i]; i innermost."""
-    i = pl.program_id(1)
+    """Grid (d_blocks, b_blocks, n_blocks): o[j,b] += A[i,j]^T @ r[i,b];
+    the contraction axis i is innermost so o stays VMEM-resident."""
+    i = pl.program_id(2)
 
     @pl.when(i == 0)
     def _init():
@@ -86,7 +96,8 @@ def _rmatvec_kernel(a_ref, r_ref, o_ref):
 
 
 def feature_rmatvec(A_j, r, *, block_n: int = BLOCK_N,
-                    block_d: int = BLOCK_D, interpret: bool | None = None):
+                    block_d: int = BLOCK_D, block_b: int = BLOCK_B,
+                    interpret: bool | None = None):
     """g_j = A_j^T @ r.  A_j: (n, d_j); r: (n,) or (n, B)."""
     squeeze = r.ndim == 1
     if squeeze:
@@ -94,22 +105,72 @@ def feature_rmatvec(A_j, r, *, block_n: int = BLOCK_N,
     n, dj = A_j.shape
     b = r.shape[1]
     bn, bd = min(block_n, _rup(n)), min(block_d, _rup(dj))
-    bb = min(BLOCK_B, _rup(b))
+    bb = min(block_b, _rup(b))
     A_p = _pad2(A_j, bn, bd)
     r_p = _pad2(r, bn, bb)
-    grid = (A_p.shape[1] // bd, A_p.shape[0] // bn)
+    grid = (A_p.shape[1] // bd, r_p.shape[1] // bb, A_p.shape[0] // bn)
     out = pl.pallas_call(
         _rmatvec_kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((bn, bd), lambda j, i: (i, j)),
-            pl.BlockSpec((bn, r_p.shape[1]), lambda j, i: (i, 0)),
+            pl.BlockSpec((bn, bd), lambda j, k, i: (i, j)),
+            pl.BlockSpec((bn, bb), lambda j, k, i: (i, k)),
         ],
-        out_specs=pl.BlockSpec((bd, r_p.shape[1]), lambda j, i: (j, 0)),
+        out_specs=pl.BlockSpec((bd, bb), lambda j, k, i: (j, k)),
         out_shape=jax.ShapeDtypeStruct((A_p.shape[1], r_p.shape[1]),
                                        _acc_dtype(A_j.dtype)),
         interpret=_interp(interpret),
     )(A_p, r_p)
+    out = out[:dj, :b].astype(A_j.dtype)
+    return out[:, 0] if squeeze else out
+
+
+def _hvp_kernel(a_ref, h_ref, r_ref, o_ref):
+    """Grid (d_blocks, b_blocks, n_blocks): o[j,b] += A[i,j]^T (h[i] ⊙
+    r[i,b]); the Hadamard happens on the VMEM-resident r block, so the
+    scaled residual never round-trips through HBM."""
+    i = pl.program_id(2)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(a_ref[...].T, h_ref[...] * r_ref[...],
+                          preferred_element_type=o_ref.dtype)
+
+
+def feature_hvp(A_j, h, av, *, block_n: int = BLOCK_N,
+                block_d: int = BLOCK_D, block_b: int = BLOCK_B,
+                interpret: bool | None = None):
+    """u_j = A_j^T (h ⊙ av) — the HVP data term in one fused pass.
+
+    A_j: (n, d_j); h: (n,) per-sample curvature l''(z); av: (n,) or
+    (n, B) reduced Av right-hand side(s).
+    """
+    squeeze = av.ndim == 1
+    if squeeze:
+        av = av[:, None]
+    n, dj = A_j.shape
+    b = av.shape[1]
+    bn, bd = min(block_n, _rup(n)), min(block_d, _rup(dj))
+    bb = min(block_b, _rup(b))
+    A_p = _pad2(A_j, bn, bd)
+    h_p = _pad2(h[:, None], bn, 1)
+    r_p = _pad2(av, bn, bb)
+    grid = (A_p.shape[1] // bd, r_p.shape[1] // bb, A_p.shape[0] // bn)
+    out = pl.pallas_call(
+        _hvp_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, bd), lambda j, k, i: (i, j)),
+            pl.BlockSpec((bn, 1), lambda j, k, i: (i, 0)),
+            pl.BlockSpec((bn, bb), lambda j, k, i: (i, k)),
+        ],
+        out_specs=pl.BlockSpec((bd, bb), lambda j, k, i: (j, k)),
+        out_shape=jax.ShapeDtypeStruct((A_p.shape[1], r_p.shape[1]),
+                                       _acc_dtype(A_j.dtype)),
+        interpret=_interp(interpret),
+    )(A_p, h_p.astype(A_j.dtype), r_p)
     out = out[:dj, :b].astype(A_j.dtype)
     return out[:, 0] if squeeze else out
 

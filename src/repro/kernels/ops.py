@@ -14,7 +14,8 @@ import functools
 import jax
 
 from . import ref
-from .feature_matvec import feature_matvec as _fmv, feature_rmatvec as _frmv
+from .feature_matvec import feature_matvec as _fmv, \
+    feature_rmatvec as _frmv, feature_hvp as _fhvp
 from .tridiag_matvec import tridiag_matvec as _tdmv
 from .moe_combine import moe_combine as _moec
 from .flash_decode import flash_decode as _fdec
@@ -34,6 +35,14 @@ def feature_rmatvec(A_j, r, use_kernel: bool = True):
     if use_kernel:
         return _frmv(A_j, r)
     return ref.feature_rmatvec_ref(A_j, r)
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel",))
+def feature_hvp(A_j, h, av, use_kernel: bool = True):
+    """u_j = A_j^T (h ⊙ av) (the fused HVP data term)."""
+    if use_kernel:
+        return _fhvp(A_j, h, av)
+    return ref.feature_hvp_ref(A_j, h, av)
 
 
 @functools.partial(jax.jit, static_argnames=("use_kernel",))

@@ -24,6 +24,16 @@ def feature_rmatvec_ref(A_j, r):
     return (A_j.T @ r[:, None])[:, 0]
 
 
+def feature_hvp_ref(A_j, h, av):
+    """u_j = A_j^T (h ⊙ av) — the HVP data term given reduced av = Av.
+
+    A_j: (n, d_j), h: (n,), av: (n,) or (n, B) -> (d_j,) or (d_j, B)
+    """
+    if av.ndim == 1:
+        return (A_j.T @ (h * av)[:, None])[:, 0]
+    return A_j.T @ (h[:, None] * av)
+
+
 def tridiag_matvec_ref(diag, off, v):
     """Banded tridiagonal matvec: out = T v with T = tri(off, diag, off).
 

@@ -20,6 +20,7 @@ import jax.numpy as jnp
 from ..configs import get as get_arch, canonical_ids
 from ..configs import shapes as S
 from ..core.comm import collective_bytes_from_hlo
+from ..core.runtime import resolve_oracle_backend
 from ..models import transformer as T
 from ..models import encdec as E
 from ..models.common import make_rules, sharding_ctx
@@ -100,13 +101,19 @@ def dryrun_one(arch_id: str, shape_name: str, *, multi_pod: bool = False,
                variant: str = "baseline",
                cfg_overrides: Optional[Dict[str, Any]] = None,
                microbatch: int = 1,
-               donate: bool = True) -> Dict[str, Any]:
+               donate: bool = True,
+               oracle_backend: Optional[str] = None) -> Dict[str, Any]:
     """Lower + compile one combo on the production mesh; return the record.
 
     ``cfg_overrides``: dataclasses.replace kwargs applied to the arch
     config (e.g. {"remat": "dots", "cache_dtype": "f8"}); "moe.<field>"
     keys address the nested MoE config. ``microbatch``: gradient-
     accumulation factor for train shapes (peak-memory lever).
+    ``oracle_backend``: the same compute-path switch as the DistERM
+    runtime ("kernel" routes model hot spots through the Pallas kernels
+    via ``cfg.use_pallas``; "auto" resolves per platform; None leaves the
+    arch config untouched). An explicit ``use_pallas`` in
+    ``cfg_overrides`` wins.
     """
     t0 = time.time()
     mod = get_arch(arch_id)
@@ -126,6 +133,11 @@ def dryrun_one(arch_id: str, shape_name: str, *, multi_pod: bool = False,
         if moe_kw and getattr(cfg, "moe", None) is not None:
             plain["moe"] = dataclasses.replace(cfg.moe, **moe_kw)
         cfg = dataclasses.replace(cfg, **plain)
+    if oracle_backend is not None and \
+            not (cfg_overrides and "use_pallas" in cfg_overrides):
+        cfg = dataclasses.replace(
+            cfg, use_pallas=resolve_oracle_backend(oracle_backend)
+            == "kernel")
     mesh = make_production_mesh(multi_pod=multi_pod)
     if getattr(cfg, "moe", None) is not None and \
             not (cfg_overrides and "moe.groups" in cfg_overrides):
@@ -246,6 +258,7 @@ def dryrun_one(arch_id: str, shape_name: str, *, multi_pod: bool = False,
                 else "16x16(data,model)",
         "n_chips": n_chips,
         "fsdp": fsdp,
+        "use_pallas": bool(getattr(cfg, "use_pallas", False)),
         "rules_overrides": rules_overrides or {},
         "n_params": n_total, "n_params_active": n_active,
         "hlo_flops": flops, "hlo_bytes": bytes_accessed,
@@ -275,7 +288,8 @@ def dryrun_one(arch_id: str, shape_name: str, *, multi_pod: bool = False,
 
 def run_all(out_dir: str, multi_pod: bool, archs=None, shapes=None,
             force: bool = False, variant: str = "baseline",
-            rules_overrides=None, cfg_overrides=None, microbatch: int = 1):
+            rules_overrides=None, cfg_overrides=None, microbatch: int = 1,
+            oracle_backend: Optional[str] = None):
     os.makedirs(out_dir, exist_ok=True)
     archs = archs or canonical_ids()
     shapes = shapes or list(S.SHAPES)
@@ -284,6 +298,11 @@ def run_all(out_dir: str, multi_pod: bool, archs=None, shapes=None,
         for shape in shapes:
             tag = f"{arch}__{shape}__{'pod2' if multi_pod else 'pod1'}" \
                   f"__{variant}"
+            if oracle_backend is not None:
+                # the backend changes the compiled HLO like a variant
+                # does; tag with the RESOLVED choice ("auto" is
+                # platform-dependent and must not alias cache entries)
+                tag += f"__ob-{resolve_oracle_backend(oracle_backend)}"
             path = os.path.join(out_dir, tag + ".json")
             if os.path.exists(path) and not force:
                 print(f"[skip cached] {tag}")
@@ -294,7 +313,8 @@ def run_all(out_dir: str, multi_pod: bool, archs=None, shapes=None,
                                  variant=variant,
                                  rules_overrides=rules_overrides,
                                  cfg_overrides=cfg_overrides,
-                                 microbatch=microbatch)
+                                 microbatch=microbatch,
+                                 oracle_backend=oracle_backend)
             except Exception:
                 rec = {"arch": arch, "shape": shape, "failed": True,
                        "traceback": traceback.format_exc()}
@@ -332,6 +352,11 @@ def main():
     ap.add_argument("--cfg", default=None,
                     help="JSON dict of config overrides (moe.* nested)")
     ap.add_argument("--microbatch", type=int, default=1)
+    ap.add_argument("--oracle-backend", default=None,
+                    choices=["auto", "einsum", "kernel"],
+                    help="compute-path switch shared with the DistERM "
+                         "runtime; sets cfg.use_pallas (kernel=True). "
+                         "Default: leave the arch config untouched.")
     args = ap.parse_args()
     overrides = json.loads(args.rules) if args.rules else None
     cfg_over = json.loads(args.cfg) if args.cfg else None
@@ -341,7 +366,8 @@ def main():
     for mp in meshes:
         run_all(args.out, mp, archs, shapes, force=args.force,
                 variant=args.variant, rules_overrides=overrides,
-                cfg_overrides=cfg_over, microbatch=args.microbatch)
+                cfg_overrides=cfg_over, microbatch=args.microbatch,
+                oracle_backend=args.oracle_backend)
 
 
 if __name__ == "__main__":

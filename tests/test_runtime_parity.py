@@ -1,5 +1,17 @@
-"""LocalDistERM vs ShardedDistERM (shard_map) parity — run in a
-subprocess so the 8-device XLA flag doesn't leak into other tests."""
+"""Backend conformance: {Local, Sharded} execution x {einsum, kernel}
+oracle backends must agree.
+
+Run in a subprocess so the 8-device XLA flag doesn't leak into other
+tests. Two layers:
+
+  * ``test_shard_map_parity`` — the original Local-vs-shard_map parity on
+    the default oracle backend.
+  * ``test_backend_conformance_matrix`` — EVERY registered algorithm run
+    under all four (execution, oracle) combinations produces matching
+    final iterates and the same communication structure. Iterating the
+    registry is deliberate: registering a new algorithm without teaching
+    this suite how to drive it fails the test.
+"""
 import json
 import os
 import subprocess
@@ -36,16 +48,103 @@ print(json.dumps(out))
 """
 
 
-@pytest.mark.slow
-def test_shard_map_parity():
+MATRIX_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import numpy as np
+import jax, jax.numpy as jnp
+from jax import lax
+from repro.core import make_random_erm
+from repro.core.partition import even_partition
+from repro.core.runtime import ORACLE_BACKENDS, LocalDistERM, run_sharded
+from repro.core.algorithms import bcd, dagd, dgd, disco_f, dsvrg, prox_dagd
+from repro.core.algorithms.prox_dagd import soft_threshold
+from repro.experiments.registry import ALGORITHM_REGISTRY
+
+M, D, N, R = 8, 48, 32, 12
+prob = make_random_erm(n=N, d=D, loss="squared", lam=0.05, seed=4)
+L = prob.smoothness_bound()
+part = even_partition(D, M)
+A = np.asarray(prob.A)
+block_L = np.array(
+    [np.linalg.norm(A[:, off:off + b], 2) ** 2 / N + prob.lam
+     for off, b in zip(part.offsets, part.block_sizes)])
+L_max = float(np.max(np.sum(A ** 2, axis=1)) + prob.lam)
+
+
+def make_runners(name):
+    # (local, sharded) drivers; bcd needs its per-block constant in the
+    # stacked (m, 1) layout locally vs a per-shard scalar under shard_map
+    if name == "bcd":
+        bl = jnp.asarray(block_L)
+        return (lambda dist, r: bcd(dist, r, block_L=bl[:, None], m=M),
+                lambda dist, r: bcd(dist, r,
+                                    block_L=bl[lax.axis_index("model")],
+                                    m=M))
+    if name == "dsvrg":
+        fn = lambda dist, r: dsvrg(dist, r, L_max=L_max, lam=prob.lam,
+                                   seed=7, eta=1.0 / (4.0 * L_max))
+        return fn, fn
+    if name == "prox_dagd":
+        fn = lambda dist, r: prox_dagd(dist, r, L=L, lam=prob.lam,
+                                       prox=soft_threshold(1e-3))
+        return fn, fn
+    algo = {"dgd": dgd, "dagd": dagd, "disco_f": disco_f}[name]
+    fn = lambda dist, r: algo(dist, r, L=L, lam=prob.lam)
+    return fn, fn
+
+
+out = {}
+for name in sorted(ALGORITHM_REGISTRY):
+    local_fn, sharded_fn = make_runners(name)
+    iterates, op_counts = {}, {}
+    for be in ORACLE_BACKENDS:
+        dist = LocalDistERM(prob, part, backend=be)
+        iterates[f"local/{be}"] = dist.gather_w(local_fn(dist, R))
+        op_counts[f"local/{be}"] = dist.comm.ledger.op_counts()
+        w_sh, led = run_sharded(prob, sharded_fn, rounds=R, backend=be)
+        iterates[f"sharded/{be}"] = w_sh
+        op_counts[f"sharded/{be}"] = led.op_counts()
+    ref = iterates["local/einsum"]
+    ref_ops = op_counts["local/einsum"]
+    out[name] = {
+        "combos": sorted(iterates),
+        "max_diff": max(float(jnp.max(jnp.abs(w - ref)))
+                        for w in iterates.values()),
+        "ops_agree": all(ops == ref_ops for ops in op_counts.values()),
+    }
+print(json.dumps(out))
+"""
+
+
+def _run_script(script: str) -> dict:
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
-    res = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+    res = subprocess.run([sys.executable, "-c", script], env=env,
                          capture_output=True, text=True, timeout=600)
     assert res.returncode == 0, res.stderr[-3000:]
-    out = json.loads(res.stdout.strip().splitlines()[-1])
+    return json.loads(res.stdout.strip().splitlines()[-1])
+
+
+@pytest.mark.slow
+def test_shard_map_parity():
+    out = _run_script(SCRIPT)
     for name, rec in out.items():
         assert rec["max_diff"] < 1e-4, (name, rec)
         # identical communication structure per round (trace-time count
         # for sharded == per-round python count for local)
         assert set(rec["sharded_ops"]) == set(rec["local_ops"]), name
+
+
+@pytest.mark.slow
+def test_backend_conformance_matrix():
+    """Every registered algorithm x {Local, Sharded} x {einsum, kernel}:
+    matching final iterates and identical per-run op counts."""
+    out = _run_script(MATRIX_SCRIPT)
+    assert len(out) >= 6          # the six reference algorithms
+    for name, rec in out.items():
+        assert rec["combos"] == ["local/einsum", "local/kernel",
+                                 "sharded/einsum", "sharded/kernel"], name
+        assert rec["max_diff"] < 1e-4, (name, rec)
+        assert rec["ops_agree"], (name, rec)
