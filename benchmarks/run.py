@@ -8,12 +8,14 @@ Default mode prints ``name,us_per_call,derived`` CSV rows:
   comm_cost        — feature- vs sample-partition per-round bytes
   kernel_bench     — Pallas/jnp hot-loop microbenchmarks
   oracle_backends  — einsum vs Pallas-kernel per-round wall-clock
+  round_engine     — python-loop vs scan-compiled per-cell wall-clock
   roofline         — dry-run roofline terms per (arch x shape x mesh)
 
 The theorem rows are thin wrappers over ``repro.experiments``; pass
 ``--sweeps`` to additionally write the full JSON + Markdown reports to
 ``docs/results/`` (equivalent to ``python -m repro.experiments.sweep
---preset all``), or ``--sweep NAME`` for a single preset.
+--preset all`` followed by the round-engine ablation report), or
+``--sweep NAME`` for a single preset.
 """
 from __future__ import annotations
 
@@ -41,12 +43,19 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
             sweep_argv += ["--preset", p]
         if args.out:
             sweep_argv += ["--out", args.out]
-        return sweep_main(sweep_argv)
+        rc = sweep_main(sweep_argv)
+        if args.sweeps:
+            # the round-engine ablation publishes to the same results
+            # tree; --sweeps is the "regenerate docs/results" entry point
+            from .round_engine import main as round_engine_main
+            re_argv = ["--out", args.out] if args.out else []
+            rc = rc or round_engine_main(re_argv)
+        return rc
 
     print("name,us_per_call,derived")
     from . import (comm_cost, kernel_bench, m_invariance,
-                   moe_dispatch_ablation, oracle_backends, roofline,
-                   thm2_rounds, thm3_rounds, thm4_incremental)
+                   moe_dispatch_ablation, oracle_backends, round_engine,
+                   roofline, thm2_rounds, thm3_rounds, thm4_incremental)
     thm2_rounds.run()
     thm3_rounds.run()
     thm4_incremental.run()
@@ -54,6 +63,7 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     comm_cost.run()
     kernel_bench.run()
     oracle_backends.run()
+    round_engine.run()
     moe_dispatch_ablation.run()
     roofline.run()
     return 0

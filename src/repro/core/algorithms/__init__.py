@@ -14,13 +14,22 @@ ReduceAll ops per round, and every such op is metered by the CommLedger.
   dsvrg    — feature-partitioned SVRG (incremental family I^{lam,L})
   prox_dagd— FISTA for composite f + psi with separable psi: the prox is
              BLOCK-LOCAL under the feature partition (zero extra comm)
+
+Each algorithm exists in two forms:
+
+  * ``<name>(dist, rounds, ..., engine="python")`` — the historical
+    callable (runs the step functions through the round engine; the
+    python engine reproduces the per-call semantics exactly);
+  * ``<name>_program(dist, rounds, ...) -> RoundProgram`` — the step
+    form the scan engine compiles (``core.engine.run_program``).
 """
-from .dgd import dgd
-from .prox_dagd import box_projection, prox_dagd, soft_threshold
-from .dagd import dagd
-from .bcd import bcd
-from .disco_f import disco_f
-from .dsvrg import dsvrg
+from .dgd import dgd, dgd_program
+from .prox_dagd import (box_projection, prox_dagd, prox_dagd_program,
+                        soft_threshold)
+from .dagd import dagd, dagd_program
+from .bcd import bcd, bcd_program
+from .disco_f import disco_f, disco_f_program
+from .dsvrg import dsvrg, dsvrg_program
 
 ALGORITHMS = {
     "dgd": dgd,
@@ -31,5 +40,17 @@ ALGORITHMS = {
     "dsvrg": dsvrg,
 }
 
+PROGRAMS = {
+    "dgd": dgd_program,
+    "prox_dagd": prox_dagd_program,
+    "dagd": dagd_program,
+    "bcd": bcd_program,
+    "disco_f": disco_f_program,
+    "dsvrg": dsvrg_program,
+}
+
 __all__ = ["dgd", "dagd", "bcd", "disco_f", "dsvrg",
-           "prox_dagd", "soft_threshold", "box_projection", "ALGORITHMS"]
+           "prox_dagd", "soft_threshold", "box_projection",
+           "dgd_program", "dagd_program", "bcd_program", "disco_f_program",
+           "dsvrg_program", "prox_dagd_program",
+           "ALGORITHMS", "PROGRAMS"]

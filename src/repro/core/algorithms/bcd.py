@@ -12,27 +12,40 @@ bound separates from.
 """
 from __future__ import annotations
 
-from typing import Optional, Sequence
+from typing import Optional
 
 import jax.numpy as jnp
 
+from ..engine import RoundProgram, Segment, run_program
 
-def bcd(dist, rounds: int, block_L, beta: Optional[float] = None,
-        m: Optional[int] = None, history: bool = False):
+
+def bcd_program(dist, rounds: int, block_L, beta: Optional[float] = None,
+                m: Optional[int] = None) -> RoundProgram:
     """``block_L``: per-block Lipschitz bounds L_j, broadcastable against w
     (stacked (m, 1) in local mode, scalar per shard in sharded mode)."""
     if beta is None:
         if m is None:
             raise ValueError("need beta or m for the ESO factor")
         beta = float(m)
-    w = dist.zeros_like_w()
-    step = 1.0 / (beta * jnp.asarray(block_L))
-    iterates = []
-    for _ in range(rounds):
+    step_size = 1.0 / (beta * jnp.asarray(block_L))
+
+    def step(dist, w, _):
         z = dist.response(w)
         g = dist.pgrad(w, z)
-        w = w - step * g
+        w_new = w - step_size * g
         dist.end_round()
-        if history:
-            iterates.append(w)
-    return (w, {"iterates": iterates}) if history else w
+        return w_new, w_new
+
+    return RoundProgram(init=dist.zeros_like_w(),
+                        segments=[Segment(step, rounds, name="bcd")],
+                        final=lambda w: w)
+
+
+def bcd(dist, rounds: int, block_L, beta: Optional[float] = None,
+        m: Optional[int] = None, history: bool = False,
+        engine: str = "python"):
+    res = run_program(dist,
+                      bcd_program(dist, rounds, block_L=block_L, beta=beta,
+                                  m=m),
+                      engine=engine, history=history)
+    return (res.w, {"iterates": res.iterates}) if history else res.w

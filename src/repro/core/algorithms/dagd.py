@@ -9,50 +9,72 @@ F^{lam,L} with the minimal possible communication, and its round count
    smooth convex   : O( sqrt(L/eps) |w*| )         [Nesterov 2.2.19]
 
 matches the paper's lower bounds — the tightness witnesses.
+
+Expressed in step form (``dagd_program``) for the round engine: the FISTA
+``t_k`` recursion is data-independent, so the smooth-case momentum
+coefficients are precomputed per round in float64 and fed to the step as
+the scanned ``xs`` — both engines then run bit-identical f32 arithmetic.
 """
 from __future__ import annotations
 
 import math
 
+import numpy as np
+
+from ..engine import RoundProgram, Segment, run_program
+
+
+def fista_momentum_schedule(rounds: int) -> np.ndarray:
+    """The (t_k - 1)/t_{k+1} coefficient sequence, rounded to f32 exactly
+    as the historical Python loop's weak-typed scalars were."""
+    t, coeffs = 1.0, []
+    for _ in range(rounds):
+        t_new = 0.5 * (1.0 + math.sqrt(1.0 + 4.0 * t * t))
+        coeffs.append((t - 1.0) / t_new)
+        t = t_new
+    return np.asarray(coeffs, dtype=np.float32)
+
+
+def dagd_program(dist, rounds: int, L: float, lam: float = 0.0
+                 ) -> RoundProgram:
+    inv_L = 1.0 / L
+    zero = dist.zeros_like_w()
+
+    if lam > 0:
+        kappa = L / lam
+        beta = (math.sqrt(kappa) - 1.0) / (math.sqrt(kappa) + 1.0)
+
+        def step(dist, carry, _):
+            x, y = carry
+            z = dist.response(y)
+            g = dist.pgrad(y, z)
+            x_new = y - inv_L * g
+            y_new = x_new + beta * (x_new - x)
+            dist.end_round()
+            return (x_new, y_new), x_new
+
+        return RoundProgram(init=(zero, zero),
+                            segments=[Segment(step, rounds, name="agd")],
+                            final=lambda c: c[0])
+
+    def step(dist, carry, coeff):
+        x, y = carry
+        z = dist.response(y)
+        g = dist.pgrad(y, z)
+        x_new = y - inv_L * g
+        y_new = x_new + coeff * (x_new - x)
+        dist.end_round()
+        return (x_new, y_new), x_new
+
+    return RoundProgram(
+        init=(zero, zero),
+        segments=[Segment(step, rounds, xs=fista_momentum_schedule(rounds),
+                          name="fista")],
+        final=lambda c: c[0])
+
 
 def dagd(dist, rounds: int, L: float, lam: float = 0.0,
-         history: bool = False):
-    if lam > 0:
-        return _dagd_strongly_convex(dist, rounds, L, lam, history)
-    return _dagd_smooth(dist, rounds, L, history)
-
-
-def _dagd_strongly_convex(dist, rounds, L, lam, history):
-    kappa = L / lam
-    beta = (math.sqrt(kappa) - 1.0) / (math.sqrt(kappa) + 1.0)
-    x = dist.zeros_like_w()
-    y = dist.zeros_like_w()
-    iterates = []
-    for _ in range(rounds):
-        z = dist.response(y)
-        g = dist.pgrad(y, z)
-        x_new = y - (1.0 / L) * g
-        y = x_new + beta * (x_new - x)
-        x = x_new
-        dist.end_round()
-        if history:
-            iterates.append(x)
-    return (x, {"iterates": iterates}) if history else x
-
-
-def _dagd_smooth(dist, rounds, L, history):
-    x = dist.zeros_like_w()
-    y = dist.zeros_like_w()
-    t = 1.0
-    iterates = []
-    for _ in range(rounds):
-        z = dist.response(y)
-        g = dist.pgrad(y, z)
-        x_new = y - (1.0 / L) * g
-        t_new = 0.5 * (1.0 + math.sqrt(1.0 + 4.0 * t * t))
-        y = x_new + ((t - 1.0) / t_new) * (x_new - x)
-        x, t = x_new, t_new
-        dist.end_round()
-        if history:
-            iterates.append(x)
-    return (x, {"iterates": iterates}) if history else x
+         history: bool = False, engine: str = "python"):
+    res = run_program(dist, dagd_program(dist, rounds, L=L, lam=lam),
+                      engine=engine, history=history)
+    return (res.w, {"iterates": res.iterates}) if history else res.w

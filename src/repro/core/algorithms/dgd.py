@@ -11,20 +11,28 @@ paper attributes to partition-on-feature algorithms.
 """
 from __future__ import annotations
 
-from typing import Optional
+from ..engine import RoundProgram, Segment, run_program
+
+
+def dgd_program(dist, rounds: int, L: float, lam: float = 0.0
+                ) -> RoundProgram:
+    eta = 2.0 / (L + lam) if lam > 0 else 1.0 / L
+
+    def step(dist, w, _):
+        z = dist.response(w)
+        g = dist.pgrad(w, z)
+        w_new = w - eta * g
+        dist.end_round()
+        return w_new, w_new
+
+    return RoundProgram(init=dist.zeros_like_w(),
+                        segments=[Segment(step, rounds, name="gd")],
+                        final=lambda w: w)
 
 
 def dgd(dist, rounds: int, L: float, lam: float = 0.0,
-        history: bool = False):
+        history: bool = False, engine: str = "python"):
     """Plain GD with the standard step 2/(L+lam) (=1/L if lam=0)."""
-    eta = 2.0 / (L + lam) if lam > 0 else 1.0 / L
-    w = dist.zeros_like_w()
-    iterates = []
-    for _ in range(rounds):
-        z = dist.response(w)
-        g = dist.pgrad(w, z)
-        w = w - eta * g
-        dist.end_round()
-        if history:
-            iterates.append(w)
-    return (w, {"iterates": iterates}) if history else w
+    res = run_program(dist, dgd_program(dist, rounds, L=L, lam=lam),
+                      engine=engine, history=history)
+    return (res.w, {"iterates": res.iterates}) if history else res.w

@@ -14,50 +14,68 @@ communication.
 
 For non-quadratic GLM losses the standard damped outer loop is provided
 (a constant number of outer steps, each an inner CG run).
+
+Round structure is non-uniform — a Newton/gradient round followed by a
+run of identical CG rounds — so the step-form program uses one segment
+per phase with a carry that is uniform across both step kinds:
+``(w0, z, u, r, p, rs)``.  The initial CG residual norm ``rs`` is folded
+into the Newton round's step; the flat CommLedger record stream is
+unchanged from the historical loop (only the position of a round
+boundary relative to that one scalar reduce moves, which no meter
+quantity — records, rounds, bytes/round — observes).
 """
 from __future__ import annotations
 
-from typing import Optional
-
 import jax.numpy as jnp
 
+from ..engine import RoundProgram, Segment, run_program
 
-def _cg(dist, z, g, iters: int, w0=None, iterates=None):
-    """Distributed CG on  f''(w) u = g,  given reduced z = A w.
-    If ``iterates`` is a list, the per-CG-round point w0 - u_k is appended
-    (one entry per communication round, for rounds-to-eps accounting)."""
-    u = dist.zeros_like_w()
-    r = g                       # residual b - H u with u = 0
-    p = r
-    rs = dist.dot(r, r, tag="cg.rs")
-    for _ in range(iters):
+
+def disco_f_program(dist, rounds: int, L: float, lam: float = 0.0,
+                    newton_steps: int = 1) -> RoundProgram:
+    """``rounds`` is the TOTAL communication-round budget; it is split
+    evenly across ``newton_steps`` inner CG runs (quadratics: 1 outer)."""
+    inner = max(1, rounds // max(1, newton_steps) - 1)
+    zero = dist.zeros_like_w()
+    init = dict(w0=zero, z=jnp.zeros((dist.n,)), u=zero, r=zero, p=zero,
+                rs=jnp.asarray(0.0))
+
+    def step_newton(dist, carry, _):
+        """One gradient round: refresh z, g at w = w0 - u and reset CG."""
+        w = carry["w0"] - carry["u"]
+        z = dist.response(w, tag="newton.z")
+        g = dist.pgrad(w, z)
+        rs = dist.dot(g, g, tag="cg.rs")
+        dist.end_round()
+        return dict(w0=w, z=z, u=jnp.zeros_like(w), r=g, p=g, rs=rs), w
+
+    def step_cg(dist, carry, _):
+        """One distributed CG iteration on  f''(w) u = g."""
+        w0, z = carry["w0"], carry["z"]
+        u, r, p, rs = carry["u"], carry["r"], carry["p"], carry["rs"]
         av = dist.response(p, tag="cg.Ap")     # R^n ReduceAll
         hp = dist.phvp(p, z, av)
         alpha = rs / jnp.maximum(dist.dot(p, hp, tag="cg.pHp"), 1e-30)
         u = u + alpha * p
         r = r - alpha * hp
         rs_new = dist.dot(r, r, tag="cg.rs")
-        p = r + (rs_new / jnp.maximum(rs, 1e-30)) * p
-        rs = rs_new
+        p_new = r + (rs_new / jnp.maximum(rs, 1e-30)) * p
         dist.end_round()
-        if iterates is not None and w0 is not None:
-            iterates.append(w0 - u)
-    return u
+        return dict(w0=w0, z=z, u=u, r=r, p=p_new, rs=rs_new), w0 - u
+
+    segments = []
+    for _ in range(max(1, newton_steps)):
+        segments.append(Segment(step_newton, 1, name="newton"))
+        segments.append(Segment(step_cg, inner, name="cg"))
+    return RoundProgram(init=init, segments=segments,
+                        final=lambda c: c["w0"] - c["u"])
 
 
 def disco_f(dist, rounds: int, L: float, lam: float = 0.0,
-            newton_steps: int = 1, history: bool = False):
-    """``rounds`` is the TOTAL communication-round budget; it is split
-    evenly across ``newton_steps`` inner CG runs (quadratics: 1 outer)."""
-    w = dist.zeros_like_w()
-    iterates = [] if history else None
-    inner = max(1, rounds // max(1, newton_steps) - 1)
-    for _ in range(newton_steps):
-        z = dist.response(w, tag="newton.z")
-        g = dist.pgrad(w, z)
-        dist.end_round()
-        if history:
-            iterates.append(w)     # the round spent on the gradient
-        u = _cg(dist, z, g, iters=inner, w0=w, iterates=iterates)
-        w = w - u
-    return (w, {"iterates": iterates}) if history else w
+            newton_steps: int = 1, history: bool = False,
+            engine: str = "python"):
+    res = run_program(dist,
+                      disco_f_program(dist, rounds, L=L, lam=lam,
+                                      newton_steps=newton_steps),
+                      engine=engine, history=history)
+    return (res.w, {"iterates": res.iterates}) if history else res.w

@@ -10,50 +10,78 @@ Snapshot full gradients cost one R^n ReduceAll.
 SVRG round complexity O((n + kappa_max) log(1/eps)) does NOT meet the
 Theorem-4 floor Omega((sqrt(n kappa) + n) log(1/eps)); the paper leaves
 tightness open. benchmarks/thm4_incremental.py plots both.
+
+Step form: sampling is data-independent, so the full index sequence is
+pre-drawn (same ``RandomState`` order as the historical loop) and scanned
+over as ``xs`` — one snapshot segment plus one stochastic segment per
+epoch, with a carry ``(w, w_snap, z_snap, g_snap)`` that is uniform
+across both step kinds.
 """
 from __future__ import annotations
 
 import numpy as np
 import jax.numpy as jnp
 
+from ..engine import RoundProgram, Segment, run_program
 
-def dsvrg(dist, rounds: int, L_max: float, lam: float = 0.0,
-          epoch_len: int = 0, seed: int = 0, history: bool = False,
-          eta: float = 0.0):
-    """``L_max``: max per-component smoothness (max_i |a_i|^2 l''max + lam).
-    ``rounds`` counts every stochastic step as a round (paper's metric).
-    Requires the backend to expose per-sample rows: dist.sample_row(i).
-    """
+
+def dsvrg_program(dist, rounds: int, L_max: float, lam: float = 0.0,
+                  epoch_len: int = 0, seed: int = 0, eta: float = 0.0
+                  ) -> RoundProgram:
     n = dist.n
     epoch_len = epoch_len or 2 * n
     eta = eta or 1.0 / (10.0 * L_max)
     rng = np.random.RandomState(seed)
+    zero = dist.zeros_like_w()
+    init = dict(w=zero, w_snap=zero, z_snap=jnp.zeros((n,)), g_snap=zero)
 
-    w = dist.zeros_like_w()
-    iterates = []
-    used = 0
-    while used < rounds:
-        # --- snapshot: one R^n ReduceAll + local full partial gradient
+    def step_snapshot(dist, carry, _):
+        """One R^n ReduceAll + local full partial gradient; w unchanged
+        (the snapshot consumes a round, so history index k == round k)."""
+        w = carry["w"]
         z_snap = dist.response(w, tag="svrg.snapshot")
         g_snap = dist.pgrad(w, z_snap)   # includes lam*w term
-        w_snap = w
         dist.end_round()
+        return dict(w=w, w_snap=w, z_snap=z_snap, g_snap=g_snap), w
+
+    def step_inner(dist, carry, i):
+        """One stochastic step == one scalar-ReduceAll round."""
+        w, w_snap = carry["w"], carry["w_snap"]
+        z_snap, g_snap = carry["z_snap"], carry["g_snap"]
+        a_i = dist.sample_row(i)                  # local block of row i
+        zi = dist.dot_row(a_i, w, tag="svrg.aw")  # scalar reduce
+        zi_snap = z_snap[i]
+        gi = dist.row_grad(a_i, zi, i) + lam * w
+        gi_snap = dist.row_grad(a_i, zi_snap, i) + lam * w_snap
+        w_new = w - eta * (gi - gi_snap + g_snap)
+        dist.end_round()
+        return dict(w=w_new, w_snap=w_snap, z_snap=z_snap,
+                    g_snap=g_snap), w_new
+
+    segments, used = [], 0
+    while used < rounds:
+        segments.append(Segment(step_snapshot, 1, name="snapshot"))
         used += 1
-        if history:
-            # the snapshot consumes a round: record the (unchanged)
-            # iterate so history index k == communication round k
-            iterates.append(w)
-        # --- inner loop: one scalar-ReduceAll round per stochastic step
-        for _ in range(min(epoch_len, rounds - used)):
-            i = int(rng.randint(n))
-            a_i = dist.sample_row(i)              # local block of row i
-            zi = dist.dot_row(a_i, w, tag="svrg.aw")        # scalar reduce
-            zi_snap = z_snap[i]
-            gi = dist.row_grad(a_i, zi, i) + lam * w
-            gi_snap = dist.row_grad(a_i, zi_snap, i) + lam * w_snap
-            w = w - eta * (gi - gi_snap + g_snap)
-            dist.end_round()
-            used += 1
-            if history:
-                iterates.append(w)
-    return (w, {"iterates": iterates}) if history else w
+        k = min(epoch_len, rounds - used)
+        if k > 0:
+            idx = np.asarray([rng.randint(n) for _ in range(k)],
+                             dtype=np.int32)
+            segments.append(Segment(step_inner, k, xs=idx, name="epoch"))
+            used += k
+    return RoundProgram(init=init, segments=segments,
+                        final=lambda c: c["w"])
+
+
+def dsvrg(dist, rounds: int, L_max: float, lam: float = 0.0,
+          epoch_len: int = 0, seed: int = 0, history: bool = False,
+          eta: float = 0.0, engine: str = "python"):
+    """``L_max``: max per-component smoothness (max_i |a_i|^2 l''max + lam).
+    ``rounds`` counts every stochastic step as a round (paper's metric).
+    Requires the backend to expose per-sample rows: dist.sample_row(i).
+    """
+    res = run_program(dist,
+                      dsvrg_program(dist, rounds, L_max=L_max, lam=lam,
+                                    epoch_len=epoch_len, seed=seed,
+                                    eta=eta),
+                      engine=engine, history=history)
+    return (res.w, {"iterates": res.iterates}) if history else res.w

@@ -16,6 +16,9 @@ from typing import Callable
 
 import jax.numpy as jnp
 
+from ..engine import RoundProgram, Segment, run_program
+from .dagd import fista_momentum_schedule
+
 
 def soft_threshold(tau: float):
     """prox of tau*|w|_1 — elementwise, hence block-local."""
@@ -31,31 +34,52 @@ def box_projection(lo: float, hi: float):
     return prox
 
 
+def prox_dagd_program(dist, rounds: int, L: float, prox: Callable,
+                      lam: float = 0.0) -> RoundProgram:
+    inv_L = 1.0 / L
+    zero = dist.zeros_like_w()
+
+    if lam > 0:
+        kappa = L / lam
+        beta = (math.sqrt(kappa) - 1.0) / (math.sqrt(kappa) + 1.0)
+
+        def step(dist, carry, _):
+            x, y = carry
+            z = dist.response(y)
+            g = dist.pgrad(y, z)
+            x_new = prox(y - inv_L * g, inv_L)   # block-local prox
+            y_new = x_new + beta * (x_new - x)
+            dist.end_round()
+            return (x_new, y_new), x_new
+
+        return RoundProgram(init=(zero, zero),
+                            segments=[Segment(step, rounds, name="apg")],
+                            final=lambda c: c[0])
+
+    def step(dist, carry, coeff):
+        x, y = carry
+        z = dist.response(y)
+        g = dist.pgrad(y, z)
+        x_new = prox(y - inv_L * g, inv_L)       # block-local prox
+        y_new = x_new + coeff * (x_new - x)
+        dist.end_round()
+        return (x_new, y_new), x_new
+
+    return RoundProgram(
+        init=(zero, zero),
+        segments=[Segment(step, rounds, xs=fista_momentum_schedule(rounds),
+                          name="fista")],
+        final=lambda c: c[0])
+
+
 def prox_dagd(dist, rounds: int, L: float, prox: Callable,
-              lam: float = 0.0, history: bool = False):
+              lam: float = 0.0, history: bool = False,
+              engine: str = "python"):
     """FISTA (lam=0) / accelerated proximal gradient (lam>0) on
     f(w) + psi(w); ``prox(w_block, step)`` must be coordinate-separable.
     One R^n ReduceAll per round, like DAGD."""
-    x = dist.zeros_like_w()
-    y = dist.zeros_like_w()
-    t = 1.0
-    beta_sc = None
-    if lam > 0:
-        kappa = L / lam
-        beta_sc = (math.sqrt(kappa) - 1.0) / (math.sqrt(kappa) + 1.0)
-    iterates = []
-    for _ in range(rounds):
-        z = dist.response(y)
-        g = dist.pgrad(y, z)
-        x_new = prox(y - (1.0 / L) * g, 1.0 / L)   # block-local prox
-        if beta_sc is not None:
-            y = x_new + beta_sc * (x_new - x)
-        else:
-            t_new = 0.5 * (1.0 + math.sqrt(1.0 + 4.0 * t * t))
-            y = x_new + ((t - 1.0) / t_new) * (x_new - x)
-            t = t_new
-        x = x_new
-        dist.end_round()
-        if history:
-            iterates.append(x)
-    return (x, {"iterates": iterates}) if history else x
+    res = run_program(dist,
+                      prox_dagd_program(dist, rounds, L=L, prox=prox,
+                                        lam=lam),
+                      engine=engine, history=history)
+    return (res.w, {"iterates": res.iterates}) if history else res.w

@@ -1,0 +1,261 @@
+"""Scan-compiled round engine: one XLA program per algorithm run.
+
+The paper's object of study is communication *rounds* — thousands of them
+per certification cell — and every algorithm in ``core.algorithms`` is a
+fixed per-round recurrence.  Executing those recurrences as Python loops
+costs one dispatch per op per round; compiling the whole multi-round run
+into a single ``jax.lax.scan`` program is the standard JAX idiom for this
+workload shape and removes both the dispatch overhead and the per-round
+history materialization.
+
+Algorithms are expressed as **round programs**:
+
+  * a ``step(dist, carry, x) -> (carry, w_k)`` function — exactly one
+    communication round: metered oracle calls, a block-local update, one
+    ``dist.end_round()``, and the iterate ``w_k`` to measure this round;
+  * an initial carry (a pytree of arrays, momentum scalars included);
+  * ``Segment``s — a run is a sequence of (step, count[, xs]) segments so
+    algorithms with non-uniform round structure (DISCO-F's Newton round
+    followed by CG rounds, DSVRG's snapshot + stochastic epochs) stay
+    expressible; per-round data-independent inputs (momentum coefficient
+    schedules, pre-drawn sample indices) ride along as ``xs``.
+
+Two engines execute a program:
+
+  * ``"python"`` — one ``step`` call per round, eager dispatch.  This is
+    the debugging / parity reference: it produces exactly the per-call
+    oracle stream (and therefore exactly the ``CommLedger`` records) of
+    the historical per-algorithm Python loops.
+  * ``"scan"``  — each segment's step is traced ONCE, wrapped in
+    ``lax.scan`` over the round count, and jitted, so an entire run is a
+    handful of XLA programs regardless of the round budget.
+
+**Trace-once ledger schedule.**  The ``CommLedger`` meters the paper's
+communication model, and certifications must be bit-invariant to the
+execution engine.  The scan engine therefore captures each step's op
+stream once (an abstract ``jax.eval_shape`` trace against a scratch
+ledger), silences the ledger during the compiled run, and replays the
+captured schedule ``count`` times into the real ledger.  Because the
+python engine runs the *same* step functions, the replayed stream is
+bit-identical to the per-call stream — ``tests/test_ledger_invariance``
+pins this.
+
+**In-scan gap measurement.**  Passing ``measure`` (any traceable
+``w_k -> scalar``, e.g. ``f(w_k) - f*``) folds suboptimality measurement
+into the scan as a per-round scalar output: a run returns a ``(K,)``
+gap series instead of a ``(K, m, d_max)`` iterate history.  ``measure``
+must not call metered oracles — it is measurement, not communication
+(the scan engine would bake its ops into the replayed schedule and the
+python engine would meter them; either corrupts the certification).
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Any, Callable, List, Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .comm import CommLedger
+
+
+ENGINES = ("python", "scan")
+
+_ENGINE_ENV = "REPRO_ROUND_ENGINE"
+
+
+def resolve_engine(engine: Optional[str] = None) -> str:
+    """Resolve an engine choice to ``"python"`` or ``"scan"``.
+
+    ``None``/``"auto"`` consults the ``REPRO_ROUND_ENGINE`` env var and
+    falls back to ``"scan"`` — the compiled engine is the production
+    default on every platform; the python engine exists for debugging
+    and parity testing.
+    """
+    if engine in (None, "auto"):
+        engine = os.environ.get(_ENGINE_ENV, "").strip() or None
+    if engine in (None, "auto"):
+        engine = "scan"
+    if engine not in ENGINES:
+        raise ValueError(f"unknown round engine {engine!r}; expected one "
+                         f"of {ENGINES + ('auto',)}")
+    return engine
+
+
+@dataclasses.dataclass
+class Segment:
+    """``count`` identical rounds driven by one step function.
+
+    ``step(dist, carry, x) -> (carry, w_k)`` must perform exactly one
+    communication round (ending with ``dist.end_round()``) and must keep
+    the carry pytree structure/shapes fixed across the segment.  ``xs``
+    optionally supplies a per-round input of leading dimension ``count``
+    (momentum coefficients, sample indices); when absent the step
+    receives the round index within the segment.
+    """
+
+    step: Callable
+    count: int
+    xs: Optional[np.ndarray] = None
+    name: str = ""
+
+    def __post_init__(self):
+        if self.count < 1:
+            raise ValueError(f"segment {self.name!r}: count must be >= 1")
+        if self.xs is not None and len(self.xs) != self.count:
+            raise ValueError(
+                f"segment {self.name!r}: xs leading dim "
+                f"{len(self.xs)} != count {self.count}")
+
+
+@dataclasses.dataclass
+class RoundProgram:
+    """An algorithm run: initial carry, round segments, final extractor."""
+
+    init: Any                        # carry pytree
+    segments: List[Segment]
+    final: Callable                  # carry -> final iterate w
+
+    @property
+    def rounds(self) -> int:
+        return sum(seg.count for seg in self.segments)
+
+
+@dataclasses.dataclass
+class EngineResult:
+    w: Any                           # final iterate (stacked blocks / local)
+    rounds: int
+    gaps: Optional[np.ndarray] = None      # (K,) when measure was given
+    iterates: Optional[list] = None        # per-round iterates (history)
+
+
+class EngineSession:
+    """Reusable jit + schedule caches for repeated runs of the same
+    program against the same ``dist`` (e.g. benchmark repeats).  Keyed by
+    step-function identity, so program builders must construct each
+    distinct step once and share it across segments."""
+
+    def __init__(self):
+        self.runners = {}
+        self.schedules = {}
+
+
+def run_program(dist, program: RoundProgram, *, engine: Optional[str] = None,
+                measure: Optional[Callable] = None, history: bool = False,
+                session: Optional[EngineSession] = None) -> EngineResult:
+    """Execute a round program against a ``DistERM`` backend.
+
+    ``measure``: traceable ``w_k -> scalar`` folded into the run as a
+    per-round output (the ``(K,)`` gap series).  ``history``: collect the
+    raw per-round iterates instead (debugging / parity; materializes
+    ``(K, m, d_max)``).  The two are mutually exclusive.
+    """
+    if measure is not None and history:
+        raise ValueError("measure and history are mutually exclusive")
+    engine = resolve_engine(engine)
+    if engine == "python":
+        return _run_python(dist, program, measure, history)
+    return _run_scan(dist, program, measure, history,
+                     session if session is not None else EngineSession())
+
+
+# --------------------------------------------------------------------------
+# python engine — the per-call reference
+# --------------------------------------------------------------------------
+
+def _run_python(dist, program, measure, history) -> EngineResult:
+    carry = program.init
+    gaps, iterates, rounds = [], [], 0
+    for seg in program.segments:
+        for k in range(seg.count):
+            x = seg.xs[k] if seg.xs is not None else k
+            carry, w = seg.step(dist, carry, x)
+            rounds += 1
+            if measure is not None:
+                gaps.append(measure(w))
+            elif history:
+                iterates.append(w)
+    return EngineResult(
+        w=program.final(carry), rounds=rounds,
+        gaps=np.asarray(jnp.stack(gaps)) if measure is not None else None,
+        iterates=iterates if history else None)
+
+
+# --------------------------------------------------------------------------
+# scan engine — trace once, run compiled
+# --------------------------------------------------------------------------
+
+def _segment_xs(seg: Segment) -> np.ndarray:
+    if seg.xs is not None:
+        return np.asarray(seg.xs)
+    return np.arange(seg.count, dtype=np.int32)
+
+
+def _capture_schedule(dist, seg: Segment, carry, xs: np.ndarray):
+    """One abstract trace of the step against a scratch ledger: the
+    per-round op schedule (records + rounds) this segment will replay."""
+    real = dist.comm.ledger
+    scratch = CommLedger()
+    dist.comm.ledger = scratch
+    try:
+        x_abs = jax.ShapeDtypeStruct(xs.shape[1:], xs.dtype)
+        jax.eval_shape(lambda c, x: seg.step(dist, c, x), carry, x_abs)
+    finally:
+        dist.comm.ledger = real
+    return list(scratch.records), scratch.rounds
+
+
+def _build_runner(dist, step: Callable, measure, history):
+    collect_w = history and measure is None
+
+    def body(carry, x):
+        carry, w = step(dist, carry, x)
+        if measure is not None:
+            return carry, measure(w)
+        return carry, (w if collect_w else None)
+
+    return jax.jit(lambda carry, xs: lax.scan(body, carry, xs))
+
+
+def _run_scan(dist, program, measure, history,
+              session: EngineSession) -> EngineResult:
+    ledger = dist.comm.ledger
+    carry = program.init
+    outs, rounds = [], 0
+    for seg in program.segments:
+        xs = _segment_xs(seg)
+        sched_key = (seg.step, xs.dtype.str, xs.shape[1:])
+        if sched_key not in session.schedules:
+            session.schedules[sched_key] = _capture_schedule(
+                dist, seg, carry, xs)
+        run_key = (seg.step, measure, history)
+        runner = session.runners.get(run_key)
+        if runner is None:
+            runner = _build_runner(dist, seg.step, measure, history)
+            session.runners[run_key] = runner
+        # The compiled run records nothing: any trace-time metering goes
+        # to a throwaway ledger (jit may or may not retrace — either way
+        # the schedule replay below is the single source of truth).
+        dist.comm.ledger = CommLedger()
+        try:
+            carry, out = runner(carry, jnp.asarray(xs))
+        finally:
+            dist.comm.ledger = ledger
+        if measure is not None or history:
+            outs.append(out)
+        records, rounds_per_step = session.schedules[sched_key]
+        for _ in range(seg.count):
+            ledger.records.extend(records)
+        ledger.rounds += rounds_per_step * seg.count
+        rounds += seg.count
+    gaps = iterates = None
+    if measure is not None:
+        gaps = np.asarray(jnp.concatenate(outs)) if outs else np.zeros((0,))
+    elif history:
+        stacked = jnp.concatenate(outs, axis=0)
+        iterates = [stacked[k] for k in range(stacked.shape[0])]
+    return EngineResult(w=program.final(carry), rounds=rounds,
+                        gaps=gaps, iterates=iterates)

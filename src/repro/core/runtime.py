@@ -34,6 +34,14 @@ per-machine GEMVs inside ``response``/``pgrad``/``phvp`` are computed.
 The paper meters communication *rounds*, never local FLOPs, so the oracle
 backend MUST be invisible to the ``CommLedger`` — the conformance suite
 (``tests/test_ledger_invariance.py``) pins that invariant.
+
+A third orthogonal axis is the **round engine** (``core.engine``): whether
+an algorithm's rounds run as a per-call Python loop (``"python"``) or as
+one ``lax.scan``-compiled XLA program (``"scan"``).  ``run_sharded``
+accepts a step-form ``RoundProgram`` builder to compile the whole
+multi-round run inside the ``shard_map`` body; the ledger is expanded
+from the trace-once schedule to the same per-call stream the python loop
+produces.
 """
 from __future__ import annotations
 
@@ -82,6 +90,24 @@ def resolve_oracle_backend(backend: Optional[str] = None) -> str:
     return backend
 
 
+def _cached_loss_term(cache: dict, loss: "GLMLoss", which: str, z, y):
+    """Per-round memo of ``loss.grad(z, y)`` / ``loss.hess(z, y)``.
+
+    Keyed on the *identity* of the (possibly traced) response vector ``z``
+    — within a round every oracle call sees the same ``z`` object, so
+    e.g. repeated ``phvp`` calls in a CG loop reuse one Hessian-diagonal
+    evaluation. ``end_round()`` clears the cache, so nothing ever leaks
+    across a round boundary (or across traces: a tracer's identity dies
+    with its trace, and the cache dies with the round)."""
+    if cache.get("z") is not z:
+        cache.clear()
+        cache["z"] = z
+    if which not in cache:
+        fn = loss.grad if which == "grad" else loss.hess
+        cache[which] = fn(z, y)
+    return cache[which]
+
+
 class LocalDistERM:
     """m machines simulated on host; blocks stacked: A (m,n,dmax), w (m,dmax).
 
@@ -103,6 +129,7 @@ class LocalDistERM:
         self.lam = prob.lam
         self.loss: GLMLoss = prob.loss
         self.y = prob.y
+        self._round_cache: dict = {}
 
     # ---- paper oracles --------------------------------------------------
     def zeros_like_w(self):
@@ -118,7 +145,7 @@ class LocalDistERM:
 
     def pgrad(self, w_stk, z):
         """f'_j(w) for every j, stacked — local compute only."""
-        lgrad = self.loss.grad(z, self.y)                     # (n,)
+        lgrad = self._loss_term("grad", z)                    # (n,)
         if self.backend == "kernel":
             g = jax.vmap(kops.feature_rmatvec,
                          in_axes=(0, None))(self.A_stk, lgrad) / self.n
@@ -128,7 +155,7 @@ class LocalDistERM:
 
     def phvp(self, v_stk, z, av):
         """(f''(w) v)^[j] stacked, given reduced z=Aw and av=Av — local."""
-        h = self.loss.hess(z, self.y)
+        h = self._loss_term("hess", z)
         if self.backend == "kernel":
             out = jax.vmap(kops.feature_hvp,
                            in_axes=(0, None, None))(self.A_stk, h, av) \
@@ -137,9 +164,21 @@ class LocalDistERM:
             out = jnp.einsum("mnd,n->md", self.A_stk, h * av) / self.n
         return (out + self.lam * v_stk) * self.mask
 
+    def _loss_term(self, which: str, z):
+        return _cached_loss_term(self._round_cache, self.loss, which, z,
+                                 self.y)
+
     def dot(self, u_stk, v_stk, tag="dot"):
-        local = jnp.sum(u_stk * v_stk, axis=(-2, -1)) \
-            if u_stk.ndim > 2 else jnp.einsum("md,md->m", u_stk, v_stk)
+        u_stk, v_stk = jnp.asarray(u_stk), jnp.asarray(v_stk)
+        shape = (self.part.m, self.part.d_max)
+        if u_stk.shape != shape or v_stk.shape != shape:
+            raise ValueError(
+                f"dot expects stacked blocks of shape {shape}; got "
+                f"{u_stk.shape} and {v_stk.shape} — a wrong-rank input "
+                f"would silently reduce over the wrong axes")
+        # one masked contraction: padding coordinates never contribute,
+        # even if a caller let nonzero values leak into the pad region
+        local = jnp.einsum("md,md->m", u_stk * self.mask, v_stk)
         return self.comm.reduce_scalar(local, tag=tag)
 
     def value(self, w_stk, z):
@@ -148,6 +187,7 @@ class LocalDistERM:
         return jnp.sum(self.loss.value(z, self.y)) / self.n + 0.5 * self.lam * sq
 
     def end_round(self):
+        self._round_cache.clear()
         self.comm.end_round()
 
     # ---- incremental-family oracles (Definition 3.2) ---------------------
@@ -189,6 +229,7 @@ class ShardedDistERM:
         self.n = n
         self.comm = ShardMapCommunicator(axis, ledger)
         self.backend = resolve_oracle_backend(backend)
+        self._round_cache: dict = {}
 
     def zeros_like_w(self):
         return jnp.zeros((self.A_loc.shape[1],))
@@ -201,7 +242,7 @@ class ShardedDistERM:
         return self.comm.reduce_all(local, tag=tag)
 
     def pgrad(self, w_loc, z):
-        lgrad = self.loss.grad(z, self.y)
+        lgrad = self._loss_term("grad", z)
         if self.backend == "kernel":
             g = kops.feature_rmatvec(self.A_loc, lgrad)
         else:
@@ -209,14 +250,23 @@ class ShardedDistERM:
         return g / self.n + self.lam * w_loc
 
     def phvp(self, v_loc, z, av):
-        h = self.loss.hess(z, self.y)
+        h = self._loss_term("hess", z)
         if self.backend == "kernel":
             out = kops.feature_hvp(self.A_loc, h, av)
         else:
             out = self.A_loc.T @ (h * av)
         return out / self.n + self.lam * v_loc
 
+    def _loss_term(self, which: str, z):
+        return _cached_loss_term(self._round_cache, self.loss, which, z,
+                                 self.y)
+
     def dot(self, u_loc, v_loc, tag="dot"):
+        u_loc, v_loc = jnp.asarray(u_loc), jnp.asarray(v_loc)
+        if u_loc.ndim != 1 or u_loc.shape != v_loc.shape:
+            raise ValueError(
+                f"dot expects machine-local blocks of matching 1-D shape; "
+                f"got {u_loc.shape} and {v_loc.shape}")
         return self.comm.reduce_scalar(jnp.vdot(u_loc, v_loc), tag=tag)
 
     def value(self, w_loc, z):
@@ -224,6 +274,7 @@ class ShardedDistERM:
         return jnp.sum(self.loss.value(z, self.y)) / self.n + 0.5 * self.lam * sq
 
     def end_round(self):
+        self._round_cache.clear()
         self.comm.end_round()
 
     # ---- incremental-family oracles --------------------------------------
@@ -241,20 +292,44 @@ class ShardedDistERM:
 # shard_map driver
 # --------------------------------------------------------------------------
 
-def run_sharded(prob: ERMProblem, algorithm_body: Callable, rounds: int,
+def run_sharded(prob: ERMProblem, algorithm_body: Optional[Callable],
+                rounds: int,
                 mesh: Optional[Mesh] = None, axis: str = "model",
                 ledger: Optional[CommLedger] = None,
-                backend: Optional[str] = None):
-    """Run ``algorithm_body(dist, rounds) -> w_loc`` under shard_map with the
-    data matrix column-sharded over ``axis``.
+                backend: Optional[str] = None,
+                engine: str = "python",
+                program_builder: Optional[Callable] = None):
+    """Run an algorithm under shard_map with the data matrix column-sharded
+    over ``axis``.
 
-    ``algorithm_body`` receives a ``ShardedDistERM`` and a static round
-    count and must return the machine-local block of the final iterate.
+    Two driving modes, selected by ``engine``:
+
+    * ``"python"`` (default) — ``algorithm_body(dist, rounds) -> w_loc``
+      is traced as-is: the historical per-round Python loop unrolled into
+      the jitted body. Ledger counts are trace-time (ops per traced
+      call), i.e. the full per-round stream.
+    * ``"scan"`` — ``program_builder(dist, rounds) -> RoundProgram``
+      (step-form, see ``core.engine``) is compiled segment-by-segment
+      with ``lax.scan`` inside the shard_map body, so the traced program
+      is one scan per segment regardless of the round budget. Each
+      segment's step traces ONCE; afterwards the ledger is expanded from
+      the captured per-step schedule to the identical per-round stream
+      the python mode records.
+
     ``backend`` picks the oracle compute path (see
     ``resolve_oracle_backend``). Returns the assembled global w (d,) and
-    the per-round ledger (counts are trace-time: ops per traced call).
+    the per-round ledger.
     """
     from jax.experimental.shard_map import shard_map  # local import: jax>=0.4
+
+    from .engine import resolve_engine
+
+    engine = resolve_engine(engine)
+    if engine == "scan" and program_builder is None:
+        raise ValueError("engine='scan' requires a program_builder "
+                         "(step-form RoundProgram factory)")
+    if engine == "python" and algorithm_body is None:
+        raise ValueError("engine='python' requires an algorithm_body")
 
     if mesh is None:
         devs = np.array(jax.devices())
@@ -269,17 +344,53 @@ def run_sharded(prob: ERMProblem, algorithm_body: Callable, rounds: int,
         A = prob.A
     led = ledger if ledger is not None else CommLedger()
     backend = resolve_oracle_backend(backend)
+    pre_records, pre_rounds = len(led.records), led.rounds
+    spans = []   # (start, end, rounds_traced, count) per scanned segment
 
     def body(A_loc, y):
         dist = ShardedDistERM(A_loc, y, prob.loss, prob.lam, prob.n,
                               axis=axis, ledger=led, backend=backend)
-        return algorithm_body(dist, rounds)
+        if engine == "python":
+            return algorithm_body(dist, rounds)
+        program = program_builder(dist, rounds)
+        carry = program.init
+        for seg in program.segments:
+            xs = (jnp.asarray(seg.xs) if seg.xs is not None
+                  else jnp.arange(seg.count, dtype=jnp.int32))
+            start, r0 = len(led.records), led.rounds
 
-    # pallas_call has no shard_map replication rule; the kernel path
-    # opts out of the (purely diagnostic) replication check.
+            def scan_body(c, x, _step=seg.step):
+                c, _ = _step(dist, c, x)
+                return c, None
+
+            carry, _ = lax.scan(scan_body, carry, xs)
+            spans.append((start, len(led.records), led.rounds - r0,
+                          seg.count))
+        return program.final(carry)
+
+    # pallas_call has no shard_map replication rule, and lax.scan carries
+    # mixing replicated (z, scalars) with sharded (w-block) values defeat
+    # the replication typer; both paths opt out of the (purely
+    # diagnostic) replication check.
     fn = shard_map(body, mesh=mesh,
                    in_specs=(P(None, axis), P(None)),
                    out_specs=P(axis),
-                   check_rep=(backend != "kernel"))
+                   check_rep=(backend != "kernel" and engine != "scan"))
     w = jax.jit(fn)(A, prob.y)
+    if spans:
+        # Expand the trace-once schedule: each segment's single traced
+        # step stream repeats `count` times, reproducing the per-round
+        # stream the python mode records bit-identically.
+        records = led.records
+        expanded = list(records[:pre_records])
+        rounds_total = pre_rounds
+        prev_end = pre_records
+        for start, end, r_traced, count in spans:
+            expanded.extend(records[prev_end:start])
+            expanded.extend(records[start:end] * count)
+            rounds_total += r_traced * count
+            prev_end = end
+        expanded.extend(records[prev_end:])
+        led.records[:] = expanded
+        led.rounds = rounds_total
     return (w[:d] if pad else w), led

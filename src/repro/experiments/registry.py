@@ -12,7 +12,14 @@ An ``AlgorithmSpec`` records what the theory needs to know:
   * ``make_kwargs``  — derives the algorithm's hyper-parameters from an
                        ``AlgoContext`` (smoothness constants, partition
                        shape, optional prox) so a sweep can run it on any
-                       instance without per-algorithm glue.
+                       instance without per-algorithm glue;
+  * ``program``      — the step-form registration: a
+                       ``RoundProgram`` factory (``core.engine``) taking
+                       the same kwargs as ``fn``, which is what the
+                       scan-compiled round engine executes.  Registering
+                       an algorithm without a step form is an error —
+                       every sweep cell must be runnable under both
+                       engines.
 
 Registering a new algorithm here is all that is needed for it to appear in
 every future sweep report with its measured rounds overlaid against the
@@ -25,7 +32,10 @@ from typing import Callable, Dict, Optional, Tuple
 
 import numpy as np
 
-from repro.core.algorithms import bcd, dagd, dgd, disco_f, dsvrg, prox_dagd
+from repro.core.algorithms import (bcd, bcd_program, dagd, dagd_program,
+                                   dgd, dgd_program, disco_f,
+                                   disco_f_program, dsvrg, dsvrg_program,
+                                   prox_dagd, prox_dagd_program)
 
 FAMILY_F = "F^{lam,L}"
 FAMILY_I = "I^{lam,L}"
@@ -61,6 +71,8 @@ class AlgorithmSpec:
     accelerated: bool
     description: str
     make_kwargs: Callable[[AlgoContext], dict]
+    program: Callable             # program(dist, rounds, **kwargs)
+                                  #   -> core.engine.RoundProgram
 
     @property
     def certifying_theorem(self) -> Tuple[str, str]:
@@ -96,7 +108,8 @@ def get_algorithm(name: str) -> AlgorithmSpec:
 # --------------------------------------------------------------------------
 
 register_algorithm(AlgorithmSpec(
-    name="dgd", fn=dgd, family=FAMILY_F, incremental=False,
+    name="dgd", fn=dgd, program=dgd_program,
+    family=FAMILY_F, incremental=False,
     accelerated=False,
     description="Distributed gradient descent; O(kappa log(1/eps)) — the "
                 "unaccelerated baseline the bound separates from.",
@@ -104,7 +117,8 @@ register_algorithm(AlgorithmSpec(
 ))
 
 register_algorithm(AlgorithmSpec(
-    name="dagd", fn=dagd, family=FAMILY_F, incremental=False,
+    name="dagd", fn=dagd, program=dagd_program,
+    family=FAMILY_F, incremental=False,
     accelerated=True,
     description="Distributed Nesterov AGD; O(sqrt(kappa) log(1/eps)) — "
                 "matches Theorem 2 (and Theorem 3 when lam = 0).",
@@ -112,7 +126,8 @@ register_algorithm(AlgorithmSpec(
 ))
 
 register_algorithm(AlgorithmSpec(
-    name="prox_dagd", fn=prox_dagd, family=FAMILY_F, incremental=False,
+    name="prox_dagd", fn=prox_dagd, program=prox_dagd_program,
+    family=FAMILY_F, incremental=False,
     accelerated=True,
     description="FISTA with a block-local separable prox; same one-"
                 "ReduceAll round budget as DAGD (identity prox when the "
@@ -122,7 +137,8 @@ register_algorithm(AlgorithmSpec(
 ))
 
 register_algorithm(AlgorithmSpec(
-    name="bcd", fn=bcd, family=FAMILY_F, incremental=False,
+    name="bcd", fn=bcd, program=bcd_program,
+    family=FAMILY_F, incremental=False,
     accelerated=False,
     description="Synchronous parallel block coordinate descent "
                 "(Richtarik-Takac ESO step); practitioner's baseline.",
@@ -130,7 +146,8 @@ register_algorithm(AlgorithmSpec(
 ))
 
 register_algorithm(AlgorithmSpec(
-    name="disco_f", fn=disco_f, family=FAMILY_F, incremental=False,
+    name="disco_f", fn=disco_f, program=disco_f_program,
+    family=FAMILY_F, incremental=False,
     accelerated=True,
     description="DISCO-F damped Newton via distributed CG; matches "
                 "Theorem 2 on quadratics (second-order information does "
@@ -141,7 +158,8 @@ register_algorithm(AlgorithmSpec(
 ))
 
 register_algorithm(AlgorithmSpec(
-    name="dsvrg", fn=dsvrg, family=FAMILY_I, incremental=True,
+    name="dsvrg", fn=dsvrg, program=dsvrg_program,
+    family=FAMILY_I, incremental=True,
     accelerated=False,
     description="Feature-partitioned SVRG (incremental family); each "
                 "stochastic step is one scalar-ReduceAll round. Tightness "

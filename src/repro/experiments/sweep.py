@@ -2,9 +2,11 @@
 
 A ``SweepSpec`` names an instance family, a parameter grid, the algorithms
 to run, and the accuracy targets. ``run_sweep`` instantiates each grid
-point, drives every algorithm through the ``CommLedger``-metered
-``LocalDistERM`` runtime, measures rounds-to-eps from the iterate history,
-and pairs each measurement with the closed-form ``BoundReport`` the
+point, drives every algorithm's step-form ``RoundProgram`` through the
+``CommLedger``-metered ``LocalDistERM`` runtime (scan-compiled by
+default; ``engine="python"`` keeps the per-call loop), measures
+rounds-to-eps from the in-scan per-round gap series f(w_k) - f*, and
+pairs each measurement with the closed-form ``BoundReport`` the
 algorithm's registry entry says must lower-bound it:
 
     non-incremental (F^{lam,L}), lam > 0   ->  Theorem 2
@@ -32,11 +34,11 @@ import sys
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
-import jax
 import jax.numpy as jnp
 
 from repro.core.bounds import (BoundReport, thm2_strongly_convex,
                                thm3_smooth_convex, thm4_incremental)
+from repro.core.engine import resolve_engine, run_program
 from repro.core.runtime import LocalDistERM, resolve_oracle_backend
 
 from .instances import InstanceBundle, build_instance
@@ -97,6 +99,7 @@ class SweepRecord:
     budget_ok: bool
     sample_model_bytes_per_round: float   # Arjevani-Shamir O(m d)/round
     oracle_backend: str = "einsum"        # compute path; never affects rounds
+    engine: str = "scan"                  # round engine; never affects rounds
 
     def to_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -130,15 +133,18 @@ class SweepResult:
 # Measurement
 # --------------------------------------------------------------------------
 
-def _gap_series(bundle: InstanceBundle, iterates) -> np.ndarray:
-    """Suboptimality f(w_k) - f* for every recorded iterate, evaluated in
-    one vmapped pass (iterates are stacked per-machine blocks)."""
-    stk = jnp.stack(iterates)                     # (K, m, d_max)
-    ws = jnp.concatenate(
-        [stk[:, j, :b] for j, b in enumerate(bundle.part.block_sizes)],
-        axis=-1)                                  # (K, d)
-    vals = jax.jit(jax.vmap(bundle.objective))(ws)
-    return np.asarray(vals) - bundle.fstar
+def _gap_measure(bundle: InstanceBundle, dist: LocalDistERM):
+    """Traceable per-round measurement ``w_stk -> f(w_k) - f*`` folded
+    into the engine run: a sweep materializes a (K,) gap series instead
+    of a (K, m, d_max) iterate history. Must stay oracle-free — the
+    objective is evaluated on the gathered vector, outside the metered
+    communication surface."""
+    objective, fstar = bundle.objective, bundle.fstar
+
+    def measure(w_stk):
+        return objective(dist.gather_w(w_stk)) - fstar
+
+    return measure
 
 
 def _bound_for(bundle: InstanceBundle, algo: AlgorithmSpec,
@@ -180,30 +186,35 @@ def _ledger_fields(dist: LocalDistERM, bundle: InstanceBundle) -> dict:
 
 def _run_cell(bundle: InstanceBundle, algo: AlgorithmSpec,
               spec: SweepSpec, max_rounds: int,
-              backend: Optional[str] = None) -> List[SweepRecord]:
+              backend: Optional[str] = None,
+              engine: Optional[str] = None) -> List[SweepRecord]:
     """One (instance, algorithm) cell: a single metered run at the full
-    round budget, then every eps threshold read off the same history."""
+    round budget, then every eps threshold read off the same gap series."""
     backend = resolve_oracle_backend(backend)
+    engine = resolve_engine(engine)
     base = dict(instance_kind=bundle.kind, instance_label=bundle.label,
                 instance_params=dict(bundle.params), hard=bundle.hard,
                 algorithm=algo.name, family=algo.family,
                 incremental=algo.incremental, accelerated=algo.accelerated,
-                oracle_backend=backend,
+                oracle_backend=backend, engine=engine,
                 max_rounds=(spec.fixed_rounds
                             if spec.mode == "fixed_rounds" else max_rounds))
     kwargs = algo.make_kwargs(bundle.ctx)
 
     if spec.mode == "fixed_rounds":
         dist = LocalDistERM(bundle.prob, bundle.part, backend=backend)
-        algo.fn(dist, rounds=spec.fixed_rounds, **kwargs)
+        program = algo.program(dist, rounds=spec.fixed_rounds, **kwargs)
+        run_program(dist, program, engine=engine)
         return [SweepRecord(**base, eps=None, eps_abs=None,
                             measured_rounds=None, bound_theorem=None,
                             bound_rounds=None, ratio=None, certified=None,
                             **_ledger_fields(dist, bundle))]
 
     dist = LocalDistERM(bundle.prob, bundle.part, backend=backend)
-    _, aux = algo.fn(dist, rounds=max_rounds, history=True, **kwargs)
-    gaps = _gap_series(bundle, aux["iterates"])
+    program = algo.program(dist, rounds=max_rounds, **kwargs)
+    result = run_program(dist, program, engine=engine,
+                         measure=_gap_measure(bundle, dist))
+    gaps = result.gaps
     gap0 = float(bundle.objective(jnp.zeros((bundle.prob.d,)))
                  - bundle.fstar)
     led = _ledger_fields(dist, bundle)
@@ -235,20 +246,28 @@ def _run_cell(bundle: InstanceBundle, algo: AlgorithmSpec,
 
 def run_sweep(spec: SweepSpec, max_rounds: Optional[int] = None,
               verbose: bool = False,
-              backend: Optional[str] = None) -> SweepResult:
+              backend: Optional[str] = None,
+              engine: Optional[str] = None) -> SweepResult:
     """``backend`` selects the oracle compute path ("einsum" | "kernel" |
     None/"auto" for the platform default). It changes local FLOP
     scheduling only; the CommLedger is bit-invariant to it (asserted by
     tests/test_ledger_invariance.py). Measured rounds-to-eps agree as
     well, up to float reassociation shifting an eps-threshold crossing
-    by a round on TPU."""
+    by a round on TPU.
+
+    ``engine`` selects the round engine ("scan" | "python" | None/"auto"
+    for the scan default): whether a cell's rounds run as one compiled
+    ``lax.scan`` program or as the per-call Python loop. The CommLedger
+    is bit-invariant to it as well (same suite), and certification
+    outcomes must agree (``benchmarks/round_engine.py`` gates this)."""
     max_rounds = max_rounds or spec.max_rounds
     records: List[SweepRecord] = []
     for point in spec.grid_points():
         bundle = build_instance(spec.instance, **point)
         for name in spec.algorithms:
             algo = get_algorithm(name)
-            cell = _run_cell(bundle, algo, spec, max_rounds, backend=backend)
+            cell = _run_cell(bundle, algo, spec, max_rounds,
+                             backend=backend, engine=engine)
             records.extend(cell)
             if verbose:
                 for r in cell:
@@ -311,7 +330,10 @@ PRESETS: Dict[str, SweepSpec] = {s.name: s for s in [
         grid=dict(d=[128], kappa=[64.0], lam=[0.5], m=[1, 2, 4, 8]),
         algorithms=("dagd",), eps=(1e-6,), max_rounds=1500,
         note="Round counts must be m-independent (the bounds hold for "
-             "ANY m)."),
+             "ANY m); across m the iterates differ only by ReduceAll "
+             "summation order, so measured rounds may disagree by at "
+             "most one eps-threshold quantization round "
+             "(benchmarks/m_invariance.py gates the spread)."),
     SweepSpec(
         name="lasso", instance="lasso",
         grid=dict(n=[128], d=[256], m=[4], tau=[2e-3]),
@@ -353,6 +375,12 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                         help="oracle compute path (auto: kernel on TPU, "
                              "einsum elsewhere); the comm ledger is "
                              "invariant to it")
+    parser.add_argument("--engine", default="auto",
+                        choices=["auto", "scan", "python"],
+                        help="round engine (auto: scan — one compiled "
+                             "lax.scan program per cell; python: per-call "
+                             "loop for debugging); the comm ledger is "
+                             "invariant to it")
     parser.add_argument("--no-report", action="store_true",
                         help="run and print, but write nothing")
     parser.add_argument("-q", "--quiet", action="store_true")
@@ -370,7 +398,8 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                   f"algorithms={','.join(spec.algorithms)}",
                   file=sys.stderr)
         result = run_sweep(spec, max_rounds=args.max_rounds,
-                           verbose=not args.quiet, backend=args.backend)
+                           verbose=not args.quiet, backend=args.backend,
+                           engine=args.engine)
         summ = result.summary()
         failed += summ["failed"]
         line = (f"[sweep] {name}: {summ['records']} records, "

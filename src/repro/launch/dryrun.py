@@ -20,6 +20,7 @@ import jax.numpy as jnp
 from ..configs import get as get_arch, canonical_ids
 from ..configs import shapes as S
 from ..core.comm import collective_bytes_from_hlo
+from ..core.engine import resolve_engine
 from ..core.runtime import resolve_oracle_backend
 from ..models import transformer as T
 from ..models import encdec as E
@@ -102,7 +103,8 @@ def dryrun_one(arch_id: str, shape_name: str, *, multi_pod: bool = False,
                cfg_overrides: Optional[Dict[str, Any]] = None,
                microbatch: int = 1,
                donate: bool = True,
-               oracle_backend: Optional[str] = None) -> Dict[str, Any]:
+               oracle_backend: Optional[str] = None,
+               round_engine: Optional[str] = None) -> Dict[str, Any]:
     """Lower + compile one combo on the production mesh; return the record.
 
     ``cfg_overrides``: dataclasses.replace kwargs applied to the arch
@@ -114,6 +116,12 @@ def dryrun_one(arch_id: str, shape_name: str, *, multi_pod: bool = False,
     via ``cfg.use_pallas``; "auto" resolves per platform; None leaves the
     arch config untouched). An explicit ``use_pallas`` in
     ``cfg_overrides`` wins.
+
+    ``round_engine``: the DistERM round-engine switch (``core.engine``),
+    resolved and stamped into the record so dry-run artifacts name the
+    engine their companion sweeps executed under (process state is left
+    untouched — pass ``--engine`` to the sweep CLI, or set
+    ``REPRO_ROUND_ENGINE`` yourself, to change what actually runs).
     """
     t0 = time.time()
     mod = get_arch(arch_id)
@@ -138,6 +146,8 @@ def dryrun_one(arch_id: str, shape_name: str, *, multi_pod: bool = False,
         cfg = dataclasses.replace(
             cfg, use_pallas=resolve_oracle_backend(oracle_backend)
             == "kernel")
+    if round_engine is not None:
+        round_engine = resolve_engine(round_engine)
     mesh = make_production_mesh(multi_pod=multi_pod)
     if getattr(cfg, "moe", None) is not None and \
             not (cfg_overrides and "moe.groups" in cfg_overrides):
@@ -259,6 +269,7 @@ def dryrun_one(arch_id: str, shape_name: str, *, multi_pod: bool = False,
         "n_chips": n_chips,
         "fsdp": fsdp,
         "use_pallas": bool(getattr(cfg, "use_pallas", False)),
+        "round_engine": round_engine or resolve_engine(None),
         "rules_overrides": rules_overrides or {},
         "n_params": n_total, "n_params_active": n_active,
         "hlo_flops": flops, "hlo_bytes": bytes_accessed,
@@ -289,7 +300,8 @@ def dryrun_one(arch_id: str, shape_name: str, *, multi_pod: bool = False,
 def run_all(out_dir: str, multi_pod: bool, archs=None, shapes=None,
             force: bool = False, variant: str = "baseline",
             rules_overrides=None, cfg_overrides=None, microbatch: int = 1,
-            oracle_backend: Optional[str] = None):
+            oracle_backend: Optional[str] = None,
+            round_engine: Optional[str] = None):
     os.makedirs(out_dir, exist_ok=True)
     archs = archs or canonical_ids()
     shapes = shapes or list(S.SHAPES)
@@ -314,7 +326,8 @@ def run_all(out_dir: str, multi_pod: bool, archs=None, shapes=None,
                                  rules_overrides=rules_overrides,
                                  cfg_overrides=cfg_overrides,
                                  microbatch=microbatch,
-                                 oracle_backend=oracle_backend)
+                                 oracle_backend=oracle_backend,
+                                 round_engine=round_engine)
             except Exception:
                 rec = {"arch": arch, "shape": shape, "failed": True,
                        "traceback": traceback.format_exc()}
@@ -357,6 +370,11 @@ def main():
                     help="compute-path switch shared with the DistERM "
                          "runtime; sets cfg.use_pallas (kernel=True). "
                          "Default: leave the arch config untouched.")
+    ap.add_argument("--round-engine", default=None,
+                    choices=["auto", "scan", "python"],
+                    help="DistERM round-engine switch (core.engine), "
+                         "resolved and stamped into each record; "
+                         "process state is left untouched.")
     args = ap.parse_args()
     overrides = json.loads(args.rules) if args.rules else None
     cfg_over = json.loads(args.cfg) if args.cfg else None
@@ -367,7 +385,8 @@ def main():
         run_all(args.out, mp, archs, shapes, force=args.force,
                 variant=args.variant, rules_overrides=overrides,
                 cfg_overrides=cfg_over, microbatch=args.microbatch,
-                oracle_backend=args.oracle_backend)
+                oracle_backend=args.oracle_backend,
+                round_engine=args.round_engine)
 
 
 if __name__ == "__main__":

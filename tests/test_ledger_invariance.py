@@ -1,18 +1,23 @@
-"""The CommLedger must be bit-identical across oracle backends.
+"""The CommLedger must be bit-identical across oracle backends AND
+round engines.
 
 The paper's lower bounds meter communication rounds; how the per-machine
-GEMVs are computed (einsum vs Pallas kernel) is outside the model. If the
-compute path ever leaked into the meter — an extra reduce, a different
-payload size, a changed tag — every certification under docs/results/
-would silently depend on the backend. These tests pin the full record
-stream (kind, elems, bytes, tag) and the round counter, per registered
-algorithm, and the sweep-level measurement on a hard instance.
+GEMVs are computed (einsum vs Pallas kernel) and how the rounds are
+driven (per-call Python loop vs one scan-compiled XLA program whose
+trace-once schedule is replayed) are both outside the model. If either
+axis ever leaked into the meter — an extra reduce, a different payload
+size, a changed tag, a mis-multiplied schedule — every certification
+under docs/results/ would silently depend on it. These tests pin the
+full record stream (kind, elems, bytes, tag) and the round counter, per
+registered algorithm, across the {einsum, kernel} x {python, scan}
+product, and the sweep-level measurement on a hard instance.
 """
 import numpy as np
 import jax.numpy as jnp
 import pytest
 
 from repro.core import make_random_erm
+from repro.core.engine import ENGINES, run_program
 from repro.core.partition import even_partition
 from repro.core.runtime import ORACLE_BACKENDS, LocalDistERM
 from repro.experiments.registry import ALGORITHM_REGISTRY, get_algorithm
@@ -27,11 +32,13 @@ def _ledger_stream(dist):
                         for r in led.records]
 
 
-def _run(algo_name: str, backend: str):
+def _run(algo_name: str, backend: str, engine: str = "python"):
     bundle = build_instance("random_ridge", n=24, d=32, m=4)
     algo = get_algorithm(algo_name)
     dist = LocalDistERM(bundle.prob, bundle.part, backend=backend)
-    algo.fn(dist, rounds=ROUNDS, **algo.make_kwargs(bundle.ctx))
+    program = algo.program(dist, rounds=ROUNDS,
+                           **algo.make_kwargs(bundle.ctx))
+    run_program(dist, program, engine=engine)
     return _ledger_stream(dist)
 
 
@@ -43,6 +50,19 @@ def test_ledger_bit_identical_across_backends(algo_name):
     for be, (rounds, records) in streams.items():
         assert rounds == rounds0, (algo_name, be)
         assert records == records0, (algo_name, be)
+
+
+@pytest.mark.parametrize("algo_name", sorted(ALGORITHM_REGISTRY))
+def test_ledger_bit_identical_across_engines(algo_name):
+    """{python, scan} x {einsum, kernel}: the scan engine's replayed
+    trace-once schedule must reproduce the per-call stream exactly."""
+    streams = {(be, eng): _run(algo_name, be, eng)
+               for be in ORACLE_BACKENDS for eng in ENGINES}
+    rounds0, records0 = streams[("einsum", "python")]
+    assert rounds0 == ROUNDS
+    for key, (rounds, records) in streams.items():
+        assert rounds == rounds0, (algo_name, key)
+        assert records == records0, (algo_name, key)
 
 
 def test_sweep_measurement_backend_invariant():

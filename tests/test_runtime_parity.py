@@ -1,5 +1,5 @@
 """Backend conformance: {Local, Sharded} execution x {einsum, kernel}
-oracle backends must agree.
+oracle backends x {python, scan} round engines must agree.
 
 Run in a subprocess so the 8-device XLA flag doesn't leak into other
 tests. Two layers:
@@ -7,10 +7,12 @@ tests. Two layers:
   * ``test_shard_map_parity`` — the original Local-vs-shard_map parity on
     the default oracle backend.
   * ``test_backend_conformance_matrix`` — EVERY registered algorithm run
-    under all four (execution, oracle) combinations produces matching
-    final iterates and the same communication structure. Iterating the
-    registry is deliberate: registering a new algorithm without teaching
-    this suite how to drive it fails the test.
+    under all eight (execution, oracle, engine) combinations produces
+    matching final iterates and the same communication structure (the
+    Local pairs additionally pin bit-identical ledger record streams
+    across engines). Iterating the registry is deliberate: registering a
+    new algorithm without a step-form program, or without teaching this
+    suite how to drive it, fails the test.
 """
 import json
 import os
@@ -56,9 +58,10 @@ import numpy as np
 import jax, jax.numpy as jnp
 from jax import lax
 from repro.core import make_random_erm
+from repro.core.engine import ENGINES, run_program
 from repro.core.partition import even_partition
 from repro.core.runtime import ORACLE_BACKENDS, LocalDistERM, run_sharded
-from repro.core.algorithms import bcd, dagd, dgd, disco_f, dsvrg, prox_dagd
+from repro.core.algorithms import ALGORITHMS, PROGRAMS
 from repro.core.algorithms.prox_dagd import soft_threshold
 from repro.experiments.registry import ALGORITHM_REGISTRY
 
@@ -73,46 +76,61 @@ block_L = np.array(
 L_max = float(np.max(np.sum(A ** 2, axis=1)) + prob.lam)
 
 
-def make_runners(name):
-    # (local, sharded) drivers; bcd needs its per-block constant in the
-    # stacked (m, 1) layout locally vs a per-shard scalar under shard_map
+def make_kwargs(name, sharded):
+    # bcd needs its per-block constant in the stacked (m, 1) layout
+    # locally vs a per-shard scalar under shard_map, so kwargs are built
+    # lazily (axis_index only resolves inside the shard_map body)
     if name == "bcd":
         bl = jnp.asarray(block_L)
-        return (lambda dist, r: bcd(dist, r, block_L=bl[:, None], m=M),
-                lambda dist, r: bcd(dist, r,
-                                    block_L=bl[lax.axis_index("model")],
-                                    m=M))
+        if sharded:
+            return lambda: dict(block_L=bl[lax.axis_index("model")], m=M)
+        return lambda: dict(block_L=bl[:, None], m=M)
     if name == "dsvrg":
-        fn = lambda dist, r: dsvrg(dist, r, L_max=L_max, lam=prob.lam,
-                                   seed=7, eta=1.0 / (4.0 * L_max))
-        return fn, fn
+        return lambda: dict(L_max=L_max, lam=prob.lam, seed=7,
+                            eta=1.0 / (4.0 * L_max))
     if name == "prox_dagd":
-        fn = lambda dist, r: prox_dagd(dist, r, L=L, lam=prob.lam,
-                                       prox=soft_threshold(1e-3))
-        return fn, fn
-    algo = {"dgd": dgd, "dagd": dagd, "disco_f": disco_f}[name]
-    fn = lambda dist, r: algo(dist, r, L=L, lam=prob.lam)
-    return fn, fn
+        return lambda: dict(L=L, lam=prob.lam, prox=soft_threshold(1e-3))
+    return lambda: dict(L=L, lam=prob.lam)
+
+
+def _stream(led):
+    return [(r.kind, r.elems, r.bytes, r.tag) for r in led.records]
 
 
 out = {}
 for name in sorted(ALGORITHM_REGISTRY):
-    local_fn, sharded_fn = make_runners(name)
-    iterates, op_counts = {}, {}
+    iterates, op_counts, local_streams = {}, {}, {}
     for be in ORACLE_BACKENDS:
-        dist = LocalDistERM(prob, part, backend=be)
-        iterates[f"local/{be}"] = dist.gather_w(local_fn(dist, R))
-        op_counts[f"local/{be}"] = dist.comm.ledger.op_counts()
-        w_sh, led = run_sharded(prob, sharded_fn, rounds=R, backend=be)
-        iterates[f"sharded/{be}"] = w_sh
-        op_counts[f"sharded/{be}"] = led.op_counts()
-    ref = iterates["local/einsum"]
-    ref_ops = op_counts["local/einsum"]
+        for eng in ENGINES:
+            dist = LocalDistERM(prob, part, backend=be)
+            program = PROGRAMS[name](dist, R, **make_kwargs(name, False)())
+            res = run_program(dist, program, engine=eng)
+            iterates[f"local/{be}/{eng}"] = dist.gather_w(res.w)
+            op_counts[f"local/{be}/{eng}"] = dist.comm.ledger.op_counts()
+            local_streams[f"local/{be}/{eng}"] = _stream(dist.comm.ledger)
+
+            kw = make_kwargs(name, True)
+            if eng == "python":
+                w_sh, led = run_sharded(
+                    prob, lambda d_, r: ALGORITHMS[name](d_, r, **kw()),
+                    rounds=R, backend=be)
+            else:
+                w_sh, led = run_sharded(
+                    prob, None, rounds=R, backend=be, engine="scan",
+                    program_builder=lambda d_, r: PROGRAMS[name](d_, r,
+                                                                 **kw()))
+            iterates[f"sharded/{be}/{eng}"] = w_sh
+            op_counts[f"sharded/{be}/{eng}"] = led.op_counts()
+    ref = iterates["local/einsum/python"]
+    ref_ops = op_counts["local/einsum/python"]
+    ref_stream = local_streams["local/einsum/python"]
     out[name] = {
         "combos": sorted(iterates),
         "max_diff": max(float(jnp.max(jnp.abs(w - ref)))
                         for w in iterates.values()),
         "ops_agree": all(ops == ref_ops for ops in op_counts.values()),
+        "local_streams_identical": all(s == ref_stream
+                                       for s in local_streams.values()),
     }
 print(json.dumps(out))
 """
@@ -139,12 +157,17 @@ def test_shard_map_parity():
 
 @pytest.mark.slow
 def test_backend_conformance_matrix():
-    """Every registered algorithm x {Local, Sharded} x {einsum, kernel}:
-    matching final iterates and identical per-run op counts."""
+    """Every registered algorithm x {Local, Sharded} x {einsum, kernel}
+    x {python, scan}: matching final iterates, identical per-run op
+    counts, and (Local) bit-identical ledger record streams."""
     out = _run_script(MATRIX_SCRIPT)
     assert len(out) >= 6          # the six reference algorithms
+    expected = sorted(f"{ex}/{be}/{eng}"
+                      for ex in ("local", "sharded")
+                      for be in ("einsum", "kernel")
+                      for eng in ("python", "scan"))
     for name, rec in out.items():
-        assert rec["combos"] == ["local/einsum", "local/kernel",
-                                 "sharded/einsum", "sharded/kernel"], name
+        assert rec["combos"] == expected, name
         assert rec["max_diff"] < 1e-4, (name, rec)
         assert rec["ops_agree"], (name, rec)
+        assert rec["local_streams_identical"], (name, rec)
