@@ -36,10 +36,10 @@ from typing import List, Optional, Sequence
 
 import jax
 
-from repro.core import CommLedger
-from repro.core.runtime import ORACLE_BACKENDS, LocalDistERM
+from repro import api
+from repro.api import ORACLE_BACKENDS
+from repro.core.comm import CommLedger
 from repro.experiments.instances import build_instance
-from repro.experiments.registry import get_algorithm
 
 COMMAND = "PYTHONPATH=src python -m benchmarks.oracle_backends"
 
@@ -80,20 +80,26 @@ def _timed_run(preset: Preset, algo_name: str, backend: str,
                repeats: int) -> dict:
     bundle = build_instance("random_ridge", n=preset.n, d=preset.d,
                             m=preset.m, lam=preset.lam, seed=11)
-    algo = get_algorithm(algo_name)
-    kwargs = algo.make_kwargs(bundle.ctx)
+    # engine="python" keeps the historical per-call oracle dispatch this
+    # ablation times (the scan engine's per-round cost is measured by
+    # benchmarks/round_engine.py instead)
+    spec = api.RunSpec(instance="random_ridge",
+                       instance_params=dict(n=preset.n, d=preset.d,
+                                            m=preset.m, lam=preset.lam,
+                                            seed=11),
+                       algorithm=algo_name, rounds=preset.rounds,
+                       measure="none", backend=backend, engine="python")
+    pl = api.plan(spec, bundle=bundle)
 
     # warmup: compile every jitted oracle shape once
-    dist = LocalDistERM(bundle.prob, bundle.part, backend=backend)
-    jax.block_until_ready(algo.fn(dist, rounds=preset.rounds, **kwargs))
-    ledger = _ledger_snapshot(dist.comm.ledger)
+    result = pl.execute()
+    jax.block_until_ready(result.w)
+    ledger = _ledger_snapshot(result.ledger)
 
     times = []
     for _ in range(repeats):
-        dist = LocalDistERM(bundle.prob, bundle.part, backend=backend)
         t0 = time.perf_counter()
-        jax.block_until_ready(algo.fn(dist, rounds=preset.rounds,
-                                      **kwargs))
+        jax.block_until_ready(pl.execute().w)
         times.append(time.perf_counter() - t0)
     us_per_round = min(times) / preset.rounds * 1e6
     return dict(backend=backend, us_per_round=round(us_per_round, 1),

@@ -43,11 +43,9 @@ from typing import List, Optional, Sequence
 import numpy as np
 import jax
 
-from repro.core import CommLedger
-from repro.core.engine import ENGINES, EngineSession, run_program
-from repro.core.runtime import LocalDistERM
+from repro import api
+from repro.core.engine import ENGINES, EngineSession
 from repro.experiments.instances import build_instance
-from repro.experiments.registry import get_algorithm
 from repro.experiments.sweep import PRESETS
 
 COMMAND = "PYTHONPATH=src python -m benchmarks.round_engine"
@@ -56,41 +54,30 @@ PRESET = "thm2-small"
 SPEEDUP_FLOOR = 10.0     # acceptance: scan >= 10x python on these cells
 
 
-def _ledger_stream(ledger: CommLedger):
-    return [(r.kind, r.elems, r.bytes, r.tag) for r in ledger.records]
-
-
 def _measured_rounds(gaps: np.ndarray, eps: float) -> Optional[int]:
     hits = np.nonzero(gaps <= eps)[0]
     return int(hits[0]) + 1 if hits.size else None
 
 
-def _timed_cell(bundle, algo, engine: str, rounds: int,
-                eps: Sequence[float], repeats: int) -> dict:
+def _timed_cell(bundle, point: dict, algo_name: str, engine: str,
+                rounds: int, eps: Sequence[float], repeats: int) -> dict:
     """One engine's steady-state timing of a full certification cell:
-    metered run + in-scan gap measurement, exactly what the sweep does."""
-    dist = LocalDistERM(bundle.prob, bundle.part)
-    kwargs = algo.make_kwargs(bundle.ctx)
-    program = algo.program(dist, rounds=rounds, **kwargs)
-    objective, fstar = bundle.objective, bundle.fstar
-
-    def measure(w_stk):
-        return objective(dist.gather_w(w_stk)) - fstar
-
+    metered run + in-scan gap measurement, exactly what the sweep does —
+    driven through the repro.api facade."""
+    spec = PRESETS[PRESET].cell_spec(point, algo_name, max_rounds=rounds,
+                                     engine=engine)
+    pl = api.plan(spec, bundle=bundle)
     session = EngineSession()
     # warmup: the scan engine traces + compiles here; repeats below hit
     # the session's jit cache (how a sweep's round budget amortizes it)
-    result = run_program(dist, program, engine=engine, measure=measure,
-                         session=session)
-    stream = _ledger_stream(dist.comm.ledger)
-    ledger_rounds = dist.comm.ledger.rounds
+    result = pl.execute(session=session)
+    stream = result.stream()
+    ledger_rounds = result.ledger.rounds
 
     times = []
     for _ in range(repeats):
-        dist.comm.ledger = CommLedger()
         t0 = time.perf_counter()
-        res = run_program(dist, program, engine=engine, measure=measure,
-                          session=session)
+        res = pl.execute(session=session)
         np.asarray(res.gaps)        # gaps are host-materialized already
         times.append(time.perf_counter() - t0)
     secs = min(times)
@@ -114,9 +101,8 @@ def run_ablation(repeats: int = 3, rounds: Optional[int] = None,
     for point in spec.grid_points():
         bundle = build_instance(spec.instance, **point)
         for name in algorithms:
-            algo = get_algorithm(name)
-            by_engine = {eng: _timed_cell(bundle, algo, eng, rounds,
-                                          spec.eps, repeats)
+            by_engine = {eng: _timed_cell(bundle, point, name, eng,
+                                          rounds, spec.eps, repeats)
                          for eng in ENGINES}
             py, sc = by_engine["python"], by_engine["scan"]
             records.append(dict(

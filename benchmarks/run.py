@@ -9,13 +9,15 @@ Default mode prints ``name,us_per_call,derived`` CSV rows:
   kernel_bench     — Pallas/jnp hot-loop microbenchmarks
   oracle_backends  — einsum vs Pallas-kernel per-round wall-clock
   round_engine     — python-loop vs scan-compiled per-cell wall-clock
+  api_batch        — execute_batch vs sequential per-cell wall-clock
   roofline         — dry-run roofline terms per (arch x shape x mesh)
 
-The theorem rows are thin wrappers over ``repro.experiments``; pass
-``--sweeps`` to additionally write the full JSON + Markdown reports to
+The theorem rows are thin wrappers over ``repro.experiments`` (which
+drives every cell through the ``repro.api`` facade); pass ``--sweeps``
+to additionally write the full JSON + Markdown reports to
 ``docs/results/`` (equivalent to ``python -m repro.experiments.sweep
---preset all`` followed by the round-engine ablation report), or
-``--sweep NAME`` for a single preset.
+--preset all`` followed by the round-engine and api-batch ablation
+reports), or ``--sweep NAME`` for a single preset.
 """
 from __future__ import annotations
 
@@ -45,15 +47,18 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
             sweep_argv += ["--out", args.out]
         rc = sweep_main(sweep_argv)
         if args.sweeps:
-            # the round-engine ablation publishes to the same results
-            # tree; --sweeps is the "regenerate docs/results" entry point
+            # the round-engine and api-batch ablations publish to the
+            # same results tree; --sweeps is the "regenerate
+            # docs/results" entry point
+            from .api_batch import main as api_batch_main
             from .round_engine import main as round_engine_main
             re_argv = ["--out", args.out] if args.out else []
             rc = rc or round_engine_main(re_argv)
+            rc = rc or api_batch_main(re_argv)
         return rc
 
     print("name,us_per_call,derived")
-    from . import (comm_cost, kernel_bench, m_invariance,
+    from . import (api_batch, comm_cost, kernel_bench, m_invariance,
                    moe_dispatch_ablation, oracle_backends, round_engine,
                    roofline, thm2_rounds, thm3_rounds, thm4_incremental)
     thm2_rounds.run()
@@ -64,6 +69,7 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     kernel_bench.run()
     oracle_backends.run()
     round_engine.run()
+    api_batch.run()
     moe_dispatch_ablation.run()
     roofline.run()
     return 0

@@ -11,32 +11,24 @@ import sys, os
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import numpy as np
-import jax.numpy as jnp
 
-from repro.core import make_random_erm
-from repro.core.partition import even_partition
-from repro.core.runtime import LocalDistERM
-from repro.core.algorithms import prox_dagd, soft_threshold
+from repro.api import RunSpec, run
 
-# sparse ground truth: 10 active features out of 256
-rng = np.random.RandomState(0)
-n, d, k_true = 128, 256, 10
-A = rng.randn(n, d) / np.sqrt(d)
-w_true = np.zeros(d)
+# the registered lasso instance plants a sparse ground truth: 10 active
+# features out of 256, seed 0 (same RNG stream reproduced below)
+n, d, k_true, tau = 128, 256, 10, 0.002
+res = run(RunSpec(
+    instance="lasso", instance_params=dict(n=n, d=d, m=4, tau=tau,
+                                           k_true=k_true, seed=0),
+    algorithm="prox_dagd", rounds=800, measure="none"))
+
+rng = np.random.RandomState(0)           # the instance builder's stream
+rng.randn(n, d)
 idx = rng.choice(d, k_true, replace=False)
+w_true = np.zeros(d)
 w_true[idx] = rng.randn(k_true) * 3
-y = A @ w_true + 0.01 * rng.randn(n)
 
-from repro.core.erm import ERMProblem, squared_loss
-prob = ERMProblem(A=jnp.asarray(A), y=jnp.asarray(y),
-                  loss=squared_loss(), lam=0.0)
-part = even_partition(d, m=4)
-dist = LocalDistERM(prob, part)
-
-tau = 0.002
-w = prox_dagd(dist, rounds=800, L=prob.smoothness_bound(),
-              prox=soft_threshold(tau))
-wg = np.asarray(dist.gather_w(w))
+wg = np.asarray(res.w)
 support = np.where(np.abs(wg) > 1e-6)[0]
 
 print(f"true support    : {sorted(idx.tolist())}")
@@ -44,7 +36,7 @@ print(f"recovered       : {support.tolist()}")
 print(f"support recall  : {len(set(support) & set(idx))}/{k_true}")
 print(f"coef error (sup): "
       f"{np.abs(wg[idx] - w_true[idx]).max():.4f} (max abs, biased by tau)")
-led = dist.comm.ledger
+led = res.ledger
 print(f"rounds={led.rounds}, ops={led.op_counts()} "
       f"(prox cost ZERO communication)")
-led.assert_budget(n=n, d=d)
+assert res.budget_ok

@@ -1,8 +1,11 @@
-"""Quickstart: feature-partitioned distributed optimization in 40 lines.
+"""Quickstart: feature-partitioned distributed optimization in 30 lines.
 
 Solves a ridge-regression ERM with the paper's communication model:
 4 "machines" each own a block of FEATURE columns; every round costs ONE
 ReduceAll of an R^n vector; machine j only ever updates its own block.
+The whole run is one declarative ``RunSpec`` — ``repro.api.run``
+validates it, resolves the execution axes (scan engine, platform oracle
+backend), and returns the iterate plus the metered communication bill.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -11,37 +14,34 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax.numpy as jnp
 
-from repro.core import make_random_erm, thm2_strongly_convex
-from repro.core.partition import even_partition
-from repro.core.runtime import LocalDistERM
-from repro.core.algorithms import dagd
+from repro.api import RunSpec, run
+from repro.core import thm2_strongly_convex
+from repro.experiments.instances import build_instance
 
-# 1. an ERM problem: n=512 samples, d=1024 features (d > n: the regime
-#    where the paper says feature partitioning wins on communication)
-prob = make_random_erm(n=512, d=1024, loss="squared", lam=1e-2, seed=0)
+# 1. the run, declaratively: n=512 samples, d=1024 features (d > n: the
+#    regime where the paper says feature partitioning wins on
+#    communication), 4 machines, distributed accelerated gradient
+#    descent (the algorithm that MATCHES the Theorem-2 lower bound)
+params = dict(n=512, d=1024, m=4, lam=1e-2, seed=1)
+bundle = build_instance("random_ridge", **params)
+res = run(RunSpec(instance="random_ridge", instance_params=params,
+                  algorithm="dagd", rounds=300, measure="none"),
+          bundle=bundle)               # share the built instance
 
-# 2. partition the FEATURES across 4 machines
-part = even_partition(prob.d, m=4)
-dist = LocalDistERM(prob, part)
-
-# 3. run distributed accelerated gradient descent (the algorithm that
-#    MATCHES the paper's Theorem-2 lower bound)
-L = prob.smoothness_bound()
-w_blocks = dagd(dist, rounds=300, L=L, lam=prob.lam)
-w = dist.gather_w(w_blocks)
-
-# 4. inspect solution + communication bill
+# 2. inspect solution + communication bill
+prob = bundle.prob
 H = prob.A.T @ prob.A / prob.n + prob.lam * jnp.eye(prob.d)
 w_star = jnp.linalg.solve(H, prob.A.T @ prob.y / prob.n)
-gap = float(prob.value(w)) - float(prob.value(w_star))
-led = dist.comm.ledger
+gap = float(prob.value(res.w)) - float(prob.value(w_star))
+led = res.ledger
 print(f"suboptimality f(w)-f*     : {gap:.3e}")
 print(f"communication rounds      : {led.rounds}")
 print(f"bytes per round           : {led.bytes_per_round():.0f} "
       f"(= one R^n ReduceAll; n={prob.n})")
 print(f"total ReduceAll ops       : {led.op_counts()}")
-lb = thm2_strongly_convex(L / prob.lam, prob.lam,
+lb = thm2_strongly_convex(prob.smoothness_bound() / prob.lam, prob.lam,
                           float(jnp.linalg.norm(w_star)), 1e-6)
 print(f"Thm-2 lower bound (eps=1e-6): {lb.rounds:.0f} rounds")
-led.assert_budget(n=prob.n, d=prob.d)
-print("paper's O(n+d)/round communication budget: RESPECTED")
+print(f"paper's O(n+d)/round communication budget: "
+      f"{'RESPECTED' if res.budget_ok else 'VIOLATED'}")
+sys.exit(0 if res.budget_ok else 1)

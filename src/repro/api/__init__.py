@@ -1,0 +1,40 @@
+"""Unified declarative run API — the repo's one front door.
+
+Every run is an explicit, serializable value:
+
+    from repro.api import RunSpec, run
+
+    res = run(RunSpec(
+        instance="thm2_chain",
+        instance_params=dict(d=64, kappa=32.0, lam=0.5, m=4),
+        algorithm="dagd", rounds=1500, eps=(1e-6,)))
+    res.measured_rounds(1e-6), res.ledger.rounds, res.stream()
+
+``RunSpec -> plan -> execute``: ``plan(spec)`` resolves every ``"auto"``
+axis (placement, oracle backend, round engine) through the single
+capability resolver and validates the combination eagerly;
+``ExecutionPlan.execute()`` drives the existing metered runtime;
+``execute_batch(plans)`` groups same-shaped cells and ``vmap``s the
+scan-compiled round program across the grid — a sweep compiles a
+handful of XLA programs instead of one per cell.
+
+Specs round-trip through JSON (``to_json``/``from_json``) and are
+embedded in every sweep record under ``docs/results/``, so any published
+row can be re-executed verbatim.
+"""
+from ._resolve import (BACKEND_ENV, ENGINE_ENV, ENGINES, ORACLE_BACKENDS,
+                       PLACEMENTS, capabilities, resolve_engine,
+                       resolve_oracle_backend, resolve_placement)
+from .spec import SPEC_SCHEMA_VERSION, RunSpec
+from .plan import (ExecutionPlan, PlanError, RunResult, bound_for, plan,
+                   run)
+from .batch import execute_batch
+
+__all__ = [
+    "BACKEND_ENV", "ENGINE_ENV", "ENGINES", "ORACLE_BACKENDS", "PLACEMENTS",
+    "capabilities", "resolve_engine", "resolve_oracle_backend",
+    "resolve_placement",
+    "SPEC_SCHEMA_VERSION", "RunSpec",
+    "ExecutionPlan", "PlanError", "RunResult", "bound_for", "plan", "run",
+    "execute_batch",
+]

@@ -1,0 +1,95 @@
+"""The single capability resolver for the three execution axes.
+
+Every run in the repo is positioned on three orthogonal axes:
+
+  * **placement** — where the machines live: ``local`` (m simulated
+    machines, blocks stacked on a leading axis) or ``sharded`` (machine j
+    = mesh slice j inside ``shard_map``);
+  * **oracle backend** — how the per-machine GEMVs inside
+    ``response``/``pgrad``/``phvp`` are computed: ``einsum`` (plain jnp
+    contractions) or ``kernel`` (the MXU-tiled Pallas kernels);
+  * **round engine** — how rounds are driven: ``python`` (per-call loop)
+    or ``scan`` (one ``lax.scan``-compiled XLA program per segment).
+
+Historically the ``auto`` choices were resolved in three places
+(``core/runtime.py``, ``experiments/sweep.py``, ``launch/dryrun.py``);
+this module is now the only implementation.  ``repro.api.plan`` calls it
+at *plan time*, so environment variables are consulted when a run is
+planned, never at import time, and a resolved ``ExecutionPlan`` carries
+concrete choices from then on.  ``core.runtime``/``core.engine`` keep
+their historical ``resolve_*`` names as delegating shims.
+
+This module must stay a leaf (stdlib + jax only): ``repro.core``'s shims
+reach it at call time through the ``repro.api`` package (which imports
+the whole facade), so any load-time dependency from here back into
+``repro.core`` or ``repro.experiments`` would recreate the import cycle
+the call-time indirection avoids.
+"""
+from __future__ import annotations
+
+import os
+from typing import Dict, Optional
+
+import jax
+
+
+ORACLE_BACKENDS = ("einsum", "kernel")
+ENGINES = ("python", "scan")
+PLACEMENTS = ("local", "sharded")
+
+BACKEND_ENV = "REPRO_ORACLE_BACKEND"
+ENGINE_ENV = "REPRO_ROUND_ENGINE"
+
+
+def capabilities() -> Dict[str, object]:
+    """What the current process can actually execute.
+
+    ``kernel_compiled`` — the Pallas kernels compile for TPU; everywhere
+    else they run in interpret mode (correct but slow), which is why
+    ``auto`` only picks ``kernel`` on TPU.  ``devices`` bounds the mesh a
+    ``sharded`` placement can build.
+    """
+    platform = jax.default_backend()
+    return dict(platform=platform,
+                devices=jax.device_count(),
+                kernel_compiled=(platform == "tpu"))
+
+
+def _check(value: str, axis: str, options) -> str:
+    if value not in options:
+        raise ValueError(f"unknown {axis} {value!r}; expected one of "
+                         f"{tuple(options) + ('auto',)}")
+    return value
+
+
+def resolve_oracle_backend(backend: Optional[str] = None, *,
+                           caps: Optional[dict] = None) -> str:
+    """``None``/``"auto"`` -> the ``REPRO_ORACLE_BACKEND`` env var, then
+    the platform default (``kernel`` on TPU, ``einsum`` elsewhere)."""
+    if backend in (None, "auto"):
+        backend = os.environ.get(BACKEND_ENV, "").strip() or None
+    if backend in (None, "auto"):
+        caps = caps if caps is not None else capabilities()
+        backend = "kernel" if caps["kernel_compiled"] else "einsum"
+    return _check(backend, "oracle backend", ORACLE_BACKENDS)
+
+
+def resolve_engine(engine: Optional[str] = None) -> str:
+    """``None``/``"auto"`` -> the ``REPRO_ROUND_ENGINE`` env var, then
+    ``scan`` — the compiled engine is the production default on every
+    platform; the python engine exists for debugging and parity."""
+    if engine in (None, "auto"):
+        engine = os.environ.get(ENGINE_ENV, "").strip() or None
+    if engine in (None, "auto"):
+        engine = "scan"
+    return _check(engine, "round engine", ENGINES)
+
+
+def resolve_placement(placement: Optional[str] = None) -> str:
+    """``None``/``"auto"`` -> ``local``.  The sharded placement is an
+    explicit opt-in: it needs a mesh and its ledger records at trace
+    time, so silently switching on device count would change metering
+    conventions under the caller."""
+    if placement in (None, "auto"):
+        placement = "local"
+    return _check(placement, "placement", PLACEMENTS)

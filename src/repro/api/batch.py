@@ -1,0 +1,245 @@
+"""``execute_batch(plans)`` — many certification cells per compiled program.
+
+The PR-3 scan engine compiles one XLA program per (cell, segment); a
+sweep over an instance grid therefore pays one trace + compile per cell
+even though every cell of the same algorithm runs the *same* round
+recurrence on different data.  This module groups same-shaped cells and
+``vmap``s the scan-compiled round program across the grid, so a
+thm2-style sweep compiles a handful of XLA programs instead of one per
+cell.
+
+**How a cell becomes batchable.**  A cell's step function closes over
+its own data (``A_stk``, masks, hyper-parameter scalars).  For each
+distinct step we trace it once with ``jax.make_jaxpr`` and split the
+result into
+
+  * the *structure* — the jaxpr with its constants abstracted out, and
+  * the *consts* — the closed-over arrays, in trace order.
+
+Two cells group iff their structures are string-identical (same
+algorithm, same shapes, every cell-varying value hoisted into consts —
+the algorithm builders wrap their scalar hypers in ``jnp.float32`` for
+exactly this reason) and their consts line up shape-for-shape.  The
+group then runs as ONE jitted ``lax.scan`` whose body ``vmap``s the
+shared structure over the stacked consts/carries.  Anything that fails
+the structural check — a python-float literal that differs per cell, a
+different round budget, the python engine — falls back to the sequential
+``ExecutionPlan.execute`` path.  Grouping is checked, never assumed:
+a structural mismatch can only cause a fallback, not a wrong result.
+
+**Ledger contract.**  The batched run meters nothing from compiled code;
+like the scan engine it replays each step's trace-once schedule
+``count`` times per segment into each cell's own fresh ``CommLedger``.
+Because the schedule comes from the same step functions the sequential
+engines run, every cell's record stream is **bit-identical** to its
+sequential stream (``benchmarks/api_batch.py`` gates this, along with
+certification-verdict identity).  Gap series agree with the sequential
+scan path up to batched-``dot_general`` reassociation (same ±1-round
+eps-crossing tolerance the TPU kernels get).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional, Sequence, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..core.comm import CommLedger
+from ..core.engine import Segment
+from .plan import ExecutionPlan, PlanError, RunResult
+
+
+# --------------------------------------------------------------------------
+# Structure/consts splitting
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class _Converted:
+    """One closure, split into pure structure + hoisted consts."""
+
+    pure: Callable                    # pure(consts, *args) -> outputs
+    consts: List[jnp.ndarray]
+    structure: str                    # jaxpr text, consts abstracted
+    schedule: Tuple[list, int]        # (ledger records, rounds) per call
+
+
+def _convert(fn: Callable, *example_args) -> _Converted:
+    closed, out_shape = jax.make_jaxpr(fn, return_shape=True)(*example_args)
+    out_tree = jax.tree.structure(out_shape)
+
+    def pure(consts, *args):
+        flat, _ = jax.tree.flatten(args)
+        out = jax.core.eval_jaxpr(closed.jaxpr, consts, *flat)
+        return jax.tree.unflatten(out_tree, out)
+
+    return _Converted(pure=pure, consts=list(closed.consts),
+                      structure=str(closed.jaxpr), schedule=([], 0))
+
+
+def _segment_xs(seg: Segment) -> np.ndarray:
+    if seg.xs is not None:
+        return np.asarray(seg.xs)
+    return np.arange(seg.count, dtype=np.int32)
+
+
+@dataclasses.dataclass
+class _Cell:
+    plan: ExecutionPlan
+    dist: object
+    program: object
+    steps: List[_Converted]           # one per segment (shared by identity)
+    meas: Optional[_Converted]
+
+    def group_key(self) -> tuple:
+        segs = tuple(
+            (conv.structure, seg.count, _segment_xs(seg).shape,
+             _segment_xs(seg).dtype.str,
+             tuple((tuple(c.shape), jnp.asarray(c).dtype.str)
+                   for c in conv.consts))
+            for seg, conv in zip(self.program.segments, self.steps))
+        meas = (self.meas.structure,
+                tuple((tuple(c.shape), jnp.asarray(c).dtype.str)
+                      for c in self.meas.consts)) if self.meas else None
+        return (self.plan.algo.name, self.plan.backend, self.plan.spec.rounds,
+                segs, meas)
+
+
+def _prepare(plan: ExecutionPlan) -> Optional[_Cell]:
+    """Trace a plan's cell into structure + consts; None if unbatchable."""
+    if plan.resolution_only or plan.placement != "local" \
+            or plan.engine != "scan":
+        return None
+    dist, program, measure_fn = plan._cell()
+    real = dist.comm.ledger
+    dist.comm.ledger = scratch = CommLedger()
+    try:
+        carry = program.init
+        by_step = {}
+        steps = []
+        for seg in program.segments:
+            xs = _segment_xs(seg)
+            key = (id(seg.step), xs.dtype.str, xs.shape[1:])
+            if key not in by_step:
+                n0, r0 = len(scratch.records), scratch.rounds
+                conv = _convert(lambda c, x: seg.step(dist, c, x),
+                                carry, jnp.asarray(xs[0]))
+                conv.schedule = (scratch.records[n0:], scratch.rounds - r0)
+                by_step[key] = conv
+            steps.append(by_step[key])
+        meas = None
+        if measure_fn is not None:
+            n0 = len(scratch.records)
+            # every registered program emits the round iterate in stacked
+            # block form (m, d_max) — the same shape zeros_like_w builds
+            meas = _convert(measure_fn, dist.zeros_like_w())
+            if len(scratch.records) != n0:
+                raise PlanError("measure performed metered communication; "
+                                "measurement must stay oracle-free")
+    finally:
+        dist.comm.ledger = real
+    return _Cell(plan=plan, dist=dist, program=program, steps=steps,
+                 meas=meas)
+
+
+# --------------------------------------------------------------------------
+# Group execution
+# --------------------------------------------------------------------------
+
+def _stack_consts(cells: Sequence[_Cell], pick) -> list:
+    convs = [pick(c) for c in cells]
+    n = len(convs[0].consts)
+    return [jnp.stack([jnp.asarray(conv.consts[k]) for conv in convs])
+            for k in range(n)]
+
+
+def _execute_group(cells: List[_Cell]) -> List[RunResult]:
+    C = len(cells)
+    progs = [c.program for c in cells]
+    carry = jax.tree.map(lambda *xs: jnp.stack(xs),
+                         *[p.init for p in progs])
+    meas0 = cells[0].meas
+    runners, consts_cache, outs = {}, {}, []
+    mconsts = _stack_consts(cells, lambda c: c.meas) if meas0 else []
+    for s, seg0 in enumerate(progs[0].segments):
+        conv0 = cells[0].steps[s]
+        cell_xs = [_segment_xs(c.program.segments[s]) for c in cells]
+        # the common case (index aranges, shared momentum/RNG schedules):
+        # every cell scans the same xs — share one copy and broadcast it
+        # across the vmap instead of scanning a (count, C) stack
+        shared_xs = all(np.array_equal(x, cell_xs[0]) for x in cell_xs[1:])
+        skey = (id(conv0.pure), shared_xs)
+        if skey not in consts_cache:
+            consts_cache[skey] = _stack_consts(cells, lambda c: c.steps[s])
+        consts = consts_cache[skey]
+        if skey not in runners:
+            pure_step = conv0.pure
+            pure_meas = meas0.pure if meas0 else None
+
+            def runner_fn(consts, mconsts, carry, xs,
+                          _step=pure_step, _meas=pure_meas,
+                          _shared=shared_xs):
+                def body(c, x):
+                    c, w = jax.vmap(_step,
+                                    in_axes=(0, 0, None if _shared else 0)
+                                    )(consts, c, x)
+                    out = jax.vmap(_meas)(mconsts, w) if _meas else None
+                    return c, out
+
+                return lax.scan(body, carry, xs)
+
+            runners[skey] = jax.jit(runner_fn)
+        xs = cell_xs[0] if shared_xs else np.stack(cell_xs, axis=1)
+        carry, out = runners[skey](consts, mconsts, carry, jnp.asarray(xs))
+        if meas0 is not None:
+            outs.append(out)                        # (count, C)
+    gaps_all = np.asarray(jnp.concatenate(outs, axis=0)) if outs else None
+
+    results = []
+    for i, cell in enumerate(cells):
+        ledger = CommLedger()
+        for s, seg in enumerate(cell.program.segments):
+            records, rounds_per_step = cell.steps[s].schedule
+            for _ in range(seg.count):
+                ledger.records.extend(records)
+            ledger.rounds += rounds_per_step * seg.count
+        carry_i = jax.tree.map(lambda a: a[i], carry)
+        w = cell.dist.gather_w(cell.program.final(carry_i))
+        pl = cell.plan
+        results.append(RunResult(
+            spec=pl.spec, placement=pl.placement, backend=pl.backend,
+            engine=pl.engine, w=w, rounds=cell.program.rounds,
+            ledger=ledger,
+            gaps=gaps_all[:, i] if gaps_all is not None else None,
+            budget_ok=pl._budget_ok(ledger), batched=True))
+    return results
+
+
+# --------------------------------------------------------------------------
+# Entry point
+# --------------------------------------------------------------------------
+
+def execute_batch(plans: Sequence[ExecutionPlan]) -> List[RunResult]:
+    """Execute many plans, vmapping groups of same-shaped cells through
+    one compiled program each.  Results come back in input order; plans
+    that cannot batch (python engine, sharded placement, structural
+    mismatch, singleton groups) execute sequentially — batching is a
+    performance optimization, never a semantic one."""
+    cells: List[Optional[_Cell]] = [_prepare(pl) for pl in plans]
+    groups: dict = {}
+    for i, cell in enumerate(cells):
+        if cell is not None:
+            groups.setdefault(cell.group_key(), []).append(i)
+
+    results: List[Optional[RunResult]] = [None] * len(plans)
+    for key, idxs in groups.items():
+        if len(idxs) < 2:
+            continue
+        for i, res in zip(idxs, _execute_group([cells[i] for i in idxs])):
+            results[i] = res
+    for i, res in enumerate(results):
+        if res is None:
+            results[i] = plans[i].execute()
+    return results

@@ -1,0 +1,361 @@
+"""``plan(spec) -> ExecutionPlan`` — validate a run before paying for it.
+
+Planning is where every ``"auto"`` in a ``RunSpec`` becomes a concrete
+choice (one resolver, ``repro.api._resolve``, consulted at plan time)
+and where incompatible combinations are rejected eagerly: unknown
+algorithm or instance names, instance parameters the builder does not
+accept, eps thresholds without measurement, gap measurement under the
+sharded placement (whose driver has no measurement channel), hyper-
+parameter overrides the algorithm's program does not take.  A failed
+plan costs microseconds; a failed run costs a compile.
+
+An ``ExecutionPlan`` then drives the existing machinery:
+
+  * ``execute()`` — one metered run through ``LocalDistERM`` +
+    ``run_program`` (or ``shard_map`` via the ``core.runtime`` driver for
+    the sharded placement), returning a ``RunResult`` with the final
+    iterate, the per-round gap series, and a fresh ``CommLedger``.
+  * ``bound(eps_abs)`` — the closed-form theorem report certifying this
+    (instance, algorithm) pair: Thm 2 (λ>0) / Thm 3 (λ=0) for the
+    non-incremental family, Thm 4 for the incremental one.
+  * ``execute_batch`` (``repro.api.batch``) — many plans per compiled
+    XLA program.
+
+The instance is built lazily (``plan`` itself stays cheap); sweeps that
+share one instance across algorithms pass ``bundle=`` to avoid
+rebuilding reference solutions.
+"""
+from __future__ import annotations
+
+import dataclasses
+import inspect
+from typing import List, Optional, Tuple
+
+import numpy as np
+import jax.numpy as jnp
+
+from ..core.bounds import (BoundReport, thm2_strongly_convex,
+                           thm3_smooth_convex, thm4_incremental)
+from ..core.comm import CommLedger
+from ..core.engine import EngineSession, run_program
+from ..experiments.instances import INSTANCE_BUILDERS, InstanceBundle, \
+    build_instance
+from ..experiments.registry import ALGORITHM_REGISTRY, AlgorithmSpec, \
+    get_algorithm
+from . import _resolve
+from .spec import RunSpec
+
+
+class PlanError(ValueError):
+    """A RunSpec that cannot execute, rejected before any compute."""
+
+
+def bound_for(bundle: InstanceBundle, algo: AlgorithmSpec,
+              eps_abs: float) -> Optional[BoundReport]:
+    """The theorem bound certifying this (instance, algorithm) pair, as
+    declared by the algorithm's registry entry."""
+    p, ctx = bundle.params, bundle.ctx
+    if bundle.wstar_norm is None:
+        return None
+    sc_theorem, smooth_theorem = algo.certifying_theorem
+    theorem = sc_theorem if ctx.lam > 0 else smooth_theorem
+    if theorem == "thm4":
+        n_comp = int(p.get("n", bundle.prob.n))
+        kappa = float(p.get("kappa", ctx.L / max(ctx.lam, 1e-30)))
+        return thm4_incremental(n_comp, kappa, ctx.lam, bundle.wstar_norm,
+                                eps_abs)
+    if theorem == "thm2":
+        kappa = float(p.get("kappa", ctx.L / ctx.lam))
+        return thm2_strongly_convex(kappa, ctx.lam, bundle.wstar_norm,
+                                    eps_abs)
+    return thm3_smooth_convex(float(p.get("L", ctx.L)), bundle.wstar_norm,
+                              eps_abs)
+
+
+@dataclasses.dataclass
+class RunResult:
+    """One executed run: final iterate, measurements, and the meter."""
+
+    spec: RunSpec
+    placement: str
+    backend: str
+    engine: str
+    w: jnp.ndarray                    # assembled global iterate (d,)
+    rounds: int
+    ledger: CommLedger
+    gaps: Optional[np.ndarray] = None     # (K,) when measure == "gap"
+    budget_ok: Optional[bool] = None      # None: budget check disabled
+    batched: bool = False                 # executed via execute_batch group
+
+    def measured_rounds(self, eps_abs: float) -> Optional[int]:
+        """First round k with f(w_k) - f* <= eps_abs (1-based), or None
+        if the budget never reached eps."""
+        if self.gaps is None:
+            raise PlanError("run was executed without gap measurement "
+                            "(measure='none'); no rounds-to-eps to read")
+        hits = np.nonzero(self.gaps <= eps_abs)[0]
+        return int(hits[0]) + 1 if hits.size else None
+
+    def stream(self) -> List[Tuple[str, int, int, str]]:
+        """The full (kind, elems, bytes, tag) CommLedger record stream —
+        the quantity the conformance suites pin bit-identical across
+        backends, engines, and batching."""
+        return [(r.kind, r.elems, r.bytes, r.tag)
+                for r in self.ledger.records]
+
+
+@dataclasses.dataclass
+class ExecutionPlan:
+    """A validated RunSpec with every ``auto`` resolved."""
+
+    spec: RunSpec
+    placement: str
+    backend: str
+    engine: str
+    measure: str                      # "gap" | "none"
+    algo: Optional[AlgorithmSpec]
+    _bundle: Optional[InstanceBundle] = None
+    _cell_cache: Optional[tuple] = None
+    _gap0: Optional[float] = None
+
+    # ---- lazy problem construction --------------------------------------
+    @property
+    def resolution_only(self) -> bool:
+        return self.spec.instance is None
+
+    @property
+    def bundle(self) -> InstanceBundle:
+        if self.resolution_only:
+            raise PlanError("resolution-only plan (no instance); nothing "
+                            "to build")
+        if self._bundle is None:
+            self._bundle = build_instance(self.spec.instance,
+                                          **self.spec.instance_params)
+        return self._bundle
+
+    def algo_kwargs(self) -> dict:
+        return dict(self.algo.make_kwargs(self.bundle.ctx),
+                    **self.spec.algo_kwargs)
+
+    def gap0(self) -> float:
+        """f(0) - f*, the denominator of relative eps thresholds."""
+        if self._gap0 is None:
+            b = self.bundle
+            if b.fstar is None:
+                raise PlanError(f"instance {b.kind!r} has no reference "
+                                f"optimum (fstar); relative eps and gap "
+                                f"measurement are unavailable")
+            self._gap0 = float(b.objective(jnp.zeros((b.prob.d,)))
+                               - b.fstar)
+        return self._gap0
+
+    def eps_abs(self, eps: float) -> float:
+        return eps * self.gap0() if self.spec.eps_mode == "rel" else eps
+
+    def bound(self, eps_abs: float) -> Optional[BoundReport]:
+        return bound_for(self.bundle, self.algo, eps_abs)
+
+    def certify(self, result: "RunResult", eps: float) -> Optional[bool]:
+        """The certification verdict for one eps threshold, three-valued
+        exactly as the sweep reports it: ``True``/``False`` when the
+        inequality measured >= bound is conclusive, ``None`` when it is
+        not applicable (instance not hard, no bound) or inconclusive
+        (eps unreached within a round budget still below the bound).
+        When eps goes unreached but budget >= bound, the run certifies:
+        rounds-to-eps > budget >= bound."""
+        eps_abs = self.eps_abs(eps)
+        bound = self.bound(eps_abs)
+        if not self.bundle.hard or bound is None:
+            return None
+        measured = result.measured_rounds(eps_abs)
+        if measured is not None:
+            return bool(measured >= bound.rounds)
+        return True if self.spec.rounds >= bound.rounds else None
+
+    # ---- execution -------------------------------------------------------
+    def _cell(self):
+        """(dist, program, measure_fn) — built once, reused across
+        ``execute`` calls (each call meters into a fresh ledger)."""
+        if self._cell_cache is None:
+            from ..core.runtime import LocalDistERM
+            b = self.bundle
+            dist = LocalDistERM(b.prob, b.part, backend=self.backend)
+            program = self.algo.program(dist, rounds=self.spec.rounds,
+                                        **self.algo_kwargs())
+            measure_fn = None
+            if self.measure == "gap":
+                objective = b.objective
+                if b.fstar is None:
+                    raise PlanError(f"instance {b.kind!r} has no fstar; "
+                                    f"run with measure='none'")
+                # f32-wrapped so fstar is a hoistable const, not a
+                # per-cell literal (same f32 value the weak-typed float
+                # subtraction produced; see execute_batch grouping)
+                fstar = jnp.float32(b.fstar)
+
+                def measure_fn(w_stk):
+                    return objective(dist.gather_w(w_stk)) - fstar
+
+            self._cell_cache = (dist, program, measure_fn)
+        return self._cell_cache
+
+    def _budget_ok(self, ledger: CommLedger) -> Optional[bool]:
+        if not self.spec.check_budget:
+            return None
+        try:
+            ledger.assert_budget(n=self.bundle.prob.n, d=self.bundle.prob.d)
+            return True
+        except AssertionError:
+            return False
+
+    def release(self) -> None:
+        """Drop the cached cell (dist's padded data copy, compiled-step
+        closures) and bundle.  A long sweep calls this after harvesting a
+        cell's records so peak memory stays one grid point, not the whole
+        grid; the plan can still re-execute (everything rebuilds)."""
+        self._cell_cache = None
+        self._bundle = None
+
+    def execute(self, session: Optional[EngineSession] = None) -> RunResult:
+        if self.resolution_only:
+            raise PlanError("resolution-only plan; give the RunSpec an "
+                            "instance and algorithm to execute it")
+        if self.placement == "sharded":
+            return self._execute_sharded()
+        dist, program, measure_fn = self._cell()
+        dist.comm.ledger = ledger = CommLedger()
+        res = run_program(dist, program, engine=self.engine,
+                          measure=measure_fn, session=session)
+        return RunResult(
+            spec=self.spec, placement=self.placement, backend=self.backend,
+            engine=self.engine, w=dist.gather_w(res.w), rounds=res.rounds,
+            ledger=ledger, gaps=res.gaps, budget_ok=self._budget_ok(ledger))
+
+    def _execute_sharded(self) -> RunResult:
+        from ..core.runtime import _run_sharded
+        b = self.bundle
+        kwargs = self.algo_kwargs()
+        ledger = CommLedger()
+        if self.engine == "python":
+            w, led = _run_sharded(
+                b.prob, lambda d_, r: self.algo.fn(d_, r, **kwargs),
+                rounds=self.spec.rounds, ledger=ledger,
+                backend=self.backend, engine="python")
+        else:
+            w, led = _run_sharded(
+                b.prob, None, rounds=self.spec.rounds, ledger=ledger,
+                backend=self.backend, engine="scan",
+                program_builder=lambda d_, r: self.algo.program(d_, r,
+                                                                **kwargs))
+        return RunResult(
+            spec=self.spec, placement=self.placement, backend=self.backend,
+            engine=self.engine, w=w, rounds=led.rounds, ledger=led,
+            gaps=None, budget_ok=self._budget_ok(led))
+
+
+# --------------------------------------------------------------------------
+# The validator
+# --------------------------------------------------------------------------
+
+def _validate_instance(spec: RunSpec) -> None:
+    if spec.instance not in INSTANCE_BUILDERS:
+        raise PlanError(f"unknown instance {spec.instance!r}; known: "
+                        f"{sorted(INSTANCE_BUILDERS)}")
+    sig = inspect.signature(INSTANCE_BUILDERS[spec.instance])
+    unknown = set(spec.instance_params) - set(sig.parameters)
+    if unknown:
+        raise PlanError(
+            f"instance {spec.instance!r} does not accept parameter(s) "
+            f"{sorted(unknown)}; accepted: {sorted(sig.parameters)}")
+
+
+def _validate_algorithm(spec: RunSpec) -> AlgorithmSpec:
+    if spec.algorithm not in ALGORITHM_REGISTRY:
+        raise PlanError(f"unknown algorithm {spec.algorithm!r}; "
+                        f"registered: {sorted(ALGORITHM_REGISTRY)}")
+    algo = get_algorithm(spec.algorithm)
+    if spec.algo_kwargs:
+        sig = inspect.signature(algo.program)
+        # 'dist' and 'rounds' are positions the plan itself fills — a
+        # spec supplying them would pass the signature check here only to
+        # die with a duplicate-argument TypeError at execute time
+        reserved = {"dist", "rounds"}
+        accepted = set(sig.parameters) - reserved
+        unknown = set(spec.algo_kwargs) - accepted
+        if unknown:
+            raise PlanError(
+                f"algorithm {spec.algorithm!r} takes no hyper-parameter(s) "
+                f"{sorted(unknown)}; its program accepts "
+                f"{sorted(accepted)}")
+    return algo
+
+
+def plan(spec: RunSpec,
+         bundle: Optional[InstanceBundle] = None) -> ExecutionPlan:
+    """Resolve + validate a RunSpec.  ``bundle`` optionally supplies a
+    pre-built instance (sweeps share one across algorithms); it must
+    match ``spec.instance``."""
+    caps = _resolve.capabilities()
+    try:
+        placement = _resolve.resolve_placement(spec.placement)
+        backend = _resolve.resolve_oracle_backend(spec.backend, caps=caps)
+        engine = _resolve.resolve_engine(spec.engine)
+    except ValueError as e:
+        raise PlanError(str(e)) from None
+
+    if spec.instance is None and spec.algorithm is None:
+        # resolution-only: the axes are the whole request (dry-run tools)
+        return ExecutionPlan(spec=spec, placement=placement,
+                             backend=backend, engine=engine,
+                             measure="none", algo=None)
+    if spec.instance is None or spec.algorithm is None:
+        raise PlanError("a runnable RunSpec needs BOTH instance and "
+                        "algorithm (leave both None for a resolution-only "
+                        "plan)")
+
+    _validate_instance(spec)
+    algo = _validate_algorithm(spec)
+    if spec.rounds < 1:
+        raise PlanError(f"rounds must be >= 1 to execute; got "
+                        f"{spec.rounds}")
+
+    measure = spec.measure
+    if measure == "auto":
+        measure = "gap" if spec.eps else "none"
+    if spec.eps and measure == "none":
+        raise PlanError("eps thresholds were requested but measure='none'; "
+                        "rounds-to-eps needs the in-run gap series")
+    if placement == "sharded":
+        if measure == "gap":
+            raise PlanError(
+                "gap measurement is not supported under the sharded "
+                "placement (the shard_map driver has no measurement "
+                "channel); use placement='local' for certification cells")
+        if algo.local_only_kwargs:
+            raise PlanError(
+                f"algorithm {algo.name!r} derives machine-stacked hyper-"
+                f"parameters (registry local_only_kwargs); its registry "
+                f"adapter only supports placement='local'")
+    if bundle is not None:
+        if bundle.kind != spec.instance:
+            raise PlanError(f"supplied bundle is {bundle.kind!r} but the "
+                            f"spec names instance {spec.instance!r}")
+        # a misaligned bundle would execute a different problem than the
+        # embedded run_spec records, silently breaking the "re-execute any
+        # row verbatim" guarantee — reject on the stamped builder inputs
+        if bundle.build_params is not None and \
+                bundle.build_params != spec.instance_params:
+            raise PlanError(
+                f"supplied bundle was built with {bundle.build_params} "
+                f"but the spec says instance_params="
+                f"{spec.instance_params}; the executed problem would not "
+                f"match the recorded run_spec")
+
+    return ExecutionPlan(spec=spec, placement=placement, backend=backend,
+                         engine=engine, measure=measure, algo=algo,
+                         _bundle=bundle)
+
+
+def run(spec: RunSpec, bundle: Optional[InstanceBundle] = None) -> RunResult:
+    """The one-call front door: ``plan`` then ``execute``."""
+    return plan(spec, bundle=bundle).execute()

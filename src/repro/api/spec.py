@@ -1,0 +1,126 @@
+"""``RunSpec`` — every run in the repo as one explicit, serializable value.
+
+A ``RunSpec`` captures the full coordinates of a certification cell:
+the problem (a registered instance family plus its parameters), the
+algorithm, the round/accuracy budget, and the three execution axes
+(placement, oracle backend, round engine — ``"auto"`` until
+``repro.api.plan`` resolves them).  Nothing about a run lives anywhere
+else: a spec embedded in a ``docs/results/*.json`` record is enough to
+re-execute that row verbatim (``RunSpec.from_dict(rec["run_spec"])``).
+
+Specs are frozen and JSON-round-trippable; ``plan(spec)`` validates one
+eagerly before any compute is paid for.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+
+SPEC_SCHEMA_VERSION = 1
+
+_EPS_MODES = ("abs", "rel")
+_MEASURES = ("auto", "gap", "none")
+
+
+def _plain(value):
+    """Recursively coerce numpy scalars/arrays (grid machinery leaks
+    them) to JSON types, so every constructible spec round-trips."""
+    if isinstance(value, np.bool_):
+        return bool(value)
+    if isinstance(value, np.integer):
+        return int(value)
+    if isinstance(value, np.floating):
+        return float(value)
+    if isinstance(value, np.ndarray):
+        return [_plain(v) for v in value.tolist()]
+    if isinstance(value, dict):
+        return {str(k): _plain(v) for k, v in value.items()}
+    if isinstance(value, (list, tuple)):
+        return [_plain(v) for v in value]
+    return value
+
+
+@dataclasses.dataclass(frozen=True)
+class RunSpec:
+    """One run, declaratively.
+
+    ``instance``/``instance_params`` name a builder in
+    ``repro.experiments.instances.INSTANCE_BUILDERS``; ``algorithm`` an
+    entry of ``repro.experiments.registry``.  Both may be ``None`` for a
+    *resolution-only* spec (used e.g. by the dry-run tooling, which only
+    needs the axes resolved).
+
+    ``eps`` thresholds are read off the measured gap series after the
+    run — they never change what executes, so one metered run serves a
+    whole eps grid.  ``measure="auto"`` folds gap measurement into the
+    run iff thresholds were requested.
+
+    ``algo_kwargs`` overrides entries of the hyper-context the registry
+    derives from the instance (``AlgorithmSpec.make_kwargs``).
+    """
+
+    instance: Optional[str] = None
+    instance_params: Dict[str, object] = dataclasses.field(
+        default_factory=dict)
+    algorithm: Optional[str] = None
+    rounds: int = 0
+    eps: Tuple[float, ...] = ()
+    eps_mode: str = "abs"            # "abs" | "rel" (x (f(0) - f*))
+    measure: str = "auto"            # "auto" | "gap" | "none"
+    placement: str = "auto"          # "auto" | "local" | "sharded"
+    backend: str = "auto"            # "auto" | "einsum" | "kernel"
+    engine: str = "auto"             # "auto" | "scan" | "python"
+    algo_kwargs: Dict[str, object] = dataclasses.field(default_factory=dict)
+    check_budget: bool = True        # assert the O(n+d)/round budget
+    tag: str = ""
+
+    def __post_init__(self):
+        object.__setattr__(self, "instance_params",
+                           _plain(dict(self.instance_params)))
+        object.__setattr__(self, "algo_kwargs",
+                           _plain(dict(self.algo_kwargs)))
+        object.__setattr__(self, "eps",
+                           tuple(float(e) for e in self.eps))
+        object.__setattr__(self, "rounds", int(self.rounds))
+        if self.eps_mode not in _EPS_MODES:
+            raise ValueError(f"eps_mode {self.eps_mode!r}; expected one of "
+                             f"{_EPS_MODES}")
+        if self.measure not in _MEASURES:
+            raise ValueError(f"measure {self.measure!r}; expected one of "
+                             f"{_MEASURES}")
+
+    # ---- serialization ---------------------------------------------------
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["eps"] = list(self.eps)
+        d["schema_version"] = SPEC_SCHEMA_VERSION
+        return d
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "RunSpec":
+        d = dict(d)
+        version = d.pop("schema_version", SPEC_SCHEMA_VERSION)
+        if version != SPEC_SCHEMA_VERSION:
+            raise ValueError(f"RunSpec schema_version {version} not "
+                             f"supported (this build speaks "
+                             f"{SPEC_SCHEMA_VERSION})")
+        fields = {f.name for f in dataclasses.fields(cls)}
+        unknown = set(d) - fields
+        if unknown:
+            raise ValueError(f"unknown RunSpec field(s) {sorted(unknown)}; "
+                             f"known: {sorted(fields)}")
+        return cls(**d)
+
+    def to_json(self) -> str:
+        return json.dumps(self.to_dict(), sort_keys=True)
+
+    @classmethod
+    def from_json(cls, text: str) -> "RunSpec":
+        return cls.from_dict(json.loads(text))
+
+    def replace(self, **changes) -> "RunSpec":
+        return dataclasses.replace(self, **changes)

@@ -20,6 +20,7 @@ from __future__ import annotations
 import math
 
 import numpy as np
+import jax.numpy as jnp
 
 from ..engine import RoundProgram, Segment, run_program
 
@@ -37,12 +38,19 @@ def fista_momentum_schedule(rounds: int) -> np.ndarray:
 
 def dagd_program(dist, rounds: int, L: float, lam: float = 0.0
                  ) -> RoundProgram:
-    inv_L = 1.0 / L
+    # Scalar hypers are computed in f64 exactly as before, then wrapped as
+    # f32 arrays: the step arithmetic sees the same f32 values the
+    # weak-typed python floats produced, but the scalars become hoistable
+    # jaxpr consts, so repro.api.execute_batch can group cells that differ
+    # only in their hyper-parameters (a python-float literal would bake a
+    # per-cell constant into the traced program).
+    inv_L = jnp.float32(1.0 / L)
     zero = dist.zeros_like_w()
 
     if lam > 0:
         kappa = L / lam
-        beta = (math.sqrt(kappa) - 1.0) / (math.sqrt(kappa) + 1.0)
+        beta = jnp.float32((math.sqrt(kappa) - 1.0)
+                           / (math.sqrt(kappa) + 1.0))
 
         def step(dist, carry, _):
             x, y = carry

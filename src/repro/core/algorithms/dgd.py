@@ -11,12 +11,17 @@ paper attributes to partition-on-feature algorithms.
 """
 from __future__ import annotations
 
+import jax.numpy as jnp
+
 from ..engine import RoundProgram, Segment, run_program
 
 
 def dgd_program(dist, rounds: int, L: float, lam: float = 0.0
                 ) -> RoundProgram:
-    eta = 2.0 / (L + lam) if lam > 0 else 1.0 / L
+    # f64-computed, f32-wrapped: same value the weak-typed float gave the
+    # f32 update, but a hoistable const so repro.api.execute_batch can
+    # group cells that differ only in L (see dagd.py).
+    eta = jnp.float32(2.0 / (L + lam) if lam > 0 else 1.0 / L)
 
     def step(dist, w, _):
         z = dist.response(w)

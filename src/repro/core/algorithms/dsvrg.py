@@ -30,7 +30,9 @@ def dsvrg_program(dist, rounds: int, L_max: float, lam: float = 0.0,
                   ) -> RoundProgram:
     n = dist.n
     epoch_len = epoch_len or 2 * n
-    eta = eta or 1.0 / (10.0 * L_max)
+    # f64-computed, f32-wrapped for const hoisting (see dagd.py)
+    eta = jnp.float32(eta or 1.0 / (10.0 * L_max))
+    lam_f = jnp.float32(lam)
     rng = np.random.RandomState(seed)
     zero = dist.zeros_like_w()
     init = dict(w=zero, w_snap=zero, z_snap=jnp.zeros((n,)), g_snap=zero)
@@ -51,8 +53,8 @@ def dsvrg_program(dist, rounds: int, L_max: float, lam: float = 0.0,
         a_i = dist.sample_row(i)                  # local block of row i
         zi = dist.dot_row(a_i, w, tag="svrg.aw")  # scalar reduce
         zi_snap = z_snap[i]
-        gi = dist.row_grad(a_i, zi, i) + lam * w
-        gi_snap = dist.row_grad(a_i, zi_snap, i) + lam * w_snap
+        gi = dist.row_grad(a_i, zi, i) + lam_f * w
+        gi_snap = dist.row_grad(a_i, zi_snap, i) + lam_f * w_snap
         w_new = w - eta * (gi - gi_snap + g_snap)
         dist.end_round()
         return dict(w=w_new, w_snap=w_snap, z_snap=z_snap,

@@ -36,18 +36,24 @@ def box_projection(lo: float, hi: float):
 
 def prox_dagd_program(dist, rounds: int, L: float, prox: Callable,
                       lam: float = 0.0) -> RoundProgram:
+    # The gradient-step scalar is f32-wrapped for const hoisting (see
+    # dagd.py); the prox keeps receiving the python-float step size so a
+    # prox that pre-multiplies it (soft_threshold's tau * step) rounds
+    # exactly once, as it always has.
     inv_L = 1.0 / L
+    step_L = jnp.float32(inv_L)
     zero = dist.zeros_like_w()
 
     if lam > 0:
         kappa = L / lam
-        beta = (math.sqrt(kappa) - 1.0) / (math.sqrt(kappa) + 1.0)
+        beta = jnp.float32((math.sqrt(kappa) - 1.0)
+                           / (math.sqrt(kappa) + 1.0))
 
         def step(dist, carry, _):
             x, y = carry
             z = dist.response(y)
             g = dist.pgrad(y, z)
-            x_new = prox(y - inv_L * g, inv_L)   # block-local prox
+            x_new = prox(y - step_L * g, inv_L)  # block-local prox
             y_new = x_new + beta * (x_new - x)
             dist.end_round()
             return (x_new, y_new), x_new
@@ -60,7 +66,7 @@ def prox_dagd_program(dist, rounds: int, L: float, prox: Callable,
         x, y = carry
         z = dist.response(y)
         g = dist.pgrad(y, z)
-        x_new = prox(y - inv_L * g, inv_L)       # block-local prox
+        x_new = prox(y - step_L * g, inv_L)      # block-local prox
         y_new = x_new + coeff * (x_new - x)
         dist.end_round()
         return (x_new, y_new), x_new

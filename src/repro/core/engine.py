@@ -51,7 +51,6 @@ python engine would meter them; either corrupts the certification).
 from __future__ import annotations
 
 import dataclasses
-import os
 from typing import Any, Callable, List, Optional
 
 import numpy as np
@@ -62,27 +61,28 @@ from jax import lax
 from .comm import CommLedger
 
 
+# Canonical list lives in repro.api._resolve (the single resolver);
+# mirrored here because this module cannot import repro.api at load time
+# (repro.api.plan imports modules that import this one). tests/test_api.py
+# pins equality.
 ENGINES = ("python", "scan")
-
-_ENGINE_ENV = "REPRO_ROUND_ENGINE"
 
 
 def resolve_engine(engine: Optional[str] = None) -> str:
     """Resolve an engine choice to ``"python"`` or ``"scan"``.
 
-    ``None``/``"auto"`` consults the ``REPRO_ROUND_ENGINE`` env var and
-    falls back to ``"scan"`` — the compiled engine is the production
-    default on every platform; the python engine exists for debugging
-    and parity testing.
+    Delegates to the single capability resolver in ``repro.api`` (env
+    var consulted at call time; ``scan`` is the production default on
+    every platform, the python engine exists for debugging and parity).
+    Planned runs (``repro.api.plan``) arrive at ``run_program`` with the
+    choice already concrete.
     """
-    if engine in (None, "auto"):
-        engine = os.environ.get(_ENGINE_ENV, "").strip() or None
-    if engine in (None, "auto"):
-        engine = "scan"
-    if engine not in ENGINES:
-        raise ValueError(f"unknown round engine {engine!r}; expected one "
-                         f"of {ENGINES + ('auto',)}")
-    return engine
+    # call-time import: loading repro.api at module-load time would cycle
+    # (api.plan imports modules that import this one). Note this pulls
+    # the whole facade package on first use, not just the leaf _resolve
+    # module — safe, because by call time the chain is importable.
+    from ..api import _resolve
+    return _resolve.resolve_engine(engine)
 
 
 @dataclasses.dataclass

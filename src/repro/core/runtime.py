@@ -42,12 +42,19 @@ accepts a step-form ``RoundProgram`` builder to compile the whole
 multi-round run inside the ``shard_map`` body; the ledger is expanded
 from the trace-once schedule to the same per-call stream the python loop
 produces.
+
+All three axes are front-ended by ``repro.api``: a ``RunSpec`` names
+placement/backend/engine declaratively, ``plan`` resolves the ``auto``
+choices through the single capability resolver, and the resulting
+``ExecutionPlan`` drives the machinery here.  The per-call knobs on this
+module remain for direct use; ``run_sharded``'s kwargs surface is the
+deprecated legacy entry point.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-import os
+import warnings
 from typing import Callable, Optional, Tuple
 
 import numpy as np
@@ -66,28 +73,28 @@ from ..kernels import ops as kops
 # Oracle-backend dispatch
 # --------------------------------------------------------------------------
 
+# Canonical list lives in repro.api._resolve (the single resolver);
+# mirrored here because this module cannot import repro.api at load time
+# (repro.api.plan imports this module). tests/test_api.py pins equality.
 ORACLE_BACKENDS = ("einsum", "kernel")
-
-_BACKEND_ENV = "REPRO_ORACLE_BACKEND"
 
 
 def resolve_oracle_backend(backend: Optional[str] = None) -> str:
     """Resolve an oracle-backend choice to ``"einsum"`` or ``"kernel"``.
 
-    ``None``/``"auto"`` consults the ``REPRO_ORACLE_BACKEND`` env var and
-    then the platform: Pallas kernels compile for TPU, so ``"kernel"`` is
-    the TPU default; everywhere else the kernels would run in interpret
-    mode (correct but slow), so ``"einsum"`` is the default.
+    Delegates to the single capability resolver in ``repro.api``
+    (env var consulted at call time, then the platform: kernels compile
+    for TPU, interpret-mode elsewhere).  Kept under its historical name
+    so direct ``LocalDistERM``/``ShardedDistERM`` construction still
+    resolves; planned runs (``repro.api.plan``) arrive here with the
+    choice already concrete.
     """
-    if backend in (None, "auto"):
-        backend = os.environ.get(_BACKEND_ENV, "").strip() or None
-    if backend in (None, "auto"):
-        backend = "kernel" if jax.default_backend() == "tpu" else "einsum"
-    if backend not in ORACLE_BACKENDS:
-        raise ValueError(
-            f"unknown oracle backend {backend!r}; expected one of "
-            f"{ORACLE_BACKENDS + ('auto',)}")
-    return backend
+    # call-time import: loading repro.api at module-load time would cycle
+    # (api.plan imports this module). Note this pulls the whole facade
+    # package on first use, not just the leaf _resolve module — safe,
+    # because by call time every module in that chain is importable.
+    from ..api import _resolve
+    return _resolve.resolve_oracle_backend(backend)
 
 
 def _cached_loss_term(cache: dict, loss: "GLMLoss", which: str, z, y):
@@ -299,8 +306,36 @@ def run_sharded(prob: ERMProblem, algorithm_body: Optional[Callable],
                 backend: Optional[str] = None,
                 engine: str = "python",
                 program_builder: Optional[Callable] = None):
+    """Legacy entry point: per-call kwargs instead of a ``RunSpec``.
+
+    For registry algorithms, construct a
+    ``repro.api.RunSpec(placement="sharded", ...)`` and execute it via
+    ``repro.api.plan`` — the facade resolves ``backend``/``engine``
+    through the single capability resolver and validates the combination
+    before compiling.  This shim keeps the historical signature working
+    (arbitrary ``algorithm_body`` callables included) and produces
+    bit-identical ledgers and iterates to the RunSpec path
+    (``tests/test_shims.py``).
+    """
+    warnings.warn(
+        "run_sharded(...) with per-call kwargs is deprecated; construct a "
+        "repro.api.RunSpec(placement='sharded') and execute it via "
+        "repro.api.plan()/run()", DeprecationWarning, stacklevel=2)
+    return _run_sharded(prob, algorithm_body, rounds, mesh=mesh, axis=axis,
+                        ledger=ledger, backend=backend, engine=engine,
+                        program_builder=program_builder)
+
+
+def _run_sharded(prob: ERMProblem, algorithm_body: Optional[Callable],
+                 rounds: int,
+                 mesh: Optional[Mesh] = None, axis: str = "model",
+                 ledger: Optional[CommLedger] = None,
+                 backend: Optional[str] = None,
+                 engine: str = "python",
+                 program_builder: Optional[Callable] = None):
     """Run an algorithm under shard_map with the data matrix column-sharded
-    over ``axis``.
+    over ``axis``.  (Machinery behind ``repro.api``'s sharded placement;
+    the public ``run_sharded`` wrapper is the deprecated kwargs surface.)
 
     Two driving modes, selected by ``engine``:
 

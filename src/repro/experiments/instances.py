@@ -43,6 +43,13 @@ class InstanceBundle:
     fstar: Optional[float]          # None => fixed-rounds use only
     wstar_norm: Optional[float]
     params: Dict[str, float]        # what the bounds + report tables need
+                                    # (may hold DERIVED values, e.g. the
+                                    # thm4 kappa is the embedded ERM's own)
+    build_params: Optional[Dict[str, object]] = None
+                                    # the verbatim builder inputs, stamped
+                                    # by build_instance; repro.api.plan
+                                    # checks a supplied bundle against the
+                                    # spec's instance_params with these
 
     @property
     def label(self) -> str:
@@ -267,4 +274,4 @@ def build_instance(kind: str, **params) -> InstanceBundle:
     except KeyError:
         raise KeyError(f"unknown instance kind {kind!r}; known: "
                        f"{sorted(INSTANCE_BUILDERS)}") from None
-    return builder(**params)
+    return dataclasses.replace(builder(**params), build_params=dict(params))

@@ -73,6 +73,9 @@ class AlgorithmSpec:
     make_kwargs: Callable[[AlgoContext], dict]
     program: Callable             # program(dist, rounds, **kwargs)
                                   #   -> core.engine.RoundProgram
+    local_only_kwargs: bool = False   # make_kwargs emits machine-stacked
+                                      # arrays; repro.api.plan rejects
+                                      # placement="sharded" for these
 
     @property
     def certifying_theorem(self) -> Tuple[str, str]:
@@ -143,6 +146,7 @@ register_algorithm(AlgorithmSpec(
     description="Synchronous parallel block coordinate descent "
                 "(Richtarik-Takac ESO step); practitioner's baseline.",
     make_kwargs=lambda ctx: dict(block_L=ctx.block_L, m=ctx.m),
+    local_only_kwargs=True,       # block_L comes back stacked (m, 1)
 ))
 
 register_algorithm(AlgorithmSpec(

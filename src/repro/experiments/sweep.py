@@ -1,13 +1,15 @@
 """Declarative sweep runner: instance grids x registered algorithms x eps.
 
 A ``SweepSpec`` names an instance family, a parameter grid, the algorithms
-to run, and the accuracy targets. ``run_sweep`` instantiates each grid
-point, drives every algorithm's step-form ``RoundProgram`` through the
-``CommLedger``-metered ``LocalDistERM`` runtime (scan-compiled by
-default; ``engine="python"`` keeps the per-call loop), measures
-rounds-to-eps from the in-scan per-round gap series f(w_k) - f*, and
-pairs each measurement with the closed-form ``BoundReport`` the
-algorithm's registry entry says must lower-bound it:
+to run, and the accuracy targets. ``run_sweep`` turns every grid cell
+into a ``repro.api.RunSpec``, validates it through ``repro.api.plan``
+(the single place ``auto`` backends/engines/placements resolve), executes
+it through the ``CommLedger``-metered runtime — sequentially, or with
+``execute="batch"`` through ``repro.api.execute_batch``, which ``vmap``s
+same-shaped cells through one compiled program — measures rounds-to-eps
+from the in-run per-round gap series f(w_k) - f*, and pairs each
+measurement with the closed-form ``BoundReport`` the algorithm's registry
+entry says must lower-bound it:
 
     non-incremental (F^{lam,L}), lam > 0   ->  Theorem 2
     non-incremental (F^{lam,L}), lam = 0   ->  Theorem 3
@@ -16,6 +18,11 @@ algorithm's registry entry says must lower-bound it:
 On hard instances the record carries ``certified``: measured >= bound.
 If eps was not reached within the round budget, the run still certifies
 whenever budget >= bound (rounds-to-eps > budget >= bound).
+
+Every record embeds its ``run_spec`` (the serialized RunSpec), so any
+row of a ``docs/results/*.json`` report can be re-executed verbatim:
+
+    repro.api.run(repro.api.RunSpec.from_dict(record["run_spec"]))
 
 CLI:
     PYTHONPATH=src python -m repro.experiments.sweep --preset thm2-small
@@ -31,23 +38,19 @@ import argparse
 import dataclasses
 import itertools
 import sys
+import warnings
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
-import numpy as np
-import jax.numpy as jnp
+from repro import api
 
-from repro.core.bounds import (BoundReport, thm2_strongly_convex,
-                               thm3_smooth_convex, thm4_incremental)
-from repro.core.engine import resolve_engine, run_program
-from repro.core.runtime import LocalDistERM, resolve_oracle_backend
-
-from .instances import InstanceBundle, build_instance
-from .registry import AlgorithmSpec, get_algorithm
+from .instances import build_instance
 
 
 # --------------------------------------------------------------------------
 # Spec / record / result
 # --------------------------------------------------------------------------
+
+SCHEMA_VERSION = 2      # 2: records embed their run_spec (PR 4)
 
 Grid = Union[Dict[str, Sequence], Sequence[Dict[str, object]]]
 
@@ -72,6 +75,22 @@ class SweepSpec:
                     for vals in itertools.product(*(self.grid[k]
                                                     for k in keys))]
         return [dict(pt) for pt in self.grid]
+
+    def cell_spec(self, point: Dict[str, object], algorithm: str,
+                  max_rounds: Optional[int] = None,
+                  backend: Optional[str] = None,
+                  engine: Optional[str] = None) -> api.RunSpec:
+        """The RunSpec for one (grid point, algorithm) cell."""
+        fixed = self.mode == "fixed_rounds"
+        return api.RunSpec(
+            instance=self.instance, instance_params=point,
+            algorithm=algorithm,
+            rounds=(self.fixed_rounds if fixed
+                    else (max_rounds or self.max_rounds)),
+            eps=(() if fixed else self.eps), eps_mode=self.eps_mode,
+            measure=("none" if fixed else "gap"),
+            backend=backend or "auto", engine=engine or "auto",
+            tag=self.name)
 
 
 @dataclasses.dataclass
@@ -100,6 +119,9 @@ class SweepRecord:
     sample_model_bytes_per_round: float   # Arjevani-Shamir O(m d)/round
     oracle_backend: str = "einsum"        # compute path; never affects rounds
     engine: str = "scan"                  # round engine; never affects rounds
+    run_spec: Optional[dict] = None       # the serialized RunSpec: any row
+                                          # re-executes verbatim via
+                                          # api.RunSpec.from_dict(...)
 
     def to_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -124,163 +146,115 @@ class SweepResult:
         spec = dataclasses.asdict(self.spec)
         spec["grid"] = (self.spec.grid if isinstance(self.spec.grid, list)
                         else {k: list(v) for k, v in self.spec.grid.items()})
-        return dict(schema_version=1, command=self.command, spec=spec,
-                    summary=self.summary(),
+        return dict(schema_version=SCHEMA_VERSION, command=self.command,
+                    spec=spec, summary=self.summary(),
                     records=[r.to_dict() for r in self.records])
 
 
 # --------------------------------------------------------------------------
-# Measurement
+# Records from executed plans
 # --------------------------------------------------------------------------
 
-def _gap_measure(bundle: InstanceBundle, dist: LocalDistERM):
-    """Traceable per-round measurement ``w_stk -> f(w_k) - f*`` folded
-    into the engine run: a sweep materializes a (K,) gap series instead
-    of a (K, m, d_max) iterate history. Must stay oracle-free — the
-    objective is evaluated on the gathered vector, outside the metered
-    communication surface."""
-    objective, fstar = bundle.objective, bundle.fstar
-
-    def measure(w_stk):
-        return objective(dist.gather_w(w_stk)) - fstar
-
-    return measure
-
-
-def _bound_for(bundle: InstanceBundle, algo: AlgorithmSpec,
-               eps_abs: float) -> Optional[BoundReport]:
-    """The theorem bound certifying this (instance, algorithm) pair, as
-    declared by the algorithm's registry entry."""
-    p, ctx = bundle.params, bundle.ctx
-    if bundle.wstar_norm is None:
-        return None
-    sc_theorem, smooth_theorem = algo.certifying_theorem
-    theorem = sc_theorem if ctx.lam > 0 else smooth_theorem
-    if theorem == "thm4":
-        n_comp = int(p.get("n", bundle.prob.n))
-        kappa = float(p.get("kappa", ctx.L / max(ctx.lam, 1e-30)))
-        return thm4_incremental(n_comp, kappa, ctx.lam, bundle.wstar_norm,
-                                eps_abs)
-    if theorem == "thm2":
-        kappa = float(p.get("kappa", ctx.L / ctx.lam))
-        return thm2_strongly_convex(kappa, ctx.lam, bundle.wstar_norm,
-                                    eps_abs)
-    return thm3_smooth_convex(float(p.get("L", ctx.L)), bundle.wstar_norm,
-                              eps_abs)
-
-
-def _ledger_fields(dist: LocalDistERM, bundle: InstanceBundle) -> dict:
-    led = dist.comm.ledger
-    try:
-        led.assert_budget(n=bundle.prob.n, d=bundle.prob.d)
-        budget_ok = True
-    except AssertionError:
-        budget_ok = False
+def _ledger_fields(result: api.RunResult, bundle) -> dict:
+    led = result.ledger
     return dict(ledger_rounds=led.rounds,
                 bytes_per_round=float(led.bytes_per_round()),
                 total_bytes=int(led.total_bytes()),
-                op_counts=led.op_counts(), budget_ok=budget_ok,
+                op_counts=led.op_counts(),
+                budget_ok=bool(result.budget_ok),
                 sample_model_bytes_per_round=float(
                     bundle.ctx.m * bundle.prob.d * 4))
 
 
-def _run_cell(bundle: InstanceBundle, algo: AlgorithmSpec,
-              spec: SweepSpec, max_rounds: int,
-              backend: Optional[str] = None,
-              engine: Optional[str] = None) -> List[SweepRecord]:
-    """One (instance, algorithm) cell: a single metered run at the full
-    round budget, then every eps threshold read off the same gap series."""
-    backend = resolve_oracle_backend(backend)
-    engine = resolve_engine(engine)
+def _cell_records(spec: SweepSpec, pl: api.ExecutionPlan,
+                  result: api.RunResult) -> List[SweepRecord]:
+    """One record per eps threshold, all read off the cell's single
+    metered run."""
+    bundle, algo = pl.bundle, pl.algo
     base = dict(instance_kind=bundle.kind, instance_label=bundle.label,
                 instance_params=dict(bundle.params), hard=bundle.hard,
                 algorithm=algo.name, family=algo.family,
                 incremental=algo.incremental, accelerated=algo.accelerated,
-                oracle_backend=backend, engine=engine,
-                max_rounds=(spec.fixed_rounds
-                            if spec.mode == "fixed_rounds" else max_rounds))
-    kwargs = algo.make_kwargs(bundle.ctx)
+                oracle_backend=result.backend, engine=result.engine,
+                max_rounds=pl.spec.rounds,
+                run_spec=pl.spec.to_dict(),
+                **_ledger_fields(result, bundle))
 
     if spec.mode == "fixed_rounds":
-        dist = LocalDistERM(bundle.prob, bundle.part, backend=backend)
-        program = algo.program(dist, rounds=spec.fixed_rounds, **kwargs)
-        run_program(dist, program, engine=engine)
         return [SweepRecord(**base, eps=None, eps_abs=None,
                             measured_rounds=None, bound_theorem=None,
-                            bound_rounds=None, ratio=None, certified=None,
-                            **_ledger_fields(dist, bundle))]
-
-    dist = LocalDistERM(bundle.prob, bundle.part, backend=backend)
-    program = algo.program(dist, rounds=max_rounds, **kwargs)
-    result = run_program(dist, program, engine=engine,
-                         measure=_gap_measure(bundle, dist))
-    gaps = result.gaps
-    gap0 = float(bundle.objective(jnp.zeros((bundle.prob.d,)))
-                 - bundle.fstar)
-    led = _ledger_fields(dist, bundle)
+                            bound_rounds=None, ratio=None, certified=None)]
 
     records = []
     for eps in spec.eps:
-        eps_abs = eps * gap0 if spec.eps_mode == "rel" else eps
-        hits = np.nonzero(gaps <= eps_abs)[0]
-        measured = int(hits[0]) + 1 if hits.size else None
-        bound = _bound_for(bundle, algo, eps_abs)
+        eps_abs = pl.eps_abs(eps)
+        measured = result.measured_rounds(eps_abs)
+        bound = pl.bound(eps_abs)
         bound_rounds = bound.rounds if bound else None
         ratio = (measured / bound_rounds
                  if measured and bound_rounds else None)
-        if not bundle.hard or bound_rounds is None:
-            certified = None
-        elif measured is not None:
-            certified = measured >= bound_rounds
-        else:
-            # eps unreached: rounds-to-eps > max_rounds, so the inequality
-            # holds whenever the budget itself already exceeds the bound.
-            certified = True if max_rounds >= bound_rounds else None
         records.append(SweepRecord(
             **base, eps=eps, eps_abs=eps_abs, measured_rounds=measured,
             bound_theorem=bound.theorem if bound else None,
-            bound_rounds=bound_rounds, ratio=ratio, certified=certified,
-            **led))
+            bound_rounds=bound_rounds, ratio=ratio,
+            certified=pl.certify(result, eps)))
     return records
 
 
 def run_sweep(spec: SweepSpec, max_rounds: Optional[int] = None,
               verbose: bool = False,
               backend: Optional[str] = None,
-              engine: Optional[str] = None) -> SweepResult:
-    """``backend`` selects the oracle compute path ("einsum" | "kernel" |
-    None/"auto" for the platform default). It changes local FLOP
-    scheduling only; the CommLedger is bit-invariant to it (asserted by
-    tests/test_ledger_invariance.py). Measured rounds-to-eps agree as
-    well, up to float reassociation shifting an eps-threshold crossing
-    by a round on TPU.
+              engine: Optional[str] = None,
+              execute: str = "sequential") -> SweepResult:
+    """``backend``/``engine`` feed every cell's RunSpec ("auto" resolves
+    through ``repro.api.plan`` — kernel on TPU / einsum elsewhere, scan
+    by default). Both change local scheduling only; the CommLedger is
+    bit-invariant to them (tests/test_ledger_invariance.py) and
+    certification outcomes must agree (benchmarks/round_engine.py).
 
-    ``engine`` selects the round engine ("scan" | "python" | None/"auto"
-    for the scan default): whether a cell's rounds run as one compiled
-    ``lax.scan`` program or as the per-call Python loop. The CommLedger
-    is bit-invariant to it as well (same suite), and certification
-    outcomes must agree (``benchmarks/round_engine.py`` gates this)."""
-    max_rounds = max_rounds or spec.max_rounds
+    ``execute``: ``"sequential"`` runs one compiled program per cell;
+    ``"batch"`` routes all cells through ``repro.api.execute_batch``,
+    which groups same-shaped cells and ``vmap``s each group through ONE
+    compiled program (``benchmarks/api_batch.py`` gates ledger/verdict
+    identity between the two and publishes the speedup)."""
+    if execute not in ("sequential", "batch"):
+        raise ValueError(f"execute {execute!r}; expected 'sequential' or "
+                         f"'batch'")
+
+    def _plans():
+        for point in spec.grid_points():
+            bundle = build_instance(spec.instance, **point)
+            for name in spec.algorithms:
+                cell = spec.cell_spec(point, name, max_rounds=max_rounds,
+                                      backend=backend, engine=engine)
+                yield api.plan(cell, bundle=bundle)
+
+    if execute == "batch":
+        # grouping needs every cell up front — one compiled program per
+        # same-shaped group is the whole point
+        plans = list(_plans())
+        executed = zip(plans, api.execute_batch(plans))
+    else:
+        # one cell in memory at a time: execute as plans materialize
+        executed = ((pl, pl.execute()) for pl in _plans())
+
     records: List[SweepRecord] = []
-    for point in spec.grid_points():
-        bundle = build_instance(spec.instance, **point)
-        for name in spec.algorithms:
-            algo = get_algorithm(name)
-            cell = _run_cell(bundle, algo, spec, max_rounds,
-                             backend=backend, engine=engine)
-            records.extend(cell)
-            if verbose:
-                for r in cell:
-                    meas = (str(r.measured_rounds)
-                            if r.measured_rounds is not None
-                            else f">{r.max_rounds}")
-                    bnd = (f"{r.bound_rounds:.1f}" if r.bound_rounds
-                           is not None else "-")
-                    cert = {True: "ok", False: "FAIL", None: "n/a"}[
-                        r.certified]
-                    print(f"  {r.instance_label} {r.algorithm:>9} "
-                          f"eps={r.eps} rounds={meas} bound={bnd} "
-                          f"certified={cert}", file=sys.stderr)
+    for pl, result in executed:
+        cell = _cell_records(spec, pl, result)
+        pl.release()      # drop the cell's data copies before the next one
+        records.extend(cell)
+        if verbose:
+            for r in cell:
+                meas = (str(r.measured_rounds)
+                        if r.measured_rounds is not None
+                        else f">{r.max_rounds}")
+                bnd = (f"{r.bound_rounds:.1f}" if r.bound_rounds
+                       is not None else "-")
+                cert = {True: "ok", False: "FAIL", None: "n/a"}[
+                    r.certified]
+                print(f"  {r.instance_label} {r.algorithm:>9} "
+                      f"eps={r.eps} rounds={meas} bound={bnd} "
+                      f"certified={cert}", file=sys.stderr)
     if spec.name in PRESETS:
         command = (f"PYTHONPATH=src python -m repro.experiments.sweep "
                    f"--preset {spec.name}")
@@ -370,21 +344,33 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                              "the repo root)")
     parser.add_argument("--max-rounds", type=int, default=None,
                         help="override the preset round budget")
-    parser.add_argument("--backend", default="auto",
+    parser.add_argument("--batch", action="store_true",
+                        help="execute cells through repro.api."
+                             "execute_batch (same-shaped cells vmap'd "
+                             "through one compiled program)")
+    parser.add_argument("--backend", default=None,
                         choices=["auto", "einsum", "kernel"],
-                        help="oracle compute path (auto: kernel on TPU, "
-                             "einsum elsewhere); the comm ledger is "
-                             "invariant to it")
-    parser.add_argument("--engine", default="auto",
+                        help="DEPRECATED flag (still works): oracle "
+                             "compute path; the canonical switch is "
+                             "RunSpec(backend=...) via repro.api")
+    parser.add_argument("--engine", default=None,
                         choices=["auto", "scan", "python"],
-                        help="round engine (auto: scan — one compiled "
-                             "lax.scan program per cell; python: per-call "
-                             "loop for debugging); the comm ledger is "
-                             "invariant to it")
+                        help="DEPRECATED flag (still works): round "
+                             "engine; the canonical switch is "
+                             "RunSpec(engine=...) via repro.api")
     parser.add_argument("--no-report", action="store_true",
                         help="run and print, but write nothing")
     parser.add_argument("-q", "--quiet", action="store_true")
     args = parser.parse_args(argv)
+
+    for flag, value in (("--backend", args.backend),
+                        ("--engine", args.engine)):
+        if value is not None:
+            warnings.warn(
+                f"the {flag} flag is a legacy entry point; it still works "
+                f"but the canonical switch is the RunSpec field "
+                f"(repro.api), which every sweep cell now embeds",
+                DeprecationWarning, stacklevel=1)
 
     from .report import default_results_dir, write_report
 
@@ -399,7 +385,8 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                   file=sys.stderr)
         result = run_sweep(spec, max_rounds=args.max_rounds,
                            verbose=not args.quiet, backend=args.backend,
-                           engine=args.engine)
+                           engine=args.engine,
+                           execute="batch" if args.batch else "sequential")
         summ = result.summary()
         failed += summ["failed"]
         line = (f"[sweep] {name}: {summ['records']} records, "

@@ -12,16 +12,16 @@ import dataclasses
 import json
 import time
 import traceback
+import warnings
 from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 
+from ..api import RunSpec, plan as api_plan
 from ..configs import get as get_arch, canonical_ids
 from ..configs import shapes as S
 from ..core.comm import collective_bytes_from_hlo
-from ..core.engine import resolve_engine
-from ..core.runtime import resolve_oracle_backend
 from ..models import transformer as T
 from ..models import encdec as E
 from ..models.common import make_rules, sharding_ctx
@@ -38,6 +38,19 @@ ICI_BW = 50e9             # bytes/s per link (conservative 1-link figure)
 
 def _mesh_devices(multi_pod: bool) -> int:
     return 512 if multi_pod else 256
+
+
+def _legacy_axes(oracle_backend: Optional[str],
+                 round_engine: Optional[str]) -> RunSpec:
+    """Convert the legacy per-call axis kwargs/flags into a
+    resolution-only RunSpec (one DeprecationWarning per conversion)."""
+    warnings.warn(
+        "the --oracle-backend/--round-engine flags (and the matching "
+        "dryrun_one kwargs) are legacy entry points; they still work but "
+        "the canonical switch is a repro.api.RunSpec (pass axes=...)",
+        DeprecationWarning, stacklevel=2)
+    return RunSpec(backend=oracle_backend or "auto",
+                   engine=round_engine or "auto")
 
 
 def _abstract_state(cfg, shape_name: str, rules, mesh):
@@ -104,25 +117,46 @@ def dryrun_one(arch_id: str, shape_name: str, *, multi_pod: bool = False,
                microbatch: int = 1,
                donate: bool = True,
                oracle_backend: Optional[str] = None,
-               round_engine: Optional[str] = None) -> Dict[str, Any]:
+               round_engine: Optional[str] = None,
+               axes: Optional[RunSpec] = None,
+               _apply_backend: Optional[bool] = None) -> Dict[str, Any]:
     """Lower + compile one combo on the production mesh; return the record.
 
     ``cfg_overrides``: dataclasses.replace kwargs applied to the arch
     config (e.g. {"remat": "dots", "cache_dtype": "f8"}); "moe.<field>"
     keys address the nested MoE config. ``microbatch``: gradient-
     accumulation factor for train shapes (peak-memory lever).
-    ``oracle_backend``: the same compute-path switch as the DistERM
-    runtime ("kernel" routes model hot spots through the Pallas kernels
-    via ``cfg.use_pallas``; "auto" resolves per platform; None leaves the
-    arch config untouched). An explicit ``use_pallas`` in
-    ``cfg_overrides`` wins.
 
-    ``round_engine``: the DistERM round-engine switch (``core.engine``),
-    resolved and stamped into the record so dry-run artifacts name the
-    engine their companion sweeps executed under (process state is left
-    untouched — pass ``--engine`` to the sweep CLI, or set
-    ``REPRO_ROUND_ENGINE`` yourself, to change what actually runs).
+    ``axes``: a (typically resolution-only) ``repro.api.RunSpec`` naming
+    the oracle backend / round engine this dry-run should cost.  The
+    backend is resolved through ``repro.api.plan`` — the single
+    capability resolver — and routed into the model zoo's
+    ``cfg.use_pallas`` (kernel=True); the engine is stamped into the
+    record so dry-run artifacts name the engine their companion sweeps
+    executed under.  An explicit ``use_pallas`` in ``cfg_overrides``
+    wins.  ``axes=None`` — or an engine-only spec (``backend="auto"``) —
+    leaves the arch config untouched and stamps the plan-time engine.
+
+    ``oracle_backend``/``round_engine`` are the legacy per-call kwargs:
+    they still work, emit one ``DeprecationWarning``, and behave exactly
+    as the equivalent ``axes`` spec (``oracle_backend=None`` keeps the
+    historical "leave the config untouched" semantics).
     """
+    if oracle_backend is not None or round_engine is not None:
+        if axes is not None:
+            raise ValueError("pass either axes= or the legacy "
+                             "oracle_backend/round_engine kwargs, not both")
+        axes = _legacy_axes(oracle_backend, round_engine)
+        # legacy semantics: --oracle-backend auto DID apply the platform
+        # resolution, so "was the kwarg passed" decides, not the value
+        _apply_backend = oracle_backend is not None
+    # canonical axes surface: an engine-only spec (backend="auto") leaves
+    # the arch config untouched; name the backend to route it into
+    # cfg.use_pallas
+    apply_backend = (_apply_backend if _apply_backend is not None
+                     else axes is not None and axes.backend != "auto")
+    resolved = api_plan(axes if axes is not None else RunSpec())
+
     t0 = time.time()
     mod = get_arch(arch_id)
     if shape_name not in mod.SUPPORTED_SHAPES:
@@ -141,13 +175,10 @@ def dryrun_one(arch_id: str, shape_name: str, *, multi_pod: bool = False,
         if moe_kw and getattr(cfg, "moe", None) is not None:
             plain["moe"] = dataclasses.replace(cfg.moe, **moe_kw)
         cfg = dataclasses.replace(cfg, **plain)
-    if oracle_backend is not None and \
+    if apply_backend and \
             not (cfg_overrides and "use_pallas" in cfg_overrides):
-        cfg = dataclasses.replace(
-            cfg, use_pallas=resolve_oracle_backend(oracle_backend)
-            == "kernel")
-    if round_engine is not None:
-        round_engine = resolve_engine(round_engine)
+        cfg = dataclasses.replace(cfg,
+                                  use_pallas=resolved.backend == "kernel")
     mesh = make_production_mesh(multi_pod=multi_pod)
     if getattr(cfg, "moe", None) is not None and \
             not (cfg_overrides and "moe.groups" in cfg_overrides):
@@ -269,7 +300,7 @@ def dryrun_one(arch_id: str, shape_name: str, *, multi_pod: bool = False,
         "n_chips": n_chips,
         "fsdp": fsdp,
         "use_pallas": bool(getattr(cfg, "use_pallas", False)),
-        "round_engine": round_engine or resolve_engine(None),
+        "round_engine": resolved.engine,
         "rules_overrides": rules_overrides or {},
         "n_params": n_total, "n_params_active": n_active,
         "hlo_flops": flops, "hlo_bytes": bytes_accessed,
@@ -301,8 +332,17 @@ def run_all(out_dir: str, multi_pod: bool, archs=None, shapes=None,
             force: bool = False, variant: str = "baseline",
             rules_overrides=None, cfg_overrides=None, microbatch: int = 1,
             oracle_backend: Optional[str] = None,
-            round_engine: Optional[str] = None):
+            round_engine: Optional[str] = None,
+            axes: Optional[RunSpec] = None):
     os.makedirs(out_dir, exist_ok=True)
+    apply_backend = axes is not None and axes.backend != "auto"
+    if oracle_backend is not None or round_engine is not None:
+        if axes is not None:
+            raise ValueError("pass either axes= or the legacy "
+                             "oracle_backend/round_engine kwargs, not both")
+        axes = _legacy_axes(oracle_backend, round_engine)  # warns ONCE here
+        apply_backend = oracle_backend is not None
+    resolved = api_plan(axes if axes is not None else RunSpec())
     archs = archs or canonical_ids()
     shapes = shapes or list(S.SHAPES)
     results = []
@@ -310,11 +350,11 @@ def run_all(out_dir: str, multi_pod: bool, archs=None, shapes=None,
         for shape in shapes:
             tag = f"{arch}__{shape}__{'pod2' if multi_pod else 'pod1'}" \
                   f"__{variant}"
-            if oracle_backend is not None:
+            if apply_backend:
                 # the backend changes the compiled HLO like a variant
                 # does; tag with the RESOLVED choice ("auto" is
                 # platform-dependent and must not alias cache entries)
-                tag += f"__ob-{resolve_oracle_backend(oracle_backend)}"
+                tag += f"__ob-{resolved.backend}"
             path = os.path.join(out_dir, tag + ".json")
             if os.path.exists(path) and not force:
                 print(f"[skip cached] {tag}")
@@ -326,8 +366,8 @@ def run_all(out_dir: str, multi_pod: bool, archs=None, shapes=None,
                                  rules_overrides=rules_overrides,
                                  cfg_overrides=cfg_overrides,
                                  microbatch=microbatch,
-                                 oracle_backend=oracle_backend,
-                                 round_engine=round_engine)
+                                 axes=axes,
+                                 _apply_backend=apply_backend)
             except Exception:
                 rec = {"arch": arch, "shape": shape, "failed": True,
                        "traceback": traceback.format_exc()}
@@ -367,14 +407,16 @@ def main():
     ap.add_argument("--microbatch", type=int, default=1)
     ap.add_argument("--oracle-backend", default=None,
                     choices=["auto", "einsum", "kernel"],
-                    help="compute-path switch shared with the DistERM "
-                         "runtime; sets cfg.use_pallas (kernel=True). "
-                         "Default: leave the arch config untouched.")
+                    help="DEPRECATED flag (still works): compute-path "
+                         "switch; sets cfg.use_pallas (kernel=True), "
+                         "resolved through repro.api.plan. Default: "
+                         "leave the arch config untouched.")
     ap.add_argument("--round-engine", default=None,
                     choices=["auto", "scan", "python"],
-                    help="DistERM round-engine switch (core.engine), "
-                         "resolved and stamped into each record; "
-                         "process state is left untouched.")
+                    help="DEPRECATED flag (still works): DistERM round-"
+                         "engine switch, resolved through repro.api.plan "
+                         "and stamped into each record; process state is "
+                         "left untouched.")
     args = ap.parse_args()
     overrides = json.loads(args.rules) if args.rules else None
     cfg_over = json.loads(args.cfg) if args.cfg else None

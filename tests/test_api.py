@@ -1,0 +1,231 @@
+"""The unified run API: RunSpec serialization, plan-time resolution and
+validation, execution, and batched execution vs the sequential path.
+
+The facade is the repo's single front door — every runnable surface
+(sweep CLI, dryrun CLI, benchmarks, examples) constructs a RunSpec and
+resolves ``auto`` choices through ``repro.api.plan``, so this suite pins
+the contracts everything else leans on: JSON round-trips, eager
+validation, env-var resolution at plan time, ledger identity between
+sequential and batched execution, and re-execution of embedded specs.
+"""
+import numpy as np
+import pytest
+
+from repro import api
+from repro.api import (ENGINES, ORACLE_BACKENDS, PLACEMENTS, PlanError,
+                       RunSpec, execute_batch, plan, run)
+
+
+TINY = dict(instance="thm2_chain",
+            instance_params=dict(d=24, kappa=16.0, lam=0.5, m=4),
+            algorithm="dagd", rounds=120, eps=(1e-3,))
+
+
+# --------------------------------------------------------------------------
+# RunSpec serialization
+# --------------------------------------------------------------------------
+
+def test_runspec_json_roundtrip():
+    spec = RunSpec(**TINY, eps_mode="abs", backend="einsum", tag="probe")
+    assert RunSpec.from_json(spec.to_json()) == spec
+    assert RunSpec.from_dict(spec.to_dict()) == spec
+    # numpy scalars from grid machinery are coerced to JSON types
+    spec_np = RunSpec(**{**TINY, "instance_params":
+                         dict(d=np.int64(24), kappa=np.float64(16.0),
+                              lam=0.5, m=4)},
+                      algo_kwargs=dict(L=np.float64(3.0),
+                                       nested=[np.int32(1), 2]))
+    assert spec_np.instance_params == TINY["instance_params"]
+    assert spec_np.algo_kwargs == dict(L=3.0, nested=[1, 2])
+    assert RunSpec.from_json(spec_np.to_json()) == spec_np
+
+
+def test_runspec_rejects_unknown_fields_and_bad_enums():
+    with pytest.raises(ValueError):
+        RunSpec.from_dict(dict(TINY, bogus_field=1))
+    with pytest.raises(ValueError):
+        RunSpec(**TINY, eps_mode="relative")
+    with pytest.raises(ValueError):
+        RunSpec(**TINY, measure="maybe")
+
+
+# --------------------------------------------------------------------------
+# plan(): resolution + validation
+# --------------------------------------------------------------------------
+
+def test_plan_resolves_auto_axes_on_cpu(monkeypatch):
+    monkeypatch.delenv(api.BACKEND_ENV, raising=False)
+    monkeypatch.delenv(api.ENGINE_ENV, raising=False)
+    pl = plan(RunSpec(**TINY))
+    assert (pl.placement, pl.backend, pl.engine) == \
+        ("local", "einsum", "scan")
+    assert pl.measure == "gap"          # auto: eps requested
+
+
+def test_env_vars_read_at_plan_time(monkeypatch):
+    monkeypatch.setenv(api.BACKEND_ENV, "kernel")
+    monkeypatch.setenv(api.ENGINE_ENV, "python")
+    pl = plan(RunSpec(**TINY))
+    assert (pl.backend, pl.engine) == ("kernel", "python")
+    monkeypatch.delenv(api.BACKEND_ENV)
+    monkeypatch.delenv(api.ENGINE_ENV)
+    pl = plan(RunSpec(**TINY))
+    assert (pl.backend, pl.engine) == ("einsum", "scan")
+
+
+def test_core_resolvers_delegate_to_api():
+    """core.runtime/core.engine keep their historical names as shims over
+    the single repro.api resolver; the mirrored axis lists must agree."""
+    from repro.core import engine as core_engine
+    from repro.core import runtime as core_runtime
+    assert core_runtime.ORACLE_BACKENDS == ORACLE_BACKENDS
+    assert core_engine.ENGINES == ENGINES
+    assert core_runtime.resolve_oracle_backend("auto") == \
+        api.resolve_oracle_backend("auto")
+    assert core_engine.resolve_engine(None) == api.resolve_engine(None)
+    assert set(PLACEMENTS) == {"local", "sharded"}
+
+
+@pytest.mark.parametrize("bad, match", [
+    (dict(TINY, instance="nope"), "unknown instance"),
+    (dict(TINY, algorithm="nope"), "unknown algorithm"),
+    (dict(TINY, instance_params=dict(zz=1)), "does not accept"),
+    (dict(TINY, measure="none"), "measure='none'"),
+    (dict(TINY, rounds=0), "rounds"),
+    (dict(TINY, algorithm="bcd", placement="sharded", eps=(),
+          measure="none"), "machine-stacked"),
+    (dict(TINY, placement="sharded"), "gap measurement"),
+    (dict(TINY, algo_kwargs=dict(zz=1)), "hyper-parameter"),
+    (dict(TINY, algo_kwargs=dict(rounds=5)), "hyper-parameter"),
+    (dict(TINY, backend="blas"), "oracle backend"),
+    (dict(TINY, instance=None), "BOTH instance and algorithm"),
+])
+def test_plan_rejects_invalid_specs(bad, match):
+    with pytest.raises(PlanError, match=match):
+        plan(RunSpec(**bad))
+
+
+def test_plan_rejects_misaligned_bundle():
+    """A pre-built bundle whose builder inputs differ from the spec's
+    instance_params would execute a different problem than the embedded
+    run_spec records — rejected on the stamped build_params."""
+    from repro.experiments.instances import build_instance
+    bundle = build_instance("thm2_chain", d=24, kappa=64.0, lam=0.5, m=4)
+    with pytest.raises(PlanError, match="built with"):
+        plan(RunSpec(**TINY), bundle=bundle)      # spec says kappa=16
+    ok = build_instance("thm2_chain", **TINY["instance_params"])
+    assert plan(RunSpec(**TINY), bundle=ok).bundle is ok
+
+
+def test_resolution_only_plan():
+    pl = plan(RunSpec(backend="einsum", engine="python"))
+    assert pl.resolution_only
+    assert (pl.backend, pl.engine) == ("einsum", "python")
+    with pytest.raises(PlanError):
+        pl.execute()
+
+
+# --------------------------------------------------------------------------
+# execution + re-execution from serialized specs
+# --------------------------------------------------------------------------
+
+def test_run_executes_and_reexecutes_verbatim():
+    spec = RunSpec(**TINY)
+    res = run(spec)
+    assert res.rounds == res.ledger.rounds == spec.rounds
+    assert res.gaps.shape == (spec.rounds,)
+    assert res.budget_ok is True
+    measured = res.measured_rounds(1e-3)
+    assert measured is not None
+    # the serialized spec re-executes to the identical measurement/meter
+    res2 = run(RunSpec.from_json(spec.to_json()))
+    assert res2.stream() == res.stream()
+    assert res2.measured_rounds(1e-3) == measured
+    np.testing.assert_array_equal(np.asarray(res2.w), np.asarray(res.w))
+
+
+def test_plan_bound_matches_registry_theorem():
+    pl = plan(RunSpec(**TINY))
+    rep = pl.bound(1e-3)
+    assert rep.theorem == "thm2"       # lam > 0, non-incremental
+    assert rep.rounds > 0
+
+
+def test_sharded_placement_matches_local():
+    """placement='sharded' (1-device mesh on CPU) produces the same
+    iterate and communication structure as the local reference."""
+    base = dict(instance="random_ridge",
+                instance_params=dict(n=16, d=12, m=1),
+                algorithm="dagd", rounds=8, measure="none")
+    loc = run(RunSpec(**base))
+    sh = run(RunSpec(**base, placement="sharded"))
+    np.testing.assert_allclose(np.asarray(sh.w), np.asarray(loc.w),
+                               atol=1e-5, rtol=1e-5)
+    assert sh.ledger.op_counts() == loc.ledger.op_counts()
+
+
+# --------------------------------------------------------------------------
+# execute_batch
+# --------------------------------------------------------------------------
+
+def _specs_grid():
+    return [RunSpec(**{**TINY, "instance_params":
+                       dict(d=24, kappa=k, lam=0.5, m=4),
+                       "algorithm": a})
+            for a in ("dagd", "dgd", "disco_f") for k in (16.0, 64.0)]
+
+
+def test_execute_batch_groups_and_matches_sequential():
+    specs = _specs_grid()
+    seq = [plan(s).execute() for s in specs]
+    bat = execute_batch([plan(s) for s in specs])
+    assert all(r.batched for r in bat)   # every cell found a group
+    for s, b in zip(seq, bat):
+        assert b.stream() == s.stream()
+        assert b.ledger.rounds == s.ledger.rounds
+        assert b.measured_rounds(1e-3) == s.measured_rounds(1e-3)
+        np.testing.assert_allclose(np.asarray(b.w), np.asarray(s.w),
+                                   atol=1e-5, rtol=1e-5)
+
+
+def test_execute_batch_falls_back_in_order():
+    """Unbatchable plans (python engine, singleton shapes) still execute;
+    results come back in input order."""
+    specs = [RunSpec(**TINY),
+             RunSpec(**TINY, engine="python"),
+             RunSpec(**{**TINY, "rounds": 90}),       # singleton group
+             RunSpec(**{**TINY, "instance_params":
+                        dict(d=24, kappa=64.0, lam=0.5, m=4)})]
+    results = execute_batch([plan(s) for s in specs])
+    assert [r.spec for r in results] == specs
+    assert results[1].batched is False and results[2].batched is False
+    assert results[0].batched and results[3].batched   # group of two
+    ref = plan(specs[1]).execute()
+    assert results[1].stream() == ref.stream()
+
+
+def test_sweep_batch_mode_matches_sequential():
+    from repro.experiments.sweep import SweepSpec, run_sweep
+    spec = SweepSpec(
+        name="batch-probe", instance="thm2_chain",
+        grid=dict(d=[24], kappa=[16.0, 64.0], lam=[0.5], m=[4]),
+        algorithms=("dagd", "dgd"), eps=(1e-3,), max_rounds=120)
+    seq = run_sweep(spec)
+    bat = run_sweep(spec, execute="batch")
+    assert [r.to_dict() for r in seq.records] == \
+        [r.to_dict() for r in bat.records]
+    assert seq.records[0].certified is True
+
+
+def test_sweep_records_embed_reexecutable_spec():
+    from repro.experiments.sweep import SweepSpec, run_sweep
+    spec = SweepSpec(
+        name="spec-probe", instance="thm2_chain",
+        grid=dict(d=[16], kappa=[8.0], lam=[0.5], m=[2]),
+        algorithms=("dagd",), eps=(1e-3,), max_rounds=100)
+    rec = run_sweep(spec).records[0]
+    assert rec.run_spec is not None
+    res = run(RunSpec.from_dict(rec.run_spec))
+    assert res.measured_rounds(rec.eps_abs) == rec.measured_rounds
+    assert res.ledger.rounds == rec.ledger_rounds
+    assert res.ledger.op_counts() == rec.op_counts

@@ -124,7 +124,8 @@ def test_sweep_report_renders(tiny_sweep_result, tmp_path):
     assert json_path.exists() and md_path.exists()
     assert (tmp_path / "README.md").exists()    # index refreshed
     doc = json_path.read_text()
-    assert '"schema_version": 1' in doc
+    assert '"schema_version": 2' in doc       # 2: records embed run_spec
+    assert '"run_spec"' in doc
     md = md_path.read_text()
     assert "Measured rounds vs lower bound" in md
     assert "thm2" in md

@@ -262,4 +262,8 @@ def test_sweep_records_engine_invariant():
             rec, ref = dict(rec), dict(ref)
             assert rec.pop("engine") == eng
             ref.pop("engine")
+            # the embedded RunSpec names the engine it ran under by
+            # construction; everything else in it must agree
+            assert rec.pop("run_spec")["engine"] == eng
+            ref.pop("run_spec")
             assert rec == ref, (eng, rec, ref)

@@ -89,6 +89,10 @@ def test_sweep_measurement_backend_invariant():
             rec, ref = dict(rec), dict(ref)
             assert rec.pop("oracle_backend") == be
             ref.pop("oracle_backend")
+            # the embedded RunSpec names the backend it ran under by
+            # construction; everything else in it must agree
+            assert rec.pop("run_spec")["backend"] == be
+            ref.pop("run_spec")
             assert abs(rec.pop("measured_rounds")
                        - ref.pop("measured_rounds")) <= 1, (be, rec)
             rec.pop("ratio"), ref.pop("ratio")   # follows measured_rounds

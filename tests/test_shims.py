@@ -1,0 +1,140 @@
+"""Deprecation shims over the repro.api facade.
+
+Each legacy entry point — ``run_sharded``'s per-call kwargs, the sweep
+CLI's ``--backend``/``--engine`` flags, the dryrun CLI's
+``--oracle-backend``/``--round-engine`` — must (a) emit exactly one
+``DeprecationWarning`` per invocation and (b) produce bit-identical
+ledgers and iterates versus the equivalent ``RunSpec`` path, so existing
+invocations keep working while the facade is the one canonical surface.
+"""
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.api import RunSpec, run
+from repro.experiments.instances import build_instance
+
+
+def _stream(led):
+    return led.rounds, [(r.kind, r.elems, r.bytes, r.tag)
+                        for r in led.records]
+
+
+# --------------------------------------------------------------------------
+# run_sharded kwargs
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("engine", ["python", "scan"])
+def test_run_sharded_warns_once_and_matches_runspec_path(engine):
+    from repro.core.runtime import run_sharded
+    from repro.core.algorithms import dagd, dagd_program
+
+    params = dict(n=16, d=12, m=1)
+    bundle = build_instance("random_ridge", **params)
+    L, lam = bundle.ctx.L, bundle.prob.lam
+
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        if engine == "python":
+            w, led = run_sharded(
+                bundle.prob, lambda d_, r: dagd(d_, r, L=L, lam=lam),
+                rounds=8)
+        else:
+            w, led = run_sharded(
+                bundle.prob, None, rounds=8, engine="scan",
+                program_builder=lambda d_, r: dagd_program(d_, r, L=L,
+                                                           lam=lam))
+    dep = [w_ for w_ in caught
+           if issubclass(w_.category, DeprecationWarning)]
+    assert len(dep) == 1
+    assert "repro.api.RunSpec" in str(dep[0].message)
+
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)   # none here
+        res = run(RunSpec(instance="random_ridge", instance_params=params,
+                          algorithm="dagd", rounds=8, measure="none",
+                          placement="sharded", engine=engine))
+    assert _stream(res.ledger) == _stream(led)
+    np.testing.assert_array_equal(np.asarray(res.w), np.asarray(w))
+
+
+# --------------------------------------------------------------------------
+# sweep CLI flags
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("flag, value, kwarg", [
+    ("--backend", "einsum", "backend"),
+    ("--engine", "scan", "engine"),
+])
+def test_sweep_cli_flags_warn_and_feed_runspecs(monkeypatch, flag, value,
+                                                kwarg):
+    from repro.experiments import sweep
+
+    captured = {}
+
+    def fake_run_sweep(spec, **kwargs):
+        captured.update(kwargs)
+        return sweep.SweepResult(spec=spec, records=[], command="probe")
+
+    monkeypatch.setattr(sweep, "run_sweep", fake_run_sweep)
+    with pytest.warns(DeprecationWarning, match="legacy entry point"):
+        rc = sweep.main(["--preset", "thm2-small", flag, value,
+                         "--no-report", "-q"])
+    assert rc == 0
+    assert captured[kwarg] == value    # the flag feeds the RunSpec field
+
+
+def test_sweep_cli_without_flags_is_warning_free(monkeypatch):
+    from repro.experiments import sweep
+
+    monkeypatch.setattr(
+        sweep, "run_sweep",
+        lambda spec, **kw: sweep.SweepResult(spec=spec, records=[],
+                                             command="probe"))
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        assert sweep.main(["--preset", "thm2-small", "--no-report",
+                           "-q"]) == 0
+
+
+def test_sweep_flag_and_runspec_paths_produce_identical_records():
+    from repro.experiments.sweep import SweepSpec, run_sweep
+
+    spec = SweepSpec(
+        name="shim-probe", instance="thm2_chain",
+        grid=dict(d=[16], kappa=[8.0], lam=[0.5], m=[2]),
+        algorithms=("dagd",), eps=(1e-3,), max_rounds=100)
+    legacy = run_sweep(spec, backend="einsum", engine="scan")
+    explicit = run_sweep(spec)     # auto resolves to the same on CPU
+    for a, b in zip(legacy.records, explicit.records):
+        da, db = a.to_dict(), b.to_dict()
+        # the embedded spec records what was requested (explicit vs auto);
+        # everything measured/metered must be identical
+        assert da.pop("run_spec")["backend"] == "einsum"
+        assert db.pop("run_spec")["backend"] == "auto"
+        assert da == db
+
+
+# --------------------------------------------------------------------------
+# dryrun legacy axis kwargs
+# --------------------------------------------------------------------------
+
+def test_dryrun_legacy_axes_warn_and_resolve_through_api():
+    from repro.api import plan
+    from repro.launch.dryrun import _legacy_axes
+
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        spec = _legacy_axes("einsum", "python")
+    dep = [w for w in caught if issubclass(w.category, DeprecationWarning)]
+    assert len(dep) == 1
+    assert "repro.api.RunSpec" in str(dep[0].message)
+    assert spec == RunSpec(backend="einsum", engine="python")
+    pl = plan(spec)
+    assert (pl.backend, pl.engine) == ("einsum", "python")
+    # None means "not requested": the spec falls back to auto
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        assert _legacy_axes(None, "scan") == RunSpec(backend="auto",
+                                                     engine="scan")
