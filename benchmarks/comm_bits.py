@@ -1,0 +1,408 @@
+"""Bit-level communication accounting: identity-channel equivalence
+gates + the bits-vs-rounds tradeoff across lossy channels.
+
+The paper meters *rounds*; the ledger now also meters the *wire bits*
+each round spends (``core.comm`` typed messages, ``core.channel``
+transforms).  This benchmark is the accounting subsystem's gatekeeper:
+
+  * **identity gates** — every ``thm2-small`` cell executed with the
+    default (``auto``) channel and with an explicit ``channel="identity"``
+    must produce identical certification verdicts, identical measured
+    rounds, and bit-identical ``CommLedger`` streams; and every record's
+    byte/bit fields must match shape x dtype arithmetic exactly
+    (``bytes == prod(shape) * itemsize``, ``bits == 8 * bytes``), with
+    the round-boundary marks consistent (``len(round_marks) == rounds``,
+    prefix bit sums telescoping to the total).  These run in ``--quick``
+    (the CI smoke) and full mode alike.
+  * **tradeoff table** — one Theorem-2 cell run under every channel
+    (identity / fp16 / bf16 / int8 stochastic rounding / top-k):
+    rounds-to-eps, bits-to-eps, and the bit savings vs identity, per eps
+    threshold.  Quantized channels must spend strictly fewer bits than
+    identity to the coarsest threshold (the savings gate); where a
+    channel's noise floor keeps it from a tighter threshold the table
+    says so — that *is* the tradeoff.
+
+CLI:
+    PYTHONPATH=src python -m benchmarks.comm_bits
+    PYTHONPATH=src python -m benchmarks.comm_bits --quick --no-report   # CI
+
+Writes ``docs/results/comm-bits.json`` + ``.md`` and refreshes the
+results index.  Exit status is non-zero on any identity/accounting gate
+violation, and on a missed savings gate.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+import jax
+
+from repro import api
+from repro.core.channel import parse_channel
+from repro.experiments.instances import build_instance
+from repro.experiments.sweep import PRESETS
+
+COMMAND = "PYTHONPATH=src python -m benchmarks.comm_bits"
+
+PRESET = "thm2-small"
+CHANNEL_SET = ("identity", "fp16", "bf16", "int8", "topk:0.25")
+
+# the tradeoff cell: one Thm-2 hard instance, DAGD (the tightness
+# witness), eps thresholds spanning the channels' noise floors
+TRADEOFF = dict(instance="thm2_chain",
+                instance_params=dict(d=96, kappa=64.0, lam=0.5, m=4),
+                algorithm="dagd", rounds=2500, eps=(1e-2, 1e-4, 1e-6))
+TRADEOFF_QUICK = dict(instance="thm2_chain",
+                      instance_params=dict(d=48, kappa=16.0, lam=0.5, m=4),
+                      algorithm="dagd", rounds=400, eps=(1e-2, 1e-4))
+
+
+# --------------------------------------------------------------------------
+# Identity-channel equivalence + accounting gates
+# --------------------------------------------------------------------------
+
+def _accounting_ok(led) -> List[str]:
+    """Byte/bit fields must be pure shape x dtype arithmetic; round marks
+    must tile the stream."""
+    problems = []
+    for i, r in enumerate(led.records):
+        elems = int(np.prod(r.shape, dtype=np.int64)) if r.shape else 1
+        itemsize = np.dtype(r.dtype).itemsize
+        if r.elems != elems:
+            problems.append(f"record {i}: elems {r.elems} != prod(shape) "
+                            f"{elems}")
+        if r.bytes != elems * itemsize:
+            problems.append(f"record {i}: bytes {r.bytes} != "
+                            f"{elems} x {itemsize}")
+        if r.bits != r.bytes * 8:
+            problems.append(f"record {i}: identity bits {r.bits} != "
+                            f"8 x {r.bytes}")
+    if len(led.round_marks) != led.rounds:
+        problems.append(f"round_marks {len(led.round_marks)} != rounds "
+                        f"{led.rounds}")
+    if led.bits_through_round(led.rounds) != led.total_bits():
+        problems.append("prefix bit sum does not telescope to total_bits")
+    return problems
+
+
+def run_identity(rounds: Optional[int] = None,
+                 algorithms: Optional[Sequence[str]] = None) -> List[dict]:
+    """Every thm2-small cell, auto channel vs explicit identity."""
+    spec = PRESETS[PRESET]
+    rounds = rounds or spec.max_rounds
+    algorithms = tuple(algorithms or spec.algorithms)
+    records = []
+    for point in spec.grid_points():
+        bundle = build_instance(spec.instance, **point)
+        for name in algorithms:
+            cell = spec.cell_spec(point, name, max_rounds=rounds)
+            pl_auto = api.plan(cell, bundle=bundle)
+            res_auto = pl_auto.execute()
+            pl_id = api.plan(cell.replace(channel="identity"),
+                             bundle=bundle)
+            res_id = pl_id.execute()
+            verdicts_auto = [pl_auto.certify(res_auto, e) for e in spec.eps]
+            verdicts_id = [pl_id.certify(res_id, e) for e in spec.eps]
+            measured_auto = [res_auto.measured_rounds(pl_auto.eps_abs(e))
+                             for e in spec.eps]
+            measured_id = [res_id.measured_rounds(pl_id.eps_abs(e))
+                           for e in spec.eps]
+            problems = _accounting_ok(res_id.ledger)
+            records.append(dict(
+                instance_label=bundle.label, instance_params=dict(point),
+                algorithm=name, rounds=rounds,
+                verdicts=verdicts_id,
+                verdict_identical=verdicts_auto == verdicts_id,
+                measured_rounds_identical=measured_auto == measured_id,
+                ledger_identical=(
+                    res_auto.ledger.typed_stream()
+                    == res_id.ledger.typed_stream()
+                    and res_auto.ledger.rounds == res_id.ledger.rounds
+                    and res_auto.ledger.round_marks
+                    == res_id.ledger.round_marks),
+                total_bytes=int(res_id.ledger.total_bytes()),
+                total_bits=int(res_id.ledger.total_bits()),
+                bits_are_8x_bytes=(res_id.ledger.total_bits()
+                                   == 8 * res_id.ledger.total_bytes()),
+                accounting_problems=problems,
+            ))
+    return records
+
+
+# --------------------------------------------------------------------------
+# Bits-vs-rounds tradeoff
+# --------------------------------------------------------------------------
+
+def run_tradeoff(cell: Dict, channels: Sequence[str] = CHANNEL_SET) -> dict:
+    """One certification cell under every channel: rounds-to-eps and
+    bits-to-eps per threshold, savings vs the identity wire."""
+    eps = tuple(cell["eps"])
+    rows = []
+    for ch in channels:
+        pl = api.plan(api.RunSpec(**cell, channel=ch, tag="comm-bits"))
+        res = pl.execute()
+        led = res.ledger
+        per_eps = []
+        for e in eps:
+            measured = res.measured_rounds(pl.eps_abs(e))
+            per_eps.append(dict(
+                eps=e, measured_rounds=measured,
+                bits_to_eps=(int(led.bits_through_round(measured))
+                             if measured is not None else None),
+                bound_rounds=pl.bound(pl.eps_abs(e)).rounds))
+        rows.append(dict(
+            channel=res.channel,
+            bits_per_round=float(led.bits_per_round()),
+            bytes_per_round=float(led.bytes_per_round()),
+            total_bits=int(led.total_bits()),
+            per_eps=per_eps,
+            # a record-level arithmetic check: every vector upload must
+            # price at exactly wire_bits(elems); scalars stay 32-bit
+            wire_arithmetic_ok=_wire_arithmetic_ok(led, res.channel),
+        ))
+    ident = {r["channel"]: r for r in rows}["identity"]
+    for row in rows:
+        row["savings_vs_identity"] = [
+            (round(i_e["bits_to_eps"] / c_e["bits_to_eps"], 2)
+             if c_e["bits_to_eps"] and i_e["bits_to_eps"] else None)
+            for c_e, i_e in zip(row["per_eps"], ident["per_eps"])]
+    return dict(cell={k: v for k, v in cell.items() if k != "eps"},
+                eps=list(eps), channels=rows)
+
+
+def _wire_arithmetic_ok(led, channel_name: str) -> bool:
+    ch = parse_channel(channel_name)
+    for r in led.records:
+        itemsize = np.dtype(r.dtype).itemsize
+        if tuple(r.shape) == ():   # scalar reductions bypass the channel
+            expect = 32
+        elif r.direction == "worker->all" and len(r.shape) >= 2:
+            # local all-to-all broadcast: the stacked (m, ...) payload is
+            # m per-machine messages, each priced through the channel
+            m = r.shape[0]
+            expect = m * ch.wire_bits(r.elems // m, itemsize)
+        else:
+            expect = ch.wire_bits(r.elems, itemsize)
+        if r.bits != expect:
+            return False
+    return True
+
+
+# --------------------------------------------------------------------------
+# Reporting
+# --------------------------------------------------------------------------
+
+def render_markdown(doc: dict) -> str:
+    lines = [
+        "# Bit-level communication accounting — `comm-bits`",
+        "",
+        f"<!-- Generated by `{doc['command']}`. Do not edit by hand. -->",
+        f"*Generated by* `{doc['command']}` *— regenerate instead of "
+        "editing.*",
+        "",
+        f"- **Platform:** `{doc['platform']}`",
+        f"- **Identity gates:** {doc['summary']['certified']}/"
+        f"{doc['summary']['certifiable']} `{doc['spec']['preset']}` cells "
+        "with identical verdicts, measured rounds, and bit-identical "
+        "typed ledger streams between the `auto` and explicit "
+        "`identity` channels, byte/bit totals matching shape×dtype "
+        "arithmetic exactly",
+        "- **Wire model:** per-machine uploads priced by the channel "
+        "(`core.channel`); scalar reductions always exact (32 bits)",
+        "",
+        "## Identity-channel equivalence per certification cell",
+        "",
+        "| instance | algorithm | verdicts identical | measured rounds "
+        "identical | ledger identical | bytes (shape×dtype) | "
+        "bits = 8×bytes |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for r in doc["identity"]:
+        lines.append(
+            f"| {r['instance_label']} | {r['algorithm']} | "
+            f"{'yes' if r['verdict_identical'] else '**NO**'} | "
+            f"{'yes' if r['measured_rounds_identical'] else '**NO**'} | "
+            f"{'yes' if r['ledger_identical'] else '**NO**'} | "
+            f"{'exact' if not r['accounting_problems'] else '**DRIFT**'} | "
+            f"{'yes' if r['bits_are_8x_bytes'] else '**NO**'} |")
+    t = doc.get("tradeoff")
+    if t:
+        cell = t["cell"]
+        lines += [
+            "",
+            "## Bits-vs-rounds tradeoff",
+            "",
+            f"`{cell['algorithm']}` on `{cell['instance']}`"
+            f"({', '.join(f'{k}={v:g}' for k, v in cell['instance_params'].items())}), "
+            f"round budget {cell['rounds']}:",
+            "",
+            "| channel | bits/round | "
+            + " | ".join(f"rounds @ {e:g} | bits @ {e:g} | ×fewer bits"
+                         for e in t["eps"]) + " |",
+            "|---|---|" + "---|" * (3 * len(t["eps"])),
+        ]
+        for row in t["channels"]:
+            cells = []
+            for pe, sv in zip(row["per_eps"], row["savings_vs_identity"]):
+                if pe["measured_rounds"] is None:
+                    cells += ["not reached (noise floor)", "—", "—"]
+                else:
+                    cells += [str(pe["measured_rounds"]),
+                              f"{pe['bits_to_eps']:,}",
+                              f"{sv:.2f}×" if sv else "—"]
+            lines.append(f"| `{row['channel']}` | "
+                         f"{row['bits_per_round']:.0f} | "
+                         + " | ".join(cells) + " |")
+        lines += [
+            "",
+            "Reading the table: `fp16`/`bf16` halve every message at no "
+            "round cost at these thresholds; `int8` (stochastic "
+            "rounding, per-message scale) reaches the coarse threshold "
+            "with ~4× fewer bits at the price of a round or two, but its "
+            "quantization noise floors the achievable gap; `topk` keeps "
+            "a fraction of coordinates per message (value + 32-bit "
+            "index each). A channel that cannot reach a threshold spends "
+            "infinite bits on it — *that* is the tradeoff the bit "
+            "accounting makes visible next to the round bounds.",
+        ]
+    lines += [
+        "",
+        "Under the identity channel the typed ledger is pure accounting: "
+        "the legacy `(kind, elems, bytes, tag)` stream, the certification "
+        "verdicts, and the measured rounds are bit-identical to a "
+        "channel-free build, so every existing report under "
+        "`docs/results/` is unchanged by this subsystem.",
+        "",
+    ]
+    return "\n".join(lines)
+
+
+def write_reports(identity: List[dict], tradeoff: Optional[dict],
+                  out_dir, rounds: int) -> pathlib.Path:
+    from repro.experiments.report import refresh_index
+
+    out = pathlib.Path(out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+    ok = sum(1 for r in identity if _cell_ok(r))
+    doc = dict(
+        schema_version=1,
+        command=COMMAND,
+        spec=dict(name="comm-bits", preset=PRESET,
+                  instance=PRESETS[PRESET].instance,
+                  algorithms=sorted({r["algorithm"] for r in identity}),
+                  rounds=rounds, channels=list(CHANNEL_SET)),
+        platform=jax.default_backend(),
+        summary=dict(records=len(identity), certifiable=len(identity),
+                     certified=ok, failed=len(identity) - ok),
+        identity=identity,
+        tradeoff=tradeoff,
+    )
+    (out / "comm-bits.json").write_text(json.dumps(doc, indent=2) + "\n")
+    (out / "comm-bits.md").write_text(render_markdown(doc))
+    refresh_index(out)
+    return out / "comm-bits.json"
+
+
+def _cell_ok(r: dict) -> bool:
+    return bool(r["verdict_identical"] and r["measured_rounds_identical"]
+                and r["ledger_identical"] and r["bits_are_8x_bytes"]
+                and not r["accounting_problems"])
+
+
+def run():
+    """CSV rows for the legacy benchmarks/run.py surface."""
+    from .common import emit
+    t = run_tradeoff(TRADEOFF_QUICK, channels=("identity", "int8"))
+    for row in t["channels"]:
+        pe = row["per_eps"][0]
+        emit(f"comm_bits/dagd/{row['channel']}",
+             f"{row['bits_per_round']:.0f}",
+             f"rounds_to_{pe['eps']:g}={pe['measured_rounds']};"
+             f"bits_to_eps={pe['bits_to_eps']}")
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m benchmarks.comm_bits", description=__doc__)
+    parser.add_argument("--out", default=None,
+                        help="output directory (default: docs/results)")
+    parser.add_argument("--rounds", type=int, default=None,
+                        help="override the preset round budget for the "
+                             "identity gates")
+    parser.add_argument("--quick", action="store_true",
+                        help="CI smoke: fewer rounds / algorithms, small "
+                             "tradeoff cell; every gate still enforced")
+    parser.add_argument("--no-report", action="store_true")
+    args = parser.parse_args(argv)
+
+    if args.quick:
+        identity = run_identity(rounds=args.rounds or 300,
+                                algorithms=("dagd", "dgd"))
+        tradeoff = run_tradeoff(TRADEOFF_QUICK)
+    else:
+        identity = run_identity(rounds=args.rounds)
+        tradeoff = run_tradeoff(TRADEOFF)
+    rounds = identity[0]["rounds"] if identity else 0
+
+    for r in identity:
+        print(f"[comm-bits] {r['instance_label']} {r['algorithm']:>8}: "
+              f"verdicts "
+              f"{'identical' if r['verdict_identical'] else 'DIFFER'}, "
+              f"measured "
+              f"{'identical' if r['measured_rounds_identical'] else 'DIFFER'}"
+              f", ledger "
+              f"{'identical' if r['ledger_identical'] else 'DIFFERS'}, "
+              f"accounting "
+              f"{'exact' if not r['accounting_problems'] else 'DRIFT'}",
+              file=sys.stderr)
+    for row in tradeoff["channels"]:
+        pe0 = row["per_eps"][0]
+        print(f"[comm-bits] {row['channel']:>10}: "
+              f"{row['bits_per_round']:.0f} bits/round, "
+              f"rounds@{pe0['eps']:g}={pe0['measured_rounds']}, "
+              f"bits@{pe0['eps']:g}={pe0['bits_to_eps']}",
+              file=sys.stderr)
+
+    if not args.no_report:
+        from repro.experiments.report import default_results_dir
+        out = args.out or default_results_dir()
+        path = write_reports(identity, tradeoff, out, rounds)
+        print(f"[comm-bits] report -> {path}")
+
+    bad = [r for r in identity if not _cell_ok(r)]
+    if bad:
+        print(f"[comm-bits] IDENTITY/ACCOUNTING GATE FAILED in "
+              f"{len(bad)} cell(s): the identity channel must be "
+              f"invisible and byte totals must match dtype arithmetic",
+              file=sys.stderr)
+        for r in bad:
+            for p in r["accounting_problems"]:
+                print(f"[comm-bits]   {r['algorithm']}: {p}",
+                      file=sys.stderr)
+        return 1
+    wire_bad = [row["channel"] for row in tradeoff["channels"]
+                if not row["wire_arithmetic_ok"]]
+    if wire_bad:
+        print(f"[comm-bits] WIRE ARITHMETIC DRIFT for {wire_bad}",
+              file=sys.stderr)
+        return 1
+    coarse = tradeoff["eps"][0]
+    ident_bits = tradeoff["channels"][0]["per_eps"][0]["bits_to_eps"]
+    missed = []
+    for row in tradeoff["channels"][1:]:
+        b = row["per_eps"][0]["bits_to_eps"]
+        if b is None or (ident_bits is not None and b >= ident_bits):
+            missed.append(row["channel"])
+    if missed:
+        print(f"[comm-bits] SAVINGS GATE MISSED: {missed} spent >= "
+              f"identity bits to eps={coarse:g}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

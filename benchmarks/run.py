@@ -10,6 +10,7 @@ Default mode prints ``name,us_per_call,derived`` CSV rows:
   oracle_backends  — einsum vs Pallas-kernel per-round wall-clock
   round_engine     — python-loop vs scan-compiled per-cell wall-clock
   api_batch        — execute_batch vs sequential per-cell wall-clock
+  comm_bits        — wire bits/round + bits-to-eps per lossy channel
   roofline         — dry-run roofline terms per (arch x shape x mesh)
 
 The theorem rows are thin wrappers over ``repro.experiments`` (which
@@ -47,20 +48,23 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
             sweep_argv += ["--out", args.out]
         rc = sweep_main(sweep_argv)
         if args.sweeps:
-            # the round-engine and api-batch ablations publish to the
-            # same results tree; --sweeps is the "regenerate
-            # docs/results" entry point
+            # the round-engine, api-batch, and comm-bits ablations
+            # publish to the same results tree; --sweeps is the
+            # "regenerate docs/results" entry point
             from .api_batch import main as api_batch_main
+            from .comm_bits import main as comm_bits_main
             from .round_engine import main as round_engine_main
             re_argv = ["--out", args.out] if args.out else []
             rc = rc or round_engine_main(re_argv)
             rc = rc or api_batch_main(re_argv)
+            rc = rc or comm_bits_main(re_argv)
         return rc
 
     print("name,us_per_call,derived")
-    from . import (api_batch, comm_cost, kernel_bench, m_invariance,
-                   moe_dispatch_ablation, oracle_backends, round_engine,
-                   roofline, thm2_rounds, thm3_rounds, thm4_incremental)
+    from . import (api_batch, comm_bits, comm_cost, kernel_bench,
+                   m_invariance, moe_dispatch_ablation, oracle_backends,
+                   round_engine, roofline, thm2_rounds, thm3_rounds,
+                   thm4_incremental)
     thm2_rounds.run()
     thm3_rounds.run()
     thm4_incremental.run()
@@ -70,6 +74,7 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     oracle_backends.run()
     round_engine.run()
     api_batch.run()
+    comm_bits.run()
     moe_dispatch_ablation.run()
     roofline.run()
     return 0

@@ -24,7 +24,8 @@ plans = [plan(s) for s in specs]          # every "auto" resolved, cells
 results = execute_batch(plans)            # vmapped per same-shaped group
 
 print(f"{'algorithm':>10} {'kappa':>6} {'measured':>9} {'bound':>8} "
-      f"{'ratio':>6} {'certified':>10} {'batched':>8}")
+      f"{'ratio':>6} {'certified':>10} {'batched':>8} {'KB sent':>8} "
+      f"{'B/round':>8}")
 failed = 0
 for spec, pl, res in zip(specs, plans, results):
     bound = pl.bound(pl.eps_abs(EPS))
@@ -32,12 +33,18 @@ for spec, pl, res in zip(specs, plans, results):
     certified = pl.certify(res, EPS)   # three-valued, sweep semantics
     failed += certified is False       # inconclusive (None) is not failure
     ratio = f"{measured / bound.rounds:.2f}" if measured else "-"
+    led = res.ledger                   # typed messages: bytes AND wire bits
     print(f"{spec.algorithm:>10} {spec.instance_params['kappa']:>6g} "
           f"{measured if measured is not None else f'>{spec.rounds}':>9} "
           f"{bound.rounds:>8.1f} {ratio:>6} "
           f"{'n/a' if certified is None else str(certified):>10} "
-          f"{str(res.batched):>8}")
+          f"{str(res.batched):>8} {led.total_bytes() / 1024:>8.1f} "
+          f"{led.bytes_per_round():>8.0f}")
 
 print(f"\n{len(specs) - failed}/{len(specs)} certified (measured rounds "
       f">= Theorem-2 bound on the hard instance)")
+print("`KB sent` / `B/round` are metered off the upgraded CommLedger "
+      "(per-machine uploads; wire bits also available via "
+      "res.ledger.total_bits() — rerun with RunSpec(channel='int8') to "
+      "shrink them)")
 sys.exit(1 if failed else 0)

@@ -22,8 +22,9 @@ Specs round-trip through JSON (``to_json``/``from_json``) and are
 embedded in every sweep record under ``docs/results/``, so any published
 row can be re-executed verbatim.
 """
-from ._resolve import (BACKEND_ENV, ENGINE_ENV, ENGINES, ORACLE_BACKENDS,
-                       PLACEMENTS, capabilities, resolve_engine,
+from ._resolve import (BACKEND_ENV, CHANNEL_ENV, CHANNELS, ENGINE_ENV,
+                       ENGINES, ORACLE_BACKENDS, PLACEMENTS, capabilities,
+                       resolve_channel, resolve_engine,
                        resolve_oracle_backend, resolve_placement)
 from .spec import SPEC_SCHEMA_VERSION, RunSpec
 from .plan import (ExecutionPlan, PlanError, RunResult, bound_for, plan,
@@ -31,9 +32,10 @@ from .plan import (ExecutionPlan, PlanError, RunResult, bound_for, plan,
 from .batch import execute_batch
 
 __all__ = [
-    "BACKEND_ENV", "ENGINE_ENV", "ENGINES", "ORACLE_BACKENDS", "PLACEMENTS",
-    "capabilities", "resolve_engine", "resolve_oracle_backend",
-    "resolve_placement",
+    "BACKEND_ENV", "CHANNEL_ENV", "CHANNELS", "ENGINE_ENV", "ENGINES",
+    "ORACLE_BACKENDS", "PLACEMENTS",
+    "capabilities", "resolve_channel", "resolve_engine",
+    "resolve_oracle_backend", "resolve_placement",
     "SPEC_SCHEMA_VERSION", "RunSpec",
     "ExecutionPlan", "PlanError", "RunResult", "bound_for", "plan", "run",
     "execute_batch",

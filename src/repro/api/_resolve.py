@@ -1,6 +1,6 @@
-"""The single capability resolver for the three execution axes.
+"""The single capability resolver for the four execution axes.
 
-Every run in the repo is positioned on three orthogonal axes:
+Every run in the repo is positioned on four orthogonal axes:
 
   * **placement** — where the machines live: ``local`` (m simulated
     machines, blocks stacked on a leading axis) or ``sharded`` (machine j
@@ -9,7 +9,10 @@ Every run in the repo is positioned on three orthogonal axes:
     ``response``/``pgrad``/``phvp`` are computed: ``einsum`` (plain jnp
     contractions) or ``kernel`` (the MXU-tiled Pallas kernels);
   * **round engine** — how rounds are driven: ``python`` (per-call loop)
-    or ``scan`` (one ``lax.scan``-compiled XLA program per segment).
+    or ``scan`` (one ``lax.scan``-compiled XLA program per segment);
+  * **channel** — what the per-machine uploads cost on the wire:
+    ``identity`` (exact f32) or a lossy transform (``fp16``/``bf16``/
+    ``int8``/``topk[:rho]``, see ``core.channel``).
 
 Historically the ``auto`` choices were resolved in three places
 (``core/runtime.py``, ``experiments/sweep.py``, ``launch/dryrun.py``);
@@ -36,9 +39,14 @@ import jax
 ORACLE_BACKENDS = ("einsum", "kernel")
 ENGINES = ("python", "scan")
 PLACEMENTS = ("local", "sharded")
+# Canonical list lives in repro.core.channel (the transform
+# implementations); mirrored here so the resolver module stays a leaf at
+# load time. tests/test_channel.py pins equality.
+CHANNELS = ("identity", "fp16", "bf16", "int8", "topk")
 
 BACKEND_ENV = "REPRO_ORACLE_BACKEND"
 ENGINE_ENV = "REPRO_ROUND_ENGINE"
+CHANNEL_ENV = "REPRO_CHANNEL"
 
 
 def capabilities() -> Dict[str, object]:
@@ -83,6 +91,24 @@ def resolve_engine(engine: Optional[str] = None) -> str:
     if engine in (None, "auto"):
         engine = "scan"
     return _check(engine, "round engine", ENGINES)
+
+
+def resolve_channel(channel: Optional[str] = None) -> str:
+    """``None``/``"auto"`` -> the ``REPRO_CHANNEL`` env var, then
+    ``identity`` — lossy channels are an explicit opt-in because they
+    change the optimization trajectory, not just its cost.  Returns the
+    *canonical name* (e.g. ``"topk:0.1"``); raises ``ValueError`` on an
+    unknown channel."""
+    if channel in (None, "auto"):
+        channel = os.environ.get(CHANNEL_ENV, "").strip() or None
+    if channel in (None, "auto"):
+        return "identity"
+    # call-time import (same pattern as the core shims in the other
+    # direction): the transform catalogue lives with its implementations
+    # in repro.core.channel, and importing repro.core at module-load
+    # time would violate this module's leaf constraint.
+    from ..core.channel import parse_channel
+    return parse_channel(channel).name
 
 
 def resolve_placement(placement: Optional[str] = None) -> str:

@@ -63,7 +63,8 @@ class _Converted:
     pure: Callable                    # pure(consts, *args) -> outputs
     consts: List[jnp.ndarray]
     structure: str                    # jaxpr text, consts abstracted
-    schedule: Tuple[list, int]        # (ledger records, rounds) per call
+    schedule: Tuple[list, int, list]  # (ledger records, rounds,
+                                      #  round-boundary marks) per call
 
 
 def _convert(fn: Callable, *example_args) -> _Converted:
@@ -76,7 +77,7 @@ def _convert(fn: Callable, *example_args) -> _Converted:
         return jax.tree.unflatten(out_tree, out)
 
     return _Converted(pure=pure, consts=list(closed.consts),
-                      structure=str(closed.jaxpr), schedule=([], 0))
+                      structure=str(closed.jaxpr), schedule=([], 0, []))
 
 
 def _segment_xs(seg: Segment) -> np.ndarray:
@@ -103,8 +104,8 @@ class _Cell:
         meas = (self.meas.structure,
                 tuple((tuple(c.shape), jnp.asarray(c).dtype.str)
                       for c in self.meas.consts)) if self.meas else None
-        return (self.plan.algo.name, self.plan.backend, self.plan.spec.rounds,
-                segs, meas)
+        return (self.plan.algo.name, self.plan.backend, self.plan.channel,
+                self.plan.spec.rounds, segs, meas)
 
 
 def _prepare(plan: ExecutionPlan) -> Optional[_Cell]:
@@ -124,9 +125,11 @@ def _prepare(plan: ExecutionPlan) -> Optional[_Cell]:
             key = (id(seg.step), xs.dtype.str, xs.shape[1:])
             if key not in by_step:
                 n0, r0 = len(scratch.records), scratch.rounds
+                m0 = len(scratch.round_marks)
                 conv = _convert(lambda c, x: seg.step(dist, c, x),
                                 carry, jnp.asarray(xs[0]))
-                conv.schedule = (scratch.records[n0:], scratch.rounds - r0)
+                conv.schedule = (scratch.records[n0:], scratch.rounds - r0,
+                                 [m - n0 for m in scratch.round_marks[m0:]])
                 by_step[key] = conv
             steps.append(by_step[key])
         meas = None
@@ -201,17 +204,16 @@ def _execute_group(cells: List[_Cell]) -> List[RunResult]:
     for i, cell in enumerate(cells):
         ledger = CommLedger()
         for s, seg in enumerate(cell.program.segments):
-            records, rounds_per_step = cell.steps[s].schedule
-            for _ in range(seg.count):
-                ledger.records.extend(records)
-            ledger.rounds += rounds_per_step * seg.count
+            records, rounds_per_step, marks = cell.steps[s].schedule
+            ledger.replay_schedule(records, rounds_per_step, marks,
+                                   seg.count)
         carry_i = jax.tree.map(lambda a: a[i], carry)
         w = cell.dist.gather_w(cell.program.final(carry_i))
         pl = cell.plan
         results.append(RunResult(
             spec=pl.spec, placement=pl.placement, backend=pl.backend,
-            engine=pl.engine, w=w, rounds=cell.program.rounds,
-            ledger=ledger,
+            engine=pl.engine, channel=pl.channel, w=w,
+            rounds=cell.program.rounds, ledger=ledger,
             gaps=gaps_all[:, i] if gaps_all is not None else None,
             budget_ok=pl._budget_ok(ledger), batched=True))
     return results

@@ -86,6 +86,7 @@ class RunResult:
     gaps: Optional[np.ndarray] = None     # (K,) when measure == "gap"
     budget_ok: Optional[bool] = None      # None: budget check disabled
     batched: bool = False                 # executed via execute_batch group
+    channel: str = "identity"             # resolved wire model (canonical)
 
     def measured_rounds(self, eps_abs: float) -> Optional[int]:
         """First round k with f(w_k) - f* <= eps_abs (1-based), or None
@@ -112,6 +113,7 @@ class ExecutionPlan:
     placement: str
     backend: str
     engine: str
+    channel: str                      # canonical name, e.g. "topk:0.1"
     measure: str                      # "gap" | "none"
     algo: Optional[AlgorithmSpec]
     _bundle: Optional[InstanceBundle] = None
@@ -179,7 +181,8 @@ class ExecutionPlan:
         if self._cell_cache is None:
             from ..core.runtime import LocalDistERM
             b = self.bundle
-            dist = LocalDistERM(b.prob, b.part, backend=self.backend)
+            dist = LocalDistERM(b.prob, b.part, backend=self.backend,
+                                channel=self.channel)
             program = self.algo.program(dist, rounds=self.spec.rounds,
                                         **self.algo_kwargs())
             measure_fn = None
@@ -228,7 +231,8 @@ class ExecutionPlan:
                           measure=measure_fn, session=session)
         return RunResult(
             spec=self.spec, placement=self.placement, backend=self.backend,
-            engine=self.engine, w=dist.gather_w(res.w), rounds=res.rounds,
+            engine=self.engine, channel=self.channel,
+            w=dist.gather_w(res.w), rounds=res.rounds,
             ledger=ledger, gaps=res.gaps, budget_ok=self._budget_ok(ledger))
 
     def _execute_sharded(self) -> RunResult:
@@ -240,16 +244,19 @@ class ExecutionPlan:
             w, led = _run_sharded(
                 b.prob, lambda d_, r: self.algo.fn(d_, r, **kwargs),
                 rounds=self.spec.rounds, ledger=ledger,
-                backend=self.backend, engine="python")
+                backend=self.backend, engine="python",
+                channel=self.channel)
         else:
             w, led = _run_sharded(
                 b.prob, None, rounds=self.spec.rounds, ledger=ledger,
                 backend=self.backend, engine="scan",
                 program_builder=lambda d_, r: self.algo.program(d_, r,
-                                                                **kwargs))
+                                                                **kwargs),
+                channel=self.channel)
         return RunResult(
             spec=self.spec, placement=self.placement, backend=self.backend,
-            engine=self.engine, w=w, rounds=led.rounds, ledger=led,
+            engine=self.engine, channel=self.channel,
+            w=w, rounds=led.rounds, ledger=led,
             gaps=None, budget_ok=self._budget_ok(led))
 
 
@@ -300,6 +307,7 @@ def plan(spec: RunSpec,
         placement = _resolve.resolve_placement(spec.placement)
         backend = _resolve.resolve_oracle_backend(spec.backend, caps=caps)
         engine = _resolve.resolve_engine(spec.engine)
+        channel = _resolve.resolve_channel(spec.channel)
     except ValueError as e:
         raise PlanError(str(e)) from None
 
@@ -307,7 +315,7 @@ def plan(spec: RunSpec,
         # resolution-only: the axes are the whole request (dry-run tools)
         return ExecutionPlan(spec=spec, placement=placement,
                              backend=backend, engine=engine,
-                             measure="none", algo=None)
+                             channel=channel, measure="none", algo=None)
     if spec.instance is None or spec.algorithm is None:
         raise PlanError("a runnable RunSpec needs BOTH instance and "
                         "algorithm (leave both None for a resolution-only "
@@ -352,8 +360,8 @@ def plan(spec: RunSpec,
                 f"match the recorded run_spec")
 
     return ExecutionPlan(spec=spec, placement=placement, backend=backend,
-                         engine=engine, measure=measure, algo=algo,
-                         _bundle=bundle)
+                         engine=engine, channel=channel, measure=measure,
+                         algo=algo, _bundle=bundle)
 
 
 def run(spec: RunSpec, bundle: Optional[InstanceBundle] = None) -> RunResult:

@@ -2,8 +2,8 @@
 
 A ``RunSpec`` captures the full coordinates of a certification cell:
 the problem (a registered instance family plus its parameters), the
-algorithm, the round/accuracy budget, and the three execution axes
-(placement, oracle backend, round engine — ``"auto"`` until
+algorithm, the round/accuracy budget, and the four execution axes
+(placement, oracle backend, round engine, channel — ``"auto"`` until
 ``repro.api.plan`` resolves them).  Nothing about a run lives anywhere
 else: a spec embedded in a ``docs/results/*.json`` record is enough to
 re-execute that row verbatim (``RunSpec.from_dict(rec["run_spec"])``).
@@ -20,7 +20,10 @@ from typing import Dict, Optional, Tuple
 import numpy as np
 
 
-SPEC_SCHEMA_VERSION = 1
+SPEC_SCHEMA_VERSION = 2       # 2: channel axis (PR 5)
+# Older spec dicts still load: every field added since a compat version
+# has a default, so from_dict accepts the whole range.
+_SPEC_COMPAT_VERSIONS = (1, SPEC_SCHEMA_VERSION)
 
 _EPS_MODES = ("abs", "rel")
 _MEASURES = ("auto", "gap", "none")
@@ -74,6 +77,8 @@ class RunSpec:
     placement: str = "auto"          # "auto" | "local" | "sharded"
     backend: str = "auto"            # "auto" | "einsum" | "kernel"
     engine: str = "auto"             # "auto" | "scan" | "python"
+    channel: str = "auto"            # "auto" | "identity" | "fp16" | "bf16"
+                                     # | "int8" | "topk[:rho]"
     algo_kwargs: Dict[str, object] = dataclasses.field(default_factory=dict)
     check_budget: bool = True        # assert the O(n+d)/round budget
     tag: str = ""
@@ -104,10 +109,10 @@ class RunSpec:
     def from_dict(cls, d: dict) -> "RunSpec":
         d = dict(d)
         version = d.pop("schema_version", SPEC_SCHEMA_VERSION)
-        if version != SPEC_SCHEMA_VERSION:
+        if version not in _SPEC_COMPAT_VERSIONS:
             raise ValueError(f"RunSpec schema_version {version} not "
                              f"supported (this build speaks "
-                             f"{SPEC_SCHEMA_VERSION})")
+                             f"{_SPEC_COMPAT_VERSIONS})")
         fields = {f.name for f in dataclasses.fields(cls)}
         unknown = set(d) - fields
         if unknown:

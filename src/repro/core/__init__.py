@@ -14,8 +14,10 @@ from .hard_instance import (ChainInstance, SeparableInstance, chain_matrix,
 from .bounds import (BoundReport, agd_smooth_upper_bound, agd_upper_bound,
                      gd_upper_bound, thm2_strongly_convex, thm3_smooth_convex,
                      thm4_incremental)
-from .comm import (CollectiveAudit, CommLedger, LocalCommunicator,
-                   ShardMapCommunicator, collective_bytes_from_hlo)
+from .channel import CHANNELS, Channel, parse_channel
+from .comm import (CollectiveAudit, CommLedger, CommRecord,
+                   LocalCommunicator, ShardMapCommunicator,
+                   collective_bytes_from_hlo)
 from .feasible_set import SpanOracle
 
 __all__ = [
@@ -27,7 +29,8 @@ __all__ = [
     "BoundReport", "agd_smooth_upper_bound", "agd_upper_bound",
     "gd_upper_bound", "thm2_strongly_convex", "thm3_smooth_convex",
     "thm4_incremental",
-    "CollectiveAudit", "CommLedger", "LocalCommunicator",
+    "CHANNELS", "Channel", "parse_channel",
+    "CollectiveAudit", "CommLedger", "CommRecord", "LocalCommunicator",
     "ShardMapCommunicator", "collective_bytes_from_hlo",
     "SpanOracle",
 ]

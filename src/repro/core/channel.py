@@ -1,0 +1,184 @@
+"""Lossy channel transforms for worker->center messages.
+
+The paper's lower bounds are stated in communication *rounds*; the
+bit-complexity refinements (Arjevani & Shamir 2015; Ghadiri et al. 2024)
+ask what each round *costs on the wire*.  This module models that axis:
+a ``Channel`` is a transform applied to every vector payload a machine
+uploads (the per-machine ``ReduceAll`` contribution, the per-machine
+block of an all-to-all broadcast) plus the arithmetic for the bits that
+payload occupies after the transform.  The communicators in
+``core.comm`` apply the transform before reducing and record the wire
+bits in the ``CommLedger``, so the certification harness can meter
+bit budgets next to round counts.
+
+Channels:
+
+  * ``identity``   — the exact f32 wire; 32 bits/element.  The default,
+                     and the one every existing certification runs under:
+                     with it the computation graph and the ledger's
+                     legacy ``(kind, elems, bytes, tag)`` stream are
+                     bit-identical to a channel-free build.
+  * ``fp16``/``bf16`` — deterministic nearest-even cast to half /
+                     bfloat16 and back; 16 bits/element.
+  * ``int8``       — per-message symmetric quantization to the int8 grid
+                     with *stochastic rounding* (unbiased given uniform
+                     rounding offsets); 8 bits/element + one f32 scale
+                     per message.  The rounding offsets are derived from
+                     an integer hash of the payload's own float bits, so
+                     the transform is a pure traceable function (scan-
+                     and ``vmap``-safe, no RNG key threading through the
+                     round engine) while still varying per round as the
+                     iterate moves.
+  * ``topk``/``topk:<rho>`` — magnitude top-k sparsification keeping a
+                     ``rho`` fraction of entries (default 0.1); each
+                     survivor costs its f32 value plus a 32-bit index.
+
+Scalar reductions (``reduce_scalar``) bypass the channel: they carry the
+model's control quantities (step sizes, CG inner products) whose
+corruption would change *which algorithm runs*, not how much it pays —
+exactly as bit-complexity treatments keep O(log) control bits exact.
+Likewise the center->worker return of a ReduceAll is exact; the metered
+payload is the per-machine upload, matching the ledger's per-machine
+``elems`` convention.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from typing import Optional, Union
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+# Canonical channel kinds; mirrored in repro.api._resolve (the single
+# capability resolver) — tests/test_channel.py pins equality.
+CHANNELS = ("identity", "fp16", "bf16", "int8", "topk")
+
+DEFAULT_TOPK_RHO = 0.1
+INDEX_BITS = 32     # per-survivor coordinate index on a top-k wire
+SCALE_BITS = 32     # per-message f32 scale on the int8 wire
+
+
+def _hash_uniform(x: jnp.ndarray) -> jnp.ndarray:
+    """Per-element uniforms in [0, 1) from an integer hash of the f32
+    payload bits (xorshift-multiply avalanche).  Deterministic and
+    traceable — the stochastic-rounding offsets need no RNG key, so the
+    transform composes with ``vmap``/``scan``/``eval_shape`` unchanged —
+    yet decorrelated from the value's magnitude and fresh every round
+    (the hash input is the moving iterate's own bits)."""
+    bits = lax.bitcast_convert_type(x.astype(jnp.float32), jnp.uint32)
+    h = bits ^ jnp.uint32(0x9E3779B9)
+    h = (h ^ (h >> 16)) * jnp.uint32(0x45D9F3B)
+    h = (h ^ (h >> 16)) * jnp.uint32(0x45D9F3B)
+    h = h ^ (h >> 16)
+    # keep 24 bits so the uniform is exact in f32
+    return (h >> 8).astype(jnp.float32) * jnp.float32(1.0 / (1 << 24))
+
+
+def stochastic_round(y: jnp.ndarray, u: jnp.ndarray) -> jnp.ndarray:
+    """``floor(y + u)`` — unbiased for ``u ~ U[0, 1)``:
+    ``E_u[floor(y + u)] = y`` exactly.  Split out so the unbiasedness
+    property is testable with explicit uniforms (the channel feeds it
+    hash-derived ones)."""
+    return jnp.floor(y + u)
+
+
+@dataclasses.dataclass(frozen=True)
+class Channel:
+    """One wire model: a payload transform + its bit arithmetic.
+
+    ``apply`` maps ONE message (a single machine's payload, any shape)
+    to what the receiver decodes; callers ``vmap`` it over a stacked
+    machine axis.  ``wire_bits`` prices one message of ``elems``
+    elements at source ``itemsize`` bytes/element.
+    """
+
+    name: str                   # canonical, e.g. "int8", "topk:0.25"
+    kind: str                   # member of CHANNELS
+    rho: float = 1.0            # topk keep fraction
+
+    @property
+    def lossless(self) -> bool:
+        return self.kind == "identity"
+
+    # ---- payload transform ----------------------------------------------
+    def apply(self, x: jnp.ndarray) -> jnp.ndarray:
+        if self.kind == "identity":
+            return x
+        if self.kind == "fp16":
+            return x.astype(jnp.float16).astype(x.dtype)
+        if self.kind == "bf16":
+            return x.astype(jnp.bfloat16).astype(x.dtype)
+        if self.kind == "int8":
+            return self._int8(x)
+        return self._topk(x)
+
+    def _int8(self, x: jnp.ndarray) -> jnp.ndarray:
+        scale = jnp.max(jnp.abs(x)) / jnp.asarray(127.0, x.dtype)
+        safe = jnp.where(scale > 0, scale, jnp.ones_like(scale))
+        q = stochastic_round(x / safe, _hash_uniform(x))
+        q = jnp.clip(q, -127.0, 127.0)
+        return jnp.where(scale > 0, q * safe, jnp.zeros_like(x))
+
+    def _topk(self, x: jnp.ndarray) -> jnp.ndarray:
+        flat = x.reshape(-1)
+        k = self.topk_k(flat.shape[0])
+        _, idx = lax.top_k(jnp.abs(flat), k)
+        out = jnp.zeros_like(flat).at[idx].set(flat[idx])
+        return out.reshape(x.shape)
+
+    # ---- wire arithmetic -------------------------------------------------
+    def topk_k(self, elems: int) -> int:
+        return max(1, min(int(elems), math.ceil(self.rho * int(elems))))
+
+    def wire_bits(self, elems: int, itemsize: int = 4) -> int:
+        """Bits one message of ``elems`` source elements occupies on the
+        wire under this channel."""
+        elems = int(elems)
+        if self.kind == "identity":
+            return elems * itemsize * 8
+        if self.kind in ("fp16", "bf16"):
+            return elems * 16
+        if self.kind == "int8":
+            return elems * 8 + SCALE_BITS
+        return self.topk_k(elems) * (itemsize * 8 + INDEX_BITS)
+
+
+_IDENTITY = Channel(name="identity", kind="identity")
+
+_TOPK_RE = re.compile(r"topk(?::([0-9.]+))?\Z")
+
+
+def parse_channel(channel: Union[None, str, Channel]) -> Channel:
+    """Resolve a channel *name* to a ``Channel``.
+
+    Accepts ``None`` (identity), a ``Channel`` (passed through), the
+    canonical kind names, and the parameterized form ``topk:<rho>`` with
+    ``0 < rho <= 1``.  Raises ``ValueError`` on anything else — callers
+    in ``repro.api`` surface that as a plan-time error.
+    """
+    if channel is None:
+        return _IDENTITY
+    if isinstance(channel, Channel):
+        return channel
+    name = str(channel).strip()
+    if name in ("", "identity"):
+        return _IDENTITY
+    if name == "fp16":
+        return Channel(name="fp16", kind="fp16")
+    if name == "bf16":
+        return Channel(name="bf16", kind="bf16")
+    if name == "int8":
+        return Channel(name="int8", kind="int8")
+    m = _TOPK_RE.match(name)
+    if m:
+        rho = float(m.group(1)) if m.group(1) else DEFAULT_TOPK_RHO
+        if not 0.0 < rho <= 1.0:
+            raise ValueError(f"topk keep fraction must be in (0, 1]; "
+                             f"got {rho}")
+        return Channel(name=f"topk:{rho:g}", kind="topk", rho=rho)
+    raise ValueError(f"unknown channel {name!r}; expected one of "
+                     f"{CHANNELS} (topk also takes 'topk:<rho>')")

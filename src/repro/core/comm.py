@@ -15,9 +15,22 @@ Two communicator backends implement this model:
     collectives over a named mesh axis, for use inside ``shard_map``.
     "Machine j" is mesh slice j of the `model` axis.
 
-Every call is recorded in a ``CommLedger`` so benchmarks can report
-rounds, op counts and bytes, and assert the paper's per-round budget
-(O(n + d) bits/round) is respected by each algorithm.
+Every call is recorded in a ``CommLedger`` as a typed message —
+direction, shape, dtype, payload bytes, and *wire bits* — so benchmarks
+can report rounds, op counts, bytes, and bit totals, and assert the
+paper's per-round budget (O(n + d) bits/round) is respected by each
+algorithm.  ``end_round()`` additionally marks the record-stream
+position of every round boundary (``round_marks``), so per-round and
+rounds-prefix bit totals are exact even for algorithms with non-uniform
+round structure.
+
+Both communicators accept a ``channel`` (``core.channel``): a lossy
+transform (fp16/bf16 cast, int8 stochastic-rounding quantization, top-k
+sparsification) applied to every per-machine vector upload before the
+reduction, with the transformed payload's wire bits recorded in the
+ledger.  The default identity channel leaves both the computation graph
+and the legacy ``(kind, elems, bytes, tag)`` record stream bit-identical
+to a channel-free build; scalar reductions always bypass the channel.
 
 Also here: ``collective_bytes_from_hlo`` — the dry-run HLO auditor that sums
 payload bytes of all-gather / all-reduce / reduce-scatter / all-to-all /
@@ -27,11 +40,13 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax import lax
+
+from .channel import Channel, parse_channel
 
 
 # --------------------------------------------------------------------------
@@ -40,30 +55,87 @@ from jax import lax
 
 @dataclasses.dataclass
 class CommRecord:
+    """One metered message.  The first four fields are the legacy stream
+    the conformance suites pin bit-identical across backends / engines /
+    batching; the typed tail (direction, shape, dtype, bits) is the
+    message-level accounting added for bit budgets.  ``bytes`` is always
+    the *source* payload (elems x itemsize); ``bits`` is what the payload
+    occupies on the wire after the channel transform (== bytes x 8 under
+    the identity channel)."""
+
     kind: str          # reduce_all | reduce | broadcast | all_to_all_broadcast
     elems: int         # payload element count (per machine contribution)
     bytes: int
     tag: str = ""
+    direction: str = "worker->center"   # | "worker->all"
+    shape: Optional[Tuple[int, ...]] = None   # () is a scalar; None derives
+    dtype: str = "float32"
+    bits: int = 0
+
+    def __post_init__(self):
+        if self.shape is None:
+            self.shape = (self.elems,)
+        if not self.bits:
+            self.bits = self.bytes * 8
 
 
 @dataclasses.dataclass
 class CommLedger:
     records: List[CommRecord] = dataclasses.field(default_factory=list)
     rounds: int = 0
+    # record-stream position of each round boundary: round_marks[k] ==
+    # len(records) right after round k+1 ended.  Lets per-round / first-K
+    # bit totals stay exact for non-uniform round structures.
+    round_marks: List[int] = dataclasses.field(default_factory=list)
     _round_open: bool = False
 
-    def record(self, kind: str, elems: int, itemsize: int = 4, tag: str = ""):
-        self.records.append(CommRecord(kind, int(elems),
-                                       int(elems) * itemsize, tag))
+    def record(self, kind: str, elems: int, itemsize: int = 4, tag: str = "",
+               *, shape: Optional[Tuple[int, ...]] = None,
+               dtype: str = "float32", direction: str = "worker->center",
+               bits: Optional[int] = None):
+        nbytes = int(elems) * itemsize
+        self.records.append(CommRecord(
+            kind, int(elems), nbytes, tag,
+            direction=direction,
+            shape=tuple(shape) if shape is not None else (int(elems),),
+            dtype=dtype,
+            bits=int(bits) if bits is not None else nbytes * 8))
         self._round_open = True
 
     def end_round(self):
         self.rounds += 1
+        self.round_marks.append(len(self.records))
         self._round_open = False
 
+    def replay_schedule(self, records: Sequence[CommRecord], rounds: int,
+                        marks: Sequence[int], count: int):
+        """Append a captured per-step schedule ``count`` times: the
+        record objects are shared (replay is metering, not mutation), the
+        round counter advances by ``rounds`` per repeat, and the step's
+        round-boundary marks are rebased onto this ledger's stream.  The
+        scan engine and ``execute_batch`` route their trace-once
+        schedules through here so the replayed stream — marks included —
+        is bit-identical to the per-call python-engine stream."""
+        for _ in range(count):
+            base = len(self.records)
+            self.records.extend(records)
+            self.round_marks.extend(base + m for m in marks)
+        self.rounds += rounds * count
+
     # ---- summaries -----------------------------------------------------
+    def typed_stream(self) -> List[Tuple]:
+        """The full typed record stream — legacy tuple plus the
+        bit-accounting tail — as hashable tuples.  The conformance
+        surfaces (tests, ``benchmarks/comm_bits``) compare THIS, so a
+        future field lands in every one of them at once."""
+        return [(r.kind, r.elems, r.bytes, r.bits, r.tag, tuple(r.shape),
+                 r.dtype, r.direction) for r in self.records]
+
     def total_bytes(self) -> int:
         return sum(r.bytes for r in self.records)
+
+    def total_bits(self) -> int:
+        return sum(r.bits for r in self.records)
 
     def op_counts(self) -> Dict[str, int]:
         out: Dict[str, int] = {}
@@ -73,6 +145,20 @@ class CommLedger:
 
     def bytes_per_round(self) -> float:
         return self.total_bytes() / max(1, self.rounds)
+
+    def bits_per_round(self) -> float:
+        return self.total_bits() / max(1, self.rounds)
+
+    def bits_through_round(self, k: int) -> int:
+        """Wire bits of the first ``k`` rounds, exact via ``round_marks``
+        (proportional fallback if a caller bypassed the marked paths)."""
+        if k >= self.rounds:
+            return self.total_bits()
+        if k <= 0:
+            return 0
+        if len(self.round_marks) == self.rounds:
+            return sum(r.bits for r in self.records[:self.round_marks[k - 1]])
+        return int(round(self.total_bits() * k / max(1, self.rounds)))
 
     def assert_budget(self, n: int, d: int, const: int = 8,
                       itemsize: int = 4):
@@ -92,32 +178,61 @@ class CommLedger:
 
 class LocalCommunicator:
     """Simulates m machines on host. Per-machine values are stacked on a
-    leading axis of size m. Used by reference algorithms and tests."""
+    leading axis of size m. Used by reference algorithms and tests.
 
-    def __init__(self, m: int, ledger: Optional[CommLedger] = None):
+    ``channel`` (name or ``core.channel.Channel``) is applied per machine
+    to every vector upload before the reduction; the identity default
+    skips the transform entirely, so channel-free semantics — compute
+    graph and ledger stream alike — are untouched."""
+
+    def __init__(self, m: int, ledger: Optional[CommLedger] = None,
+                 channel=None):
         self.m = m
         self.ledger = ledger if ledger is not None else CommLedger()
+        self.channel: Channel = parse_channel(channel)
+
+    def _transmit(self, x_stacked):
+        """The lossy worker->center wire, per machine (leading axis)."""
+        if self.channel.lossless:
+            return x_stacked
+        return jax.vmap(self.channel.apply)(x_stacked)
 
     def reduce_all(self, x_stacked, tag: str = "") -> jnp.ndarray:
         """ReduceAll: each machine holds x_j (stacked (m, ...)); returns the
         sum, conceptually available on every machine."""
         x_stacked = jnp.asarray(x_stacked)
-        self.ledger.record("reduce_all", x_stacked[0].size,
-                           x_stacked.dtype.itemsize, tag)
-        return jnp.sum(x_stacked, axis=0)
+        per = x_stacked[0]
+        itemsize = x_stacked.dtype.itemsize
+        self.ledger.record("reduce_all", per.size, itemsize, tag,
+                           shape=tuple(per.shape),
+                           dtype=str(x_stacked.dtype),
+                           direction="worker->center",
+                           bits=self.channel.wire_bits(per.size, itemsize))
+        return jnp.sum(self._transmit(x_stacked), axis=0)
 
     def reduce_scalar(self, x_stacked, tag: str = "") -> jnp.ndarray:
-        self.ledger.record("reduce_all", 1, 4, tag)
+        # scalars carry control quantities: never channel-transformed
+        self.ledger.record("reduce_all", 1, 4, tag, shape=(),
+                           direction="worker->center")
         return jnp.sum(x_stacked, axis=0)
 
     def all_to_all_broadcast(self, blocks_stacked, tag: str = ""):
         """Each machine broadcasts its R^{d_j} block; every machine ends up
         with all blocks. Locally this is the identity on the stacked array;
-        the ledger charges sum_j d_j = d elements."""
+        the ledger charges sum_j d_j = d elements (wire bits: m per-machine
+        messages through the channel)."""
         blocks_stacked = jnp.asarray(blocks_stacked)
+        itemsize = blocks_stacked.dtype.itemsize
+        per_elems = blocks_stacked[0].size
+        m = blocks_stacked.shape[0]
         self.ledger.record("all_to_all_broadcast", blocks_stacked.size,
-                           blocks_stacked.dtype.itemsize, tag)
-        return blocks_stacked
+                           itemsize, tag,
+                           shape=tuple(blocks_stacked.shape),
+                           dtype=str(blocks_stacked.dtype),
+                           direction="worker->all",
+                           bits=m * self.channel.wire_bits(per_elems,
+                                                           itemsize))
+        return self._transmit(blocks_stacked)
 
     def end_round(self):
         self.ledger.end_round()
@@ -129,26 +244,47 @@ class ShardMapCommunicator:
     Use inside ``shard_map``: per-machine arrays are the *local* shards (no
     stacking axis). Ledger recording happens at trace time — callers run one
     traced step per round (or multiply a one-round ledger by round count).
+    The channel is applied to the local shard (one message) before the
+    collective, mirroring the Local path's per-machine transform.
     """
 
-    def __init__(self, axis: str, ledger: Optional[CommLedger] = None):
+    def __init__(self, axis: str, ledger: Optional[CommLedger] = None,
+                 channel=None):
         self.axis = axis
         self.ledger = ledger if ledger is not None else CommLedger()
+        self.channel: Channel = parse_channel(channel)
+
+    def _transmit(self, x_local):
+        if self.channel.lossless:
+            return x_local
+        return self.channel.apply(x_local)
 
     def reduce_all(self, x_local, tag: str = "") -> jnp.ndarray:
-        self.ledger.record("reduce_all", x_local.size,
-                           x_local.dtype.itemsize, tag)
-        return lax.psum(x_local, self.axis)
+        itemsize = x_local.dtype.itemsize
+        self.ledger.record("reduce_all", x_local.size, itemsize, tag,
+                           shape=tuple(x_local.shape),
+                           dtype=str(x_local.dtype),
+                           direction="worker->center",
+                           bits=self.channel.wire_bits(x_local.size,
+                                                       itemsize))
+        return lax.psum(self._transmit(x_local), self.axis)
 
     def reduce_scalar(self, x_local, tag: str = "") -> jnp.ndarray:
-        self.ledger.record("reduce_all", 1, 4, tag)
+        self.ledger.record("reduce_all", 1, 4, tag, shape=(),
+                           direction="worker->center")
         return lax.psum(x_local, self.axis)
 
     def all_to_all_broadcast(self, block_local, tag: str = "") -> jnp.ndarray:
         """all_gather of the local R^{d_j} block -> (m, d_j) on every shard."""
+        itemsize = block_local.dtype.itemsize
         self.ledger.record("all_to_all_broadcast", block_local.size,
-                           block_local.dtype.itemsize, tag)
-        return lax.all_gather(block_local, self.axis)
+                           itemsize, tag,
+                           shape=tuple(block_local.shape),
+                           dtype=str(block_local.dtype),
+                           direction="worker->all",
+                           bits=self.channel.wire_bits(block_local.size,
+                                                       itemsize))
+        return lax.all_gather(self._transmit(block_local), self.axis)
 
     def end_round(self):
         self.ledger.end_round()

@@ -196,7 +196,8 @@ def _segment_xs(seg: Segment) -> np.ndarray:
 
 def _capture_schedule(dist, seg: Segment, carry, xs: np.ndarray):
     """One abstract trace of the step against a scratch ledger: the
-    per-round op schedule (records + rounds) this segment will replay."""
+    per-round op schedule (records + rounds + round-boundary marks) this
+    segment will replay."""
     real = dist.comm.ledger
     scratch = CommLedger()
     dist.comm.ledger = scratch
@@ -205,7 +206,7 @@ def _capture_schedule(dist, seg: Segment, carry, xs: np.ndarray):
         jax.eval_shape(lambda c, x: seg.step(dist, c, x), carry, x_abs)
     finally:
         dist.comm.ledger = real
-    return list(scratch.records), scratch.rounds
+    return list(scratch.records), scratch.rounds, list(scratch.round_marks)
 
 
 def _build_runner(dist, step: Callable, measure, history):
@@ -246,10 +247,8 @@ def _run_scan(dist, program, measure, history,
             dist.comm.ledger = ledger
         if measure is not None or history:
             outs.append(out)
-        records, rounds_per_step = session.schedules[sched_key]
-        for _ in range(seg.count):
-            ledger.records.extend(records)
-        ledger.rounds += rounds_per_step * seg.count
+        records, rounds_per_step, marks = session.schedules[sched_key]
+        ledger.replay_schedule(records, rounds_per_step, marks, seg.count)
         rounds += seg.count
     gaps = iterates = None
     if measure is not None:

@@ -125,10 +125,11 @@ class LocalDistERM:
 
     def __init__(self, prob: ERMProblem, part: FeaturePartition,
                  ledger: Optional[CommLedger] = None,
-                 backend: Optional[str] = None):
+                 backend: Optional[str] = None,
+                 channel=None):
         self.prob = prob
         self.part = part
-        self.comm = LocalCommunicator(part.m, ledger)
+        self.comm = LocalCommunicator(part.m, ledger, channel=channel)
         self.backend = resolve_oracle_backend(backend)
         self.A_stk = part.pad_blocks(part.split_columns(prob.A))  # (m,n,dmax)
         self.mask = part.mask()                                   # (m,dmax)
@@ -228,13 +229,14 @@ class ShardedDistERM:
 
     def __init__(self, A_loc, y, loss: GLMLoss, lam: float, n: int,
                  axis: str = "model", ledger: Optional[CommLedger] = None,
-                 backend: Optional[str] = None):
+                 backend: Optional[str] = None,
+                 channel=None):
         self.A_loc = A_loc
         self.y = y
         self.loss = loss
         self.lam = lam
         self.n = n
-        self.comm = ShardMapCommunicator(axis, ledger)
+        self.comm = ShardMapCommunicator(axis, ledger, channel=channel)
         self.backend = resolve_oracle_backend(backend)
         self._round_cache: dict = {}
 
@@ -305,7 +307,8 @@ def run_sharded(prob: ERMProblem, algorithm_body: Optional[Callable],
                 ledger: Optional[CommLedger] = None,
                 backend: Optional[str] = None,
                 engine: str = "python",
-                program_builder: Optional[Callable] = None):
+                program_builder: Optional[Callable] = None,
+                channel=None):
     """Legacy entry point: per-call kwargs instead of a ``RunSpec``.
 
     For registry algorithms, construct a
@@ -323,7 +326,7 @@ def run_sharded(prob: ERMProblem, algorithm_body: Optional[Callable],
         "repro.api.plan()/run()", DeprecationWarning, stacklevel=2)
     return _run_sharded(prob, algorithm_body, rounds, mesh=mesh, axis=axis,
                         ledger=ledger, backend=backend, engine=engine,
-                        program_builder=program_builder)
+                        program_builder=program_builder, channel=channel)
 
 
 def _run_sharded(prob: ERMProblem, algorithm_body: Optional[Callable],
@@ -332,7 +335,8 @@ def _run_sharded(prob: ERMProblem, algorithm_body: Optional[Callable],
                  ledger: Optional[CommLedger] = None,
                  backend: Optional[str] = None,
                  engine: str = "python",
-                 program_builder: Optional[Callable] = None):
+                 program_builder: Optional[Callable] = None,
+                 channel=None):
     """Run an algorithm under shard_map with the data matrix column-sharded
     over ``axis``.  (Machinery behind ``repro.api``'s sharded placement;
     the public ``run_sharded`` wrapper is the deprecated kwargs surface.)
@@ -384,7 +388,8 @@ def _run_sharded(prob: ERMProblem, algorithm_body: Optional[Callable],
 
     def body(A_loc, y):
         dist = ShardedDistERM(A_loc, y, prob.loss, prob.lam, prob.n,
-                              axis=axis, ledger=led, backend=backend)
+                              axis=axis, ledger=led, backend=backend,
+                              channel=channel)
         if engine == "python":
             return algorithm_body(dist, rounds)
         program = program_builder(dist, rounds)
@@ -415,17 +420,32 @@ def _run_sharded(prob: ERMProblem, algorithm_body: Optional[Callable],
     if spans:
         # Expand the trace-once schedule: each segment's single traced
         # step stream repeats `count` times, reproducing the per-round
-        # stream the python mode records bit-identically.
-        records = led.records
+        # stream — round-boundary marks included — the python mode
+        # records bit-identically.  Marks are record positions into the
+        # trace-time stream; each region's marks are rebased onto the
+        # expanded stream as the region is copied.
+        records, marks = led.records, led.round_marks
         expanded = list(records[:pre_records])
+        new_marks = [m for m in marks if m <= pre_records]
         rounds_total = pre_rounds
         prev_end = pre_records
         for start, end, r_traced, count in spans:
+            # records (and any marks) traced outside the scans, if ever
+            new_marks.extend(len(expanded) + (m - prev_end)
+                             for m in marks if prev_end < m <= start)
             expanded.extend(records[prev_end:start])
-            expanded.extend(records[start:end] * count)
+            span_records = records[start:end]
+            span_marks = [m - start for m in marks if start < m <= end]
+            for _ in range(count):
+                base = len(expanded)
+                expanded.extend(span_records)
+                new_marks.extend(base + m for m in span_marks)
             rounds_total += r_traced * count
             prev_end = end
+        new_marks.extend(len(expanded) + (m - prev_end)
+                         for m in marks if m > prev_end)
         expanded.extend(records[prev_end:])
         led.records[:] = expanded
+        led.round_marks[:] = new_marks
         led.rounds = rounds_total
     return (w[:d] if pad else w), led

@@ -50,7 +50,13 @@ from .instances import build_instance
 # Spec / record / result
 # --------------------------------------------------------------------------
 
-SCHEMA_VERSION = 2      # 2: records embed their run_spec (PR 4)
+SCHEMA_VERSION = 3      # 3: bit-level accounting + channel axis (PR 5)
+                        # 2: records embed their run_spec (PR 4)
+
+# Bits one exact f32 scalar occupies: the per-round wire floor of the
+# incremental family (one scalar ReduceAll per stochastic round; scalars
+# bypass the channel — see core.channel).
+_SCALAR_BITS = 32
 
 Grid = Union[Dict[str, Sequence], Sequence[Dict[str, object]]]
 
@@ -79,7 +85,8 @@ class SweepSpec:
     def cell_spec(self, point: Dict[str, object], algorithm: str,
                   max_rounds: Optional[int] = None,
                   backend: Optional[str] = None,
-                  engine: Optional[str] = None) -> api.RunSpec:
+                  engine: Optional[str] = None,
+                  channel: Optional[str] = None) -> api.RunSpec:
         """The RunSpec for one (grid point, algorithm) cell."""
         fixed = self.mode == "fixed_rounds"
         return api.RunSpec(
@@ -90,6 +97,7 @@ class SweepSpec:
             eps=(() if fixed else self.eps), eps_mode=self.eps_mode,
             measure=("none" if fixed else "gap"),
             backend=backend or "auto", engine=engine or "auto",
+            channel=channel or "auto",
             tag=self.name)
 
 
@@ -122,6 +130,20 @@ class SweepRecord:
     run_spec: Optional[dict] = None       # the serialized RunSpec: any row
                                           # re-executes verbatim via
                                           # api.RunSpec.from_dict(...)
+    # ---- bit-level accounting (schema 3) --------------------------------
+    channel: str = "identity"             # wire model; identity leaves the
+                                          # legacy stream bit-identical
+    bits_per_round: float = 0.0           # mean wire bits/round
+    total_bits: int = 0                   # wire bits over the full budget
+    bits_to_eps: Optional[int] = None     # wire bits of the first
+                                          # measured_rounds rounds (exact,
+                                          # via the ledger's round marks)
+    bound_bits: Optional[float] = None    # the round bound x the per-round
+                                          # payload floor at this channel's
+                                          # precision (d elems for F^{lam,L},
+                                          # one exact scalar for I^{lam,L})
+    bits_certified: Optional[bool] = None # bits_to_eps >= bound_bits on
+                                          # hard instances
 
     def to_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -135,11 +157,19 @@ class SweepResult:
 
     def summary(self) -> Dict[str, int]:
         applicable = [r for r in self.records if r.certified is not None]
+        bits_app = [r for r in self.records if r.bits_certified is not None]
         return dict(
             records=len(self.records),
             certifiable=len(applicable),
             certified=sum(1 for r in applicable if r.certified),
             failed=sum(1 for r in applicable if not r.certified),
+            bits_certifiable=len(bits_app),
+            bits_certified=sum(1 for r in bits_app if r.bits_certified),
+            bits_failed=sum(1 for r in bits_app if not r.bits_certified),
+            # union, not sum: one record can fail both ways
+            failed_records=sum(1 for r in self.records
+                               if r.certified is False
+                               or r.bits_certified is False),
         )
 
     def to_dict(self) -> dict:
@@ -163,7 +193,27 @@ def _ledger_fields(result: api.RunResult, bundle) -> dict:
                 op_counts=led.op_counts(),
                 budget_ok=bool(result.budget_ok),
                 sample_model_bytes_per_round=float(
-                    bundle.ctx.m * bundle.prob.d * 4))
+                    bundle.ctx.m * bundle.prob.d * 4),
+                channel=result.channel,
+                bits_per_round=float(led.bits_per_round()),
+                total_bits=int(led.total_bits()))
+
+
+def _bound_bits(bound_rounds: Optional[float], channel: str,
+                incremental: bool, d: int) -> Optional[float]:
+    """The round bound scaled to wire bits: Theorem K rounds, each
+    carrying at least the family's per-round payload floor at this
+    channel's precision.  Non-incremental F^{lam,L} algorithms upload a
+    full R^n / R^d vector per round (n >= d on every hard instance), so
+    the floor is one d-element message through the channel — the
+    ``d x precision`` scaling; incremental rounds carry one exact scalar
+    (channels never touch scalar reductions), so the floor is 32 bits."""
+    if bound_rounds is None:
+        return None
+    from repro.core.channel import parse_channel
+    unit = (_SCALAR_BITS if incremental
+            else parse_channel(channel).wire_bits(d, 4))
+    return float(bound_rounds) * unit
 
 
 def _cell_records(spec: SweepSpec, pl: api.ExecutionPlan,
@@ -193,11 +243,26 @@ def _cell_records(spec: SweepSpec, pl: api.ExecutionPlan,
         bound_rounds = bound.rounds if bound else None
         ratio = (measured / bound_rounds
                  if measured and bound_rounds else None)
+        bits_to_eps = (int(result.ledger.bits_through_round(measured))
+                       if measured is not None else None)
+        bound_bits = _bound_bits(bound_rounds, result.channel,
+                                 algo.incremental, bundle.prob.d)
+        if not bundle.hard or bound_bits is None:
+            bits_certified = None
+        elif bits_to_eps is not None:
+            bits_certified = bool(bits_to_eps >= bound_bits)
+        else:
+            # eps unreached: the run still certifies in bits whenever the
+            # whole metered budget already exceeds the bound
+            bits_certified = (True if base["total_bits"] >= bound_bits
+                              else None)
         records.append(SweepRecord(
             **base, eps=eps, eps_abs=eps_abs, measured_rounds=measured,
             bound_theorem=bound.theorem if bound else None,
             bound_rounds=bound_rounds, ratio=ratio,
-            certified=pl.certify(result, eps)))
+            certified=pl.certify(result, eps),
+            bits_to_eps=bits_to_eps, bound_bits=bound_bits,
+            bits_certified=bits_certified))
     return records
 
 
@@ -205,12 +270,20 @@ def run_sweep(spec: SweepSpec, max_rounds: Optional[int] = None,
               verbose: bool = False,
               backend: Optional[str] = None,
               engine: Optional[str] = None,
+              channel: Optional[str] = None,
               execute: str = "sequential") -> SweepResult:
     """``backend``/``engine`` feed every cell's RunSpec ("auto" resolves
     through ``repro.api.plan`` — kernel on TPU / einsum elsewhere, scan
     by default). Both change local scheduling only; the CommLedger is
     bit-invariant to them (tests/test_ledger_invariance.py) and
     certification outcomes must agree (benchmarks/round_engine.py).
+
+    ``channel`` feeds the fourth RunSpec axis: the wire model for
+    per-machine uploads ("auto" resolves to identity).  Unlike the other
+    axes it is *allowed* to change measurements — a lossy channel spends
+    fewer bits per round and possibly more rounds — which is exactly the
+    tradeoff ``benchmarks/comm_bits.py`` publishes; under the identity
+    channel every legacy field is unchanged record-for-record.
 
     ``execute``: ``"sequential"`` runs one compiled program per cell;
     ``"batch"`` routes all cells through ``repro.api.execute_batch``,
@@ -226,7 +299,8 @@ def run_sweep(spec: SweepSpec, max_rounds: Optional[int] = None,
             bundle = build_instance(spec.instance, **point)
             for name in spec.algorithms:
                 cell = spec.cell_spec(point, name, max_rounds=max_rounds,
-                                      backend=backend, engine=engine)
+                                      backend=backend, engine=engine,
+                                      channel=channel)
                 yield api.plan(cell, bundle=bundle)
 
     if execute == "batch":
@@ -358,6 +432,13 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                         help="DEPRECATED flag (still works): round "
                              "engine; the canonical switch is "
                              "RunSpec(engine=...) via repro.api")
+    parser.add_argument("--channel", default=None,
+                        help="wire model for per-machine uploads "
+                             "(identity/fp16/bf16/int8/topk[:rho]); "
+                             "feeds RunSpec(channel=...) for every cell. "
+                             "Presets are published under identity; a "
+                             "lossy channel legitimately changes "
+                             "measured rounds and bits")
     parser.add_argument("--no-report", action="store_true",
                         help="run and print, but write nothing")
     parser.add_argument("-q", "--quiet", action="store_true")
@@ -385,20 +466,22 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                   file=sys.stderr)
         result = run_sweep(spec, max_rounds=args.max_rounds,
                            verbose=not args.quiet, backend=args.backend,
-                           engine=args.engine,
+                           engine=args.engine, channel=args.channel,
                            execute="batch" if args.batch else "sequential")
         summ = result.summary()
-        failed += summ["failed"]
+        failed += summ["failed_records"]
         line = (f"[sweep] {name}: {summ['records']} records, "
-                f"{summ['certified']}/{summ['certifiable']} certified")
+                f"{summ['certified']}/{summ['certifiable']} certified, "
+                f"{summ['bits_certified']}/{summ['bits_certifiable']} "
+                f"bit-certified")
         if not args.no_report:
             json_path, md_path = write_report(result, out_dir)
             line += f" -> {json_path}, {md_path}"
         print(line)
     if failed:
         print(f"[sweep] CERTIFICATION FAILED for {failed} record(s): a "
-              f"measured round count fell below its lower bound",
-              file=sys.stderr)
+              f"measured round count or bit total fell below its lower "
+              f"bound", file=sys.stderr)
     return 1 if failed else 0
 
 

@@ -56,9 +56,10 @@ def test_runspec_rejects_unknown_fields_and_bad_enums():
 def test_plan_resolves_auto_axes_on_cpu(monkeypatch):
     monkeypatch.delenv(api.BACKEND_ENV, raising=False)
     monkeypatch.delenv(api.ENGINE_ENV, raising=False)
+    monkeypatch.delenv(api.CHANNEL_ENV, raising=False)
     pl = plan(RunSpec(**TINY))
-    assert (pl.placement, pl.backend, pl.engine) == \
-        ("local", "einsum", "scan")
+    assert (pl.placement, pl.backend, pl.engine, pl.channel) == \
+        ("local", "einsum", "scan", "identity")
     assert pl.measure == "gap"          # auto: eps requested
 
 
@@ -98,6 +99,7 @@ def test_core_resolvers_delegate_to_api():
     (dict(TINY, algo_kwargs=dict(zz=1)), "hyper-parameter"),
     (dict(TINY, algo_kwargs=dict(rounds=5)), "hyper-parameter"),
     (dict(TINY, backend="blas"), "oracle backend"),
+    (dict(TINY, channel="gzip"), "unknown channel"),
     (dict(TINY, instance=None), "BOTH instance and algorithm"),
 ])
 def test_plan_rejects_invalid_specs(bad, match):

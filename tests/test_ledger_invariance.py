@@ -28,8 +28,9 @@ ROUNDS = 6
 
 def _ledger_stream(dist):
     led = dist.comm.ledger
-    return led.rounds, [(r.kind, r.elems, r.bytes, r.tag)
-                        for r in led.records]
+    # the full typed stream: legacy tuple + the bit-accounting tail and
+    # the round-boundary marks all must be engine/backend-invariant
+    return led.rounds, led.round_marks, led.typed_stream()
 
 
 def _run(algo_name: str, backend: str, engine: str = "python"):
@@ -45,10 +46,11 @@ def _run(algo_name: str, backend: str, engine: str = "python"):
 @pytest.mark.parametrize("algo_name", sorted(ALGORITHM_REGISTRY))
 def test_ledger_bit_identical_across_backends(algo_name):
     streams = {be: _run(algo_name, be) for be in ORACLE_BACKENDS}
-    rounds0, records0 = streams["einsum"]
-    assert rounds0 == ROUNDS
-    for be, (rounds, records) in streams.items():
+    rounds0, marks0, records0 = streams["einsum"]
+    assert rounds0 == ROUNDS == len(marks0)
+    for be, (rounds, marks, records) in streams.items():
         assert rounds == rounds0, (algo_name, be)
+        assert marks == marks0, (algo_name, be)
         assert records == records0, (algo_name, be)
 
 
@@ -58,11 +60,58 @@ def test_ledger_bit_identical_across_engines(algo_name):
     trace-once schedule must reproduce the per-call stream exactly."""
     streams = {(be, eng): _run(algo_name, be, eng)
                for be in ORACLE_BACKENDS for eng in ENGINES}
-    rounds0, records0 = streams[("einsum", "python")]
+    rounds0, marks0, records0 = streams[("einsum", "python")]
     assert rounds0 == ROUNDS
-    for key, (rounds, records) in streams.items():
+    for key, (rounds, marks, records) in streams.items():
         assert rounds == rounds0, (algo_name, key)
+        assert marks == marks0, (algo_name, key)
         assert records == records0, (algo_name, key)
+
+
+@pytest.mark.parametrize("algo_name", sorted(ALGORITHM_REGISTRY))
+def test_byte_and_bit_totals_invariant_across_backends_and_engines(
+        algo_name):
+    """The aggregate accounting — total bytes, total wire bits, per-round
+    prefix sums — is a pure function of the algorithm, never of how it
+    executed."""
+    totals = set()
+    for be in ORACLE_BACKENDS:
+        for eng in ENGINES:
+            bundle = build_instance("random_ridge", n=24, d=32, m=4)
+            algo = get_algorithm(algo_name)
+            dist = LocalDistERM(bundle.prob, bundle.part, backend=be)
+            program = algo.program(dist, rounds=ROUNDS,
+                                   **algo.make_kwargs(bundle.ctx))
+            run_program(dist, program, engine=eng)
+            led = dist.comm.ledger
+            totals.add((led.total_bytes(), led.total_bits(),
+                        tuple(led.bits_through_round(k)
+                              for k in range(ROUNDS + 1))))
+    assert len(totals) == 1, (algo_name, totals)
+    (total_bytes, total_bits, prefix), = totals
+    assert total_bits == 8 * total_bytes      # identity channel wire
+    assert prefix[0] == 0 and prefix[-1] == total_bits
+    assert all(a <= b for a, b in zip(prefix, prefix[1:]))
+
+
+def test_byte_totals_invariant_across_batching():
+    """execute_batch replays the same trace-once schedules: every cell's
+    byte/bit totals and round marks match its sequential run exactly."""
+    from repro import api
+
+    specs = [api.RunSpec(
+        instance="thm2_chain",
+        instance_params=dict(d=24, kappa=k, lam=0.5, m=4),
+        algorithm=a, rounds=80, eps=(1e-3,))
+        for a in ("dagd", "dgd") for k in (16.0, 64.0)]
+    seq = [api.plan(s).execute() for s in specs]
+    bat = api.execute_batch([api.plan(s) for s in specs])
+    assert all(r.batched for r in bat)
+    for s, b in zip(seq, bat):
+        assert b.ledger.total_bytes() == s.ledger.total_bytes()
+        assert b.ledger.total_bits() == s.ledger.total_bits()
+        assert b.ledger.round_marks == s.ledger.round_marks
+        assert b.stream() == s.stream()
 
 
 def test_sweep_measurement_backend_invariant():
