@@ -11,6 +11,7 @@ Default mode prints ``name,us_per_call,derived`` CSV rows:
   round_engine     — python-loop vs scan-compiled per-cell wall-clock
   api_batch        — execute_batch vs sequential per-cell wall-clock
   comm_bits        — wire bits/round + bits-to-eps per lossy channel
+  serve_throughput — certification-service specs/s + cache hit rate
   roofline         — dry-run roofline terms per (arch x shape x mesh)
 
 The theorem rows are thin wrappers over ``repro.experiments`` (which
@@ -54,17 +55,19 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
             from .api_batch import main as api_batch_main
             from .comm_bits import main as comm_bits_main
             from .round_engine import main as round_engine_main
+            from .serve_throughput import main as serve_main
             re_argv = ["--out", args.out] if args.out else []
             rc = rc or round_engine_main(re_argv)
             rc = rc or api_batch_main(re_argv)
             rc = rc or comm_bits_main(re_argv)
+            rc = rc or serve_main(re_argv)
         return rc
 
     print("name,us_per_call,derived")
     from . import (api_batch, comm_bits, comm_cost, kernel_bench,
                    m_invariance, moe_dispatch_ablation, oracle_backends,
-                   round_engine, roofline, thm2_rounds, thm3_rounds,
-                   thm4_incremental)
+                   round_engine, roofline, serve_throughput, thm2_rounds,
+                   thm3_rounds, thm4_incremental)
     thm2_rounds.run()
     thm3_rounds.run()
     thm4_incremental.run()
@@ -75,6 +78,7 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     round_engine.run()
     api_batch.run()
     comm_bits.run()
+    serve_throughput.run()
     moe_dispatch_ablation.run()
     roofline.run()
     return 0

@@ -1,4 +1,4 @@
-"""Serving example: batched greedy decode with three cache disciplines.
+"""LM serving example: batched greedy decode with three cache disciplines.
 
 Shows the three serving regimes the input-shape matrix exercises:
   * full-attention KV cache (qwen-family smoke)
@@ -6,6 +6,10 @@ Shows the three serving regimes the input-shape matrix exercises:
   * recurrent O(1) state (mamba2-family smoke)
 
     PYTHONPATH=src python examples/serve_lm.py
+
+This drives ``repro.launch`` (token decoding from the model zoo).  For
+serving *certification verdicts* — continuous batching of RunSpec
+submissions — see ``repro.serve`` (``python -m repro.serve --demo 96``).
 """
 import sys, os
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

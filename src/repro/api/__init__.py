@@ -29,7 +29,7 @@ from ._resolve import (BACKEND_ENV, CHANNEL_ENV, CHANNELS, ENGINE_ENV,
 from .spec import SPEC_SCHEMA_VERSION, RunSpec
 from .plan import (ExecutionPlan, PlanError, RunResult, bound_for, plan,
                    run)
-from .batch import execute_batch
+from .batch import Cell, execute_batch, execute_group, prepare_cell
 
 __all__ = [
     "BACKEND_ENV", "CHANNEL_ENV", "CHANNELS", "ENGINE_ENV", "ENGINES",
@@ -38,5 +38,5 @@ __all__ = [
     "resolve_oracle_backend", "resolve_placement",
     "SPEC_SCHEMA_VERSION", "RunSpec",
     "ExecutionPlan", "PlanError", "RunResult", "bound_for", "plan", "run",
-    "execute_batch",
+    "Cell", "execute_batch", "execute_group", "prepare_cell",
 ]

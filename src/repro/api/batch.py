@@ -36,6 +36,18 @@ sequential stream (``benchmarks/api_batch.py`` gates this, along with
 certification-verdict identity).  Gap series agree with the sequential
 scan path up to batched-``dot_general`` reassociation (same ±1-round
 eps-crossing tolerance the TPU kernels get).
+
+**Reusable pieces.**  The splitting and the group runner are public —
+``prepare_cell(plan) -> Cell | None``, ``Cell.group_key()``, and
+``execute_group(cells, runner_cache=...)`` — so long-lived callers
+(``repro.serve``, the continuous-batching certification service) can
+coalesce cells by the same key and keep the jitted group runners alive
+across calls.  A ``runner_cache`` entry is sound to reuse for any batch
+sharing the group key: the key covers the jaxpr structure text and every
+const's shape/dtype, so evaluating a later batch's consts through the
+first-seen structure performs the identical computation.
+``execute_batch`` below stays the one-shot front door built from the
+same pieces.
 """
 from __future__ import annotations
 
@@ -87,7 +99,10 @@ def _segment_xs(seg: Segment) -> np.ndarray:
 
 
 @dataclasses.dataclass
-class _Cell:
+class Cell:
+    """One batchable certification cell: a plan traced into pure
+    structure + hoisted consts, ready to group and ``vmap``."""
+
     plan: ExecutionPlan
     dist: object
     program: object
@@ -95,6 +110,17 @@ class _Cell:
     meas: Optional[_Converted]
 
     def group_key(self) -> tuple:
+        """The grouping axis: cells batch iff their keys are equal.
+
+        Composition (pinned by ``tests/test_api.py``): the leading
+        components are the explicit axes — algorithm name, oracle
+        backend, channel, round budget — followed by the per-segment
+        (jaxpr structure text, scan length, xs shape/dtype, const
+        shapes/dtypes) and the measurement structure.  The placement and
+        engine axes never appear because only local/scan plans produce a
+        Cell at all (``prepare_cell`` returns None otherwise).  A future
+        execution axis MUST land here, or incompatible cells would
+        silently merge."""
         segs = tuple(
             (conv.structure, seg.count, _segment_xs(seg).shape,
              _segment_xs(seg).dtype.str,
@@ -108,7 +134,7 @@ class _Cell:
                 self.plan.spec.rounds, segs, meas)
 
 
-def _prepare(plan: ExecutionPlan) -> Optional[_Cell]:
+def prepare_cell(plan: ExecutionPlan) -> Optional[Cell]:
     """Trace a plan's cell into structure + consts; None if unbatchable."""
     if plan.resolution_only or plan.placement != "local" \
             or plan.engine != "scan":
@@ -143,28 +169,42 @@ def _prepare(plan: ExecutionPlan) -> Optional[_Cell]:
                                 "measurement must stay oracle-free")
     finally:
         dist.comm.ledger = real
-    return _Cell(plan=plan, dist=dist, program=program, steps=steps,
-                 meas=meas)
+    return Cell(plan=plan, dist=dist, program=program, steps=steps,
+                meas=meas)
 
 
 # --------------------------------------------------------------------------
 # Group execution
 # --------------------------------------------------------------------------
 
-def _stack_consts(cells: Sequence[_Cell], pick) -> list:
+def _stack_consts(cells: Sequence[Cell], pick) -> list:
     convs = [pick(c) for c in cells]
     n = len(convs[0].consts)
     return [jnp.stack([jnp.asarray(conv.consts[k]) for conv in convs])
             for k in range(n)]
 
 
-def _execute_group(cells: List[_Cell]) -> List[RunResult]:
+def execute_group(cells: List[Cell],
+                  runner_cache: Optional[dict] = None) -> List[RunResult]:
+    """Run a group of cells sharing one ``group_key`` as one ``vmap``-ed
+    scan program per distinct segment structure.
+
+    ``runner_cache`` (mutable mapping, owned by the caller) keeps the
+    jitted group runners alive across calls: keys are
+    ``(segment jaxpr structure, shared_xs)`` — stable across batches,
+    unlike the per-call trace objects — so a long-lived service can hand
+    in the same dict for every batch with this group key and pay the
+    trace + compile once per (structure, batch width).  Per-cell consts
+    are stacked fresh per call (they carry the data); a cached runner is
+    pure structure.  Safe to share only between batches with EQUAL group
+    keys — the key pins structure text and const shapes/dtypes."""
     C = len(cells)
     progs = [c.program for c in cells]
     carry = jax.tree.map(lambda *xs: jnp.stack(xs),
                          *[p.init for p in progs])
     meas0 = cells[0].meas
-    runners, consts_cache, outs = {}, {}, []
+    runners = runner_cache if runner_cache is not None else {}
+    consts_cache, outs = {}, []
     mconsts = _stack_consts(cells, lambda c: c.meas) if meas0 else []
     for s, seg0 in enumerate(progs[0].segments):
         conv0 = cells[0].steps[s]
@@ -173,11 +213,16 @@ def _execute_group(cells: List[_Cell]) -> List[RunResult]:
         # every cell scans the same xs — share one copy and broadcast it
         # across the vmap instead of scanning a (count, C) stack
         shared_xs = all(np.array_equal(x, cell_xs[0]) for x in cell_xs[1:])
-        skey = (id(conv0.pure), shared_xs)
-        if skey not in consts_cache:
-            consts_cache[skey] = _stack_consts(cells, lambda c: c.steps[s])
-        consts = consts_cache[skey]
-        if skey not in runners:
+        # consts are per-call values, keyed by trace identity (two steps
+        # with identical structure may hoist different const VALUES);
+        # runners are pure structure, keyed by the structure text so they
+        # survive across calls through runner_cache
+        ckey = (id(conv0), shared_xs)
+        if ckey not in consts_cache:
+            consts_cache[ckey] = _stack_consts(cells, lambda c: c.steps[s])
+        consts = consts_cache[ckey]
+        rkey = (conv0.structure, shared_xs)
+        if rkey not in runners:
             pure_step = conv0.pure
             pure_meas = meas0.pure if meas0 else None
 
@@ -193,9 +238,9 @@ def _execute_group(cells: List[_Cell]) -> List[RunResult]:
 
                 return lax.scan(body, carry, xs)
 
-            runners[skey] = jax.jit(runner_fn)
+            runners[rkey] = jax.jit(runner_fn)
         xs = cell_xs[0] if shared_xs else np.stack(cell_xs, axis=1)
-        carry, out = runners[skey](consts, mconsts, carry, jnp.asarray(xs))
+        carry, out = runners[rkey](consts, mconsts, carry, jnp.asarray(xs))
         if meas0 is not None:
             outs.append(out)                        # (count, C)
     gaps_all = np.asarray(jnp.concatenate(outs, axis=0)) if outs else None
@@ -229,7 +274,7 @@ def execute_batch(plans: Sequence[ExecutionPlan]) -> List[RunResult]:
     that cannot batch (python engine, sharded placement, structural
     mismatch, singleton groups) execute sequentially — batching is a
     performance optimization, never a semantic one."""
-    cells: List[Optional[_Cell]] = [_prepare(pl) for pl in plans]
+    cells: List[Optional[Cell]] = [prepare_cell(pl) for pl in plans]
     groups: dict = {}
     for i, cell in enumerate(cells):
         if cell is not None:
@@ -239,7 +284,7 @@ def execute_batch(plans: Sequence[ExecutionPlan]) -> List[RunResult]:
     for key, idxs in groups.items():
         if len(idxs) < 2:
             continue
-        for i, res in zip(idxs, _execute_group([cells[i] for i in idxs])):
+        for i, res in zip(idxs, execute_group([cells[i] for i in idxs])):
             results[i] = res
     for i, res in enumerate(results):
         if res is None:

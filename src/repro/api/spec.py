@@ -28,6 +28,19 @@ _SPEC_COMPAT_VERSIONS = (1, SPEC_SCHEMA_VERSION)
 _EPS_MODES = ("abs", "rel")
 _MEASURES = ("auto", "gap", "none")
 
+# Fields that name a point on an execution/selection axis.  The axis
+# VALUES are validated later (``plan`` owns the vocabularies — e.g. the
+# channel grammar lives in core.channel), but the TYPE is pinned here so
+# a wrong-typed payload dies with a clear ValueError at load time, never
+# a TypeError from deep inside the resolvers.
+_STR_FIELDS = ("instance", "algorithm", "eps_mode", "measure", "placement",
+               "backend", "engine", "channel", "tag")
+
+
+def _type_error(name: str, value, expected: str) -> ValueError:
+    return ValueError(f"RunSpec field {name!r} must be {expected}; got "
+                      f"{type(value).__name__} ({value!r})")
+
 
 def _plain(value):
     """Recursively coerce numpy scalars/arrays (grid machinery leaks
@@ -84,13 +97,38 @@ class RunSpec:
     tag: str = ""
 
     def __post_init__(self):
-        object.__setattr__(self, "instance_params",
-                           _plain(dict(self.instance_params)))
-        object.__setattr__(self, "algo_kwargs",
-                           _plain(dict(self.algo_kwargs)))
-        object.__setattr__(self, "eps",
-                           tuple(float(e) for e in self.eps))
-        object.__setattr__(self, "rounds", int(self.rounds))
+        # Every coercion failure below is a ValueError naming the field:
+        # specs arrive over the wire (repro.serve, embedded run_spec
+        # records), so a wrong-typed payload must be a clear rejection,
+        # never a TypeError traceback from inside a coercion.
+        for name in _STR_FIELDS:
+            value = getattr(self, name)
+            if value is not None and not isinstance(value, str):
+                raise _type_error(name, value, "a string"
+                                  + (" or null" if name in
+                                     ("instance", "algorithm") else ""))
+        for name in ("instance_params", "algo_kwargs"):
+            value = getattr(self, name)
+            if not isinstance(value, dict):
+                raise _type_error(name, value, "an object/dict")
+            object.__setattr__(self, name, _plain(dict(value)))
+        if isinstance(self.eps, (str, bytes)) or not hasattr(self.eps,
+                                                             "__iter__"):
+            raise _type_error("eps", self.eps, "a list of numbers")
+        try:
+            object.__setattr__(self, "eps",
+                               tuple(float(e) for e in self.eps))
+        except (TypeError, ValueError):
+            raise _type_error("eps", self.eps, "a list of numbers") \
+                from None
+        try:
+            object.__setattr__(self, "rounds", int(self.rounds))
+        except (TypeError, ValueError):
+            raise _type_error("rounds", self.rounds, "an integer") \
+                from None
+        if not isinstance(self.check_budget, (bool, int, np.bool_)):
+            raise _type_error("check_budget", self.check_budget,
+                              "a boolean")
         if self.eps_mode not in _EPS_MODES:
             raise ValueError(f"eps_mode {self.eps_mode!r}; expected one of "
                              f"{_EPS_MODES}")
@@ -107,6 +145,9 @@ class RunSpec:
 
     @classmethod
     def from_dict(cls, d: dict) -> "RunSpec":
+        if not isinstance(d, dict):
+            raise ValueError(f"a RunSpec payload must be a JSON object/"
+                             f"dict; got {type(d).__name__}")
         d = dict(d)
         version = d.pop("schema_version", SPEC_SCHEMA_VERSION)
         if version not in _SPEC_COMPAT_VERSIONS:
@@ -125,7 +166,11 @@ class RunSpec:
 
     @classmethod
     def from_json(cls, text: str) -> "RunSpec":
-        return cls.from_dict(json.loads(text))
+        try:
+            payload = json.loads(text)
+        except json.JSONDecodeError as e:
+            raise ValueError(f"malformed RunSpec JSON: {e}") from None
+        return cls.from_dict(payload)
 
     def replace(self, **changes) -> "RunSpec":
         return dataclasses.replace(self, **changes)

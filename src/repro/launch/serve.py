@@ -1,6 +1,13 @@
-"""Serving driver: batched greedy decoding against a KV/state cache.
+"""LM serving driver: batched greedy decoding against a KV/state cache.
 
 ``python -m repro.launch.serve --arch mamba2-780m --smoke --tokens 32``
+
+Not to be confused with ``repro.serve`` (``python -m repro.serve``) —
+the *certification* service, which continuously batches RunSpec
+submissions into grouped certification runs.  This module serves tokens
+from one model of the zoo; that one serves communication-bound verdicts
+for many specs.  See ``examples/serve_lm.py`` vs
+``docs/architecture.md#certification-service``.
 """
 from __future__ import annotations
 

@@ -1,0 +1,47 @@
+"""Certification-as-a-service: a continuous-batching RunSpec server.
+
+This package turns the one-shot batch machinery of ``repro.api`` into a
+long-lived serving layer — the "millions of users" direction of the
+roadmap.  RunSpec JSON payloads stream in; verdicts + ledger summaries
+stream out; in between:
+
+    submission queue     repro.serve.queue      admission control, spec
+                                                deserialization, eager
+                                                plan-time validation,
+                                                plan -> Cell splitting
+    coalescing scheduler repro.serve.scheduler  pools cells by group_key
+                                                (jaxpr structure x
+                                                backend x channel x
+                                                rounds), flushes on
+                                                max_batch or deadline
+    compiled-program     repro.serve.cache      LRU over group keys; the
+    cache                                       jitted group runners
+                                                survive across batches,
+                                                hit/miss == compile
+                                                avoided/paid
+    result stream        repro.serve.service    verdict per eps + wire
+                                                bits per spec, per-client
+                                                submission order
+
+Not to be confused with ``repro.launch.serve`` — the LM token-decoding
+driver (KV-cache batched greedy decode for the model zoo).  That serves
+*tokens from one model*; this serves *certification verdicts for many
+RunSpecs*, and only this one speaks the paper's communication-bound
+machinery.
+
+CLI:  ``PYTHONPATH=src python -m repro.serve --demo 96``
+"""
+from .cache import CacheStats, ProgramCache
+from .queue import (PendingRun, QueueFullError, SpecError, SubmissionQueue,
+                    parse_runspec)
+from .scheduler import Batch, CoalescingScheduler
+from .service import CertificationService, ResultEnvelope, replay_trace
+from .workload import Arrival, DEFAULT_STRUCTURES, spec_pool, synthetic_trace
+
+__all__ = [
+    "Arrival", "Batch", "CacheStats", "CertificationService",
+    "CoalescingScheduler", "DEFAULT_STRUCTURES", "PendingRun",
+    "ProgramCache", "QueueFullError", "ResultEnvelope", "SpecError",
+    "SubmissionQueue", "parse_runspec", "replay_trace", "spec_pool",
+    "synthetic_trace",
+]

@@ -1,0 +1,91 @@
+"""Compiled-program cache: LRU over group keys, hit/miss accounted.
+
+One entry per ``group_key`` holds the jitted group runners
+(``repro.api.execute_group``'s ``runner_cache``) plus the set of batch
+widths already compiled.  An execution is a **hit** iff the entry was
+present AND the batch width was seen before — exactly the condition
+under which no new XLA compile is paid (jit re-specializes per width;
+the runner object itself is reused for free).  Counting it this way
+keeps the published hit rate an honest proxy for "compiles avoided",
+which is what ``benchmarks/serve_throughput.py`` gates.
+
+Eviction is LRU over entries: touching a key moves it to the tail;
+exceeding ``capacity`` drops the head (its runners and their compiled
+executables become garbage; a later batch with that key re-traces and
+recompiles, accounted as a miss).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import Set, Tuple
+
+
+@dataclasses.dataclass
+class CacheEntry:
+    runners: dict = dataclasses.field(default_factory=dict)
+    widths: Set[int] = dataclasses.field(default_factory=set)
+    uses: int = 0
+
+
+@dataclasses.dataclass
+class CacheStats:
+    hits: int
+    misses: int
+    evictions: int
+    size: int
+    capacity: int
+
+    @property
+    def executions(self) -> int:
+        return self.hits + self.misses
+
+    @property
+    def hit_rate(self) -> float:
+        return self.hits / max(1, self.executions)
+
+    def to_dict(self) -> dict:
+        return dict(hits=self.hits, misses=self.misses,
+                    evictions=self.evictions, size=self.size,
+                    capacity=self.capacity,
+                    hit_rate=round(self.hit_rate, 4))
+
+
+class ProgramCache:
+    def __init__(self, capacity: int = 32):
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1; got {capacity}")
+        self.capacity = int(capacity)
+        self._entries: "OrderedDict[tuple, CacheEntry]" = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def lookup(self, key: tuple, width: int) -> Tuple[CacheEntry, bool]:
+        """The entry for ``key`` (created if absent, LRU-evicting) and
+        whether this (key, width) execution is a compile-free hit."""
+        entry = self._entries.get(key)
+        hit = entry is not None and width in entry.widths
+        if entry is None:
+            entry = CacheEntry()
+            self._entries[key] = entry
+            while len(self._entries) > self.capacity:
+                self._entries.popitem(last=False)
+                self.evictions += 1
+        self._entries.move_to_end(key)
+        entry.widths.add(width)
+        entry.uses += 1
+        if hit:
+            self.hits += 1
+        else:
+            self.misses += 1
+        return entry, hit
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def stats(self) -> CacheStats:
+        return CacheStats(hits=self.hits, misses=self.misses,
+                          evictions=self.evictions,
+                          size=len(self._entries),
+                          capacity=self.capacity)

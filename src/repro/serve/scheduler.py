@@ -1,0 +1,92 @@
+"""Continuous-batching coalescer: pending runs -> due batches.
+
+Arriving ``PendingRun``s are pooled by their cell's ``group_key()`` —
+the same key ``repro.api.execute_batch`` groups by (jaxpr structure x
+backend x channel x rounds; placement/engine never reach the pool, see
+``prepare_cell``).  A pooled group is released as a batch when either
+
+  * it reaches ``max_batch`` width (count-based flush: under heavy
+    traffic every batch is full and the compiled program is reused at a
+    fixed width), or
+  * its oldest member has waited ``max_wait`` (the coalescing deadline:
+    a lone spec is never parked forever waiting for company), or
+  * the caller drains (shutdown / end of trace).
+
+Unbatchable runs (``cell is None``) bypass the pool entirely and come
+back as immediately-due singleton batches on the sequential path.
+
+Everything is driven by caller-supplied ``now`` values — the scheduler
+never reads a wall clock — so a replayed arrival trace produces the
+identical batch sequence every time (the soak test leans on this).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import List, Optional
+
+from .queue import PendingRun
+
+
+@dataclasses.dataclass
+class Batch:
+    """One unit of execution: ``grouped`` batches share a group key and
+    run through ``repro.api.execute_group``; sequential ones run their
+    plan directly."""
+
+    runs: List[PendingRun]
+    key: Optional[tuple] = None       # group key; None => sequential
+
+    @property
+    def grouped(self) -> bool:
+        return self.key is not None
+
+    @property
+    def width(self) -> int:
+        return len(self.runs)
+
+
+class CoalescingScheduler:
+    def __init__(self, max_batch: int = 8, max_wait: float = 0.05):
+        if max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1; got {max_batch}")
+        self.max_batch = int(max_batch)
+        self.max_wait = float(max_wait)
+        # insertion-ordered so equal-deadline groups release in first-
+        # arrival order — determinism, not fairness tuning
+        self._pool: "OrderedDict[tuple, List[PendingRun]]" = OrderedDict()
+        self._sequential: List[PendingRun] = []
+
+    @property
+    def pending(self) -> int:
+        return (sum(len(v) for v in self._pool.values())
+                + len(self._sequential))
+
+    def add(self, run: PendingRun) -> None:
+        if run.cell is None:
+            self._sequential.append(run)
+        else:
+            self._pool.setdefault(run.cell.group_key(), []).append(run)
+
+    def due(self, now: float, flush: bool = False) -> List[Batch]:
+        """Release every batch that is ready at ``now`` (all of them,
+        ``max_batch``-sized, when ``flush``).  Deterministic: release
+        order is pool insertion order, members in arrival order."""
+        batches: List[Batch] = [Batch(runs=[r], key=None)
+                                for r in self._sequential]
+        self._sequential = []
+        for key in list(self._pool):
+            waiting = self._pool[key]
+            while len(waiting) >= self.max_batch:
+                batches.append(Batch(runs=waiting[:self.max_batch],
+                                     key=key))
+                waiting = waiting[self.max_batch:]
+            if waiting and (flush or
+                            now - waiting[0].arrival >= self.max_wait):
+                batches.append(Batch(runs=waiting, key=key))
+                waiting = []
+            if waiting:
+                self._pool[key] = waiting
+            else:
+                del self._pool[key]
+        return batches

@@ -1,0 +1,203 @@
+"""The certification service: queue -> coalesce -> compiled cache -> stream.
+
+``CertificationService`` wires the admission queue, the continuous-
+batching scheduler, and the compiled-program cache around the reusable
+``repro.api`` batch machinery:
+
+    submit(payload)  -> ticket        (validate, plan, trace the cell)
+    step(now)        -> [envelope]    (execute every batch due at `now`)
+    drain(now)       -> [envelope]    (flush everything still pending)
+
+Grouped batches run through ``repro.api.execute_group`` with this
+service's per-group-key runner cache, so the trace + XLA compile is paid
+once per (group structure, batch width) and every later batch of that
+shape is a cache hit.  Unbatchable plans (python engine, sharded
+placement) execute on the sequential ``ExecutionPlan.execute`` path —
+the service never changes what a spec computes, only when and with whom
+it is compiled (the soak test and ``benchmarks/serve_throughput.py``
+gate verdict + typed-ledger identity against direct execution).
+
+Results stream back as ``ResultEnvelope``s — verdict per eps threshold
+plus the ledger summary (rounds, payload bytes, wire bits).  Within a
+client the stream preserves submission order: a client's spec that lands
+in a slow group never overtakes its earlier submissions (per-client
+reorder buffer, released by sequence number).
+
+The service never reads a wall clock; every method takes ``now``.  Real
+deployments pass ``time.monotonic()``, tests and benchmarks pass a
+synthetic trace — the scheduling decisions are identical either way.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+from .. import api
+from .cache import ProgramCache
+from .queue import PendingRun, SubmissionQueue
+from .scheduler import Batch, CoalescingScheduler
+
+
+@dataclasses.dataclass
+class ResultEnvelope:
+    """One served verdict.  ``result`` is the full in-process RunResult
+    (tests and benchmarks compare its ledger/iterate against direct
+    execution); ``to_dict()`` is the wire shape — summaries only."""
+
+    ticket: str
+    client_id: str
+    seq: int
+    spec: api.RunSpec
+    batched: bool                     # ran in a coalesced group
+    cache_hit: bool                   # compile-free (key + width seen)
+    width: int                        # batch width it executed at
+    arrival: float
+    completed: float
+    verdicts: List[dict]              # per eps: measured/bound/certified
+    result: api.RunResult
+
+    @property
+    def latency(self) -> float:
+        return self.completed - self.arrival
+
+    def to_dict(self) -> dict:
+        led = self.result.ledger
+        return dict(
+            status="ok", ticket=self.ticket, client_id=self.client_id,
+            seq=self.seq, spec=self.spec.to_dict(), batched=self.batched,
+            cache_hit=self.cache_hit, width=self.width,
+            latency=round(self.latency, 6), verdicts=self.verdicts,
+            budget_ok=self.result.budget_ok,
+            ledger=dict(rounds=led.rounds,
+                        total_bytes=led.total_bytes(),
+                        total_bits=led.total_bits(),
+                        bits_per_round=round(led.bits_per_round(), 2),
+                        op_counts=led.op_counts()))
+
+
+class CertificationService:
+    def __init__(self, max_batch: int = 8, max_wait: float = 0.05,
+                 cache_capacity: int = 32, max_depth: int = 1024):
+        self.queue = SubmissionQueue(max_depth=max_depth)
+        self.scheduler = CoalescingScheduler(max_batch=max_batch,
+                                             max_wait=max_wait)
+        self.cache = ProgramCache(capacity=cache_capacity)
+        self.batches = 0
+        self.fallbacks = 0
+        self.completed = 0
+        # per-client reorder buffers: release envelopes strictly in
+        # submission (seq) order so a client's stream never reorders
+        self._next_seq: Dict[str, int] = {}
+        self._held: Dict[str, Dict[int, ResultEnvelope]] = {}
+
+    # ---- intake ----------------------------------------------------------
+    def submit(self, payload, client_id: str = "anon",
+               now: float = 0.0) -> str:
+        """Admit one RunSpec payload; returns its ticket.  Raises
+        ``SpecError``/``PlanError`` (ValueError) on payloads that cannot
+        run and ``QueueFullError`` under admission control — always
+        before the spec reaches a batch."""
+        run = self.queue.admit(payload, client_id=client_id, now=now)
+        self.scheduler.add(run)
+        return run.ticket
+
+    @property
+    def pending(self) -> int:
+        return self.scheduler.pending
+
+    # ---- execution -------------------------------------------------------
+    def step(self, now: float) -> List[ResultEnvelope]:
+        """Execute every batch due at ``now``; returns the envelopes
+        released by the per-client reorder buffers (submission order
+        within each client)."""
+        return self._run_batches(self.scheduler.due(now), now)
+
+    def drain(self, now: float) -> List[ResultEnvelope]:
+        """Flush and execute everything still pending."""
+        return self._run_batches(self.scheduler.due(now, flush=True), now)
+
+    def _run_batches(self, batches: List[Batch],
+                     now: float) -> List[ResultEnvelope]:
+        released: List[ResultEnvelope] = []
+        for batch in batches:
+            if batch.grouped:
+                entry, hit = self.cache.lookup(batch.key, batch.width)
+                results = api.execute_group(
+                    [r.cell for r in batch.runs],
+                    runner_cache=entry.runners)
+                self.batches += 1
+            else:
+                results = [r.plan.execute() for r in batch.runs]
+                hit = False
+                self.fallbacks += len(batch.runs)
+            for run, result in zip(batch.runs, results):
+                released.extend(self._complete(run, result, batch, hit,
+                                               now))
+        return released
+
+    def _complete(self, run: PendingRun, result: api.RunResult,
+                  batch: Batch, cache_hit: bool,
+                  now: float) -> List[ResultEnvelope]:
+        env = ResultEnvelope(
+            ticket=run.ticket, client_id=run.client_id, seq=run.seq,
+            spec=run.spec, batched=batch.grouped, cache_hit=cache_hit,
+            width=batch.width, arrival=run.arrival, completed=now,
+            verdicts=self._verdicts(run.plan, result), result=result)
+        run.plan.release()            # drop the cell's data copies
+        run.cell = None
+        self.queue.complete()
+        self.completed += 1
+        # reorder-buffer release
+        held = self._held.setdefault(run.client_id, {})
+        held[run.seq] = env
+        nxt = self._next_seq.get(run.client_id, 0)
+        out: List[ResultEnvelope] = []
+        while nxt in held:
+            out.append(held.pop(nxt))
+            nxt += 1
+        self._next_seq[run.client_id] = nxt
+        return out
+
+    @staticmethod
+    def _verdicts(pl: api.ExecutionPlan, result: api.RunResult) -> List[dict]:
+        out = []
+        for eps in pl.spec.eps:
+            eps_abs = pl.eps_abs(eps)
+            bound = pl.bound(eps_abs)
+            out.append(dict(
+                eps=eps, measured_rounds=result.measured_rounds(eps_abs),
+                bound_rounds=bound.rounds if bound else None,
+                certified=pl.certify(result, eps)))
+        return out
+
+    # ---- introspection ---------------------------------------------------
+    def stats(self) -> dict:
+        return dict(admitted=self.queue.admitted,
+                    rejected=self.queue.rejected,
+                    completed=self.completed,
+                    pending=self.pending,
+                    batches=self.batches,
+                    fallbacks=self.fallbacks,
+                    cache=self.cache.stats().to_dict())
+
+
+def replay_trace(service: CertificationService, arrivals,
+                 on_reject=None) -> List[ResultEnvelope]:
+    """Drive a service through an arrival trace (objects with ``t``,
+    ``client_id``, ``spec`` — see ``repro.serve.workload``) on the
+    trace's own clock: step at each arrival time, then drain.  Fully
+    deterministic for a fixed trace.  Rejections go to ``on_reject(
+    arrival, error)`` when given, else re-raise."""
+    envelopes: List[ResultEnvelope] = []
+    last = 0.0
+    for a in arrivals:
+        envelopes.extend(service.step(a.t))
+        last = a.t
+        try:
+            service.submit(a.spec, client_id=a.client_id, now=a.t)
+        except (ValueError, RuntimeError) as e:
+            if on_reject is None:
+                raise
+            on_reject(a, e)
+    envelopes.extend(service.drain(last))
+    return envelopes

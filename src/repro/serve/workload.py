@@ -1,0 +1,68 @@
+"""Synthetic heavy-traffic workloads for the certification service.
+
+A trace is a deterministic list of ``Arrival``s: timestamp, client id,
+RunSpec.  Specs are drawn from a small pool per *structure* — an
+(algorithm, channel) pair over one instance shape, i.e. one
+``group_key`` once planned — so a trace exercises exactly the mix a
+continuous-batching scheduler is built for: many concurrent clients,
+few distinct compiled programs, arbitrary interleaving.  Everything is
+seeded; the same (seed, sizes) produce the same trace byte-for-byte,
+which is what lets ``tests/test_serve.py`` assert exact cache counters
+and ``benchmarks/serve_throughput.py`` gate the hit-rate floor.
+"""
+from __future__ import annotations
+
+import dataclasses
+import random
+from typing import List, Sequence, Tuple
+
+from .. import api
+
+
+# (algorithm, channel): each pair traces to a distinct group_key (the
+# channel both changes the upload graph and is an explicit key axis)
+DEFAULT_STRUCTURES: Tuple[Tuple[str, str], ...] = (
+    ("dagd", "identity"),
+    ("dgd", "identity"),
+    ("dagd", "fp16"),
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class Arrival:
+    t: float
+    client_id: str
+    spec: api.RunSpec
+
+
+def spec_pool(structures: Sequence[Tuple[str, str]] = DEFAULT_STRUCTURES,
+              kappas: Sequence[float] = (8.0, 16.0, 32.0, 64.0),
+              d: int = 12, m: int = 2, rounds: int = 30,
+              eps: Tuple[float, ...] = (1e-2,)) -> List[List[api.RunSpec]]:
+    """One list of distinct specs per structure: same shape/budget (one
+    group key), different data (the kappa grid)."""
+    return [[api.RunSpec(
+        instance="thm2_chain",
+        instance_params=dict(d=d, kappa=float(k), lam=0.5, m=m),
+        algorithm=algo, rounds=rounds, eps=eps, channel=channel,
+        tag=f"serve-{algo}-{channel}")
+        for k in kappas]
+        for algo, channel in structures]
+
+
+def synthetic_trace(n_per_structure: int = 64, seed: int = 0,
+                    dt: float = 1e-3, clients: int = 4,
+                    pools: Sequence[Sequence[api.RunSpec]] = None,
+                    **pool_kwargs) -> List[Arrival]:
+    """A dense shuffled trace: ``n_per_structure`` arrivals per
+    structure, inter-arrival ``dt``, clients assigned round-robin after
+    the shuffle so every client's stream mixes structures."""
+    if pools is None:
+        pools = spec_pool(**pool_kwargs)
+    specs: List[api.RunSpec] = []
+    for pool in pools:
+        specs.extend(pool[i % len(pool)] for i in range(n_per_structure))
+    rng = random.Random(seed)
+    rng.shuffle(specs)
+    return [Arrival(t=i * dt, client_id=f"c{i % clients}", spec=spec)
+            for i, spec in enumerate(specs)]

@@ -231,3 +231,53 @@ def test_sweep_records_embed_reexecutable_spec():
     assert res.measured_rounds(rec.eps_abs) == rec.measured_rounds
     assert res.ledger.rounds == rec.ledger_rounds
     assert res.ledger.op_counts() == rec.op_counts
+
+
+# --------------------------------------------------------------------------
+# group_key composition (regression pin for the serving layer)
+# --------------------------------------------------------------------------
+
+def test_group_key_composition_partitions_the_axes():
+    """Pin what ``Cell.group_key`` is made of.  The continuous-batching
+    scheduler (``repro.serve``) pools submissions by this key, so a
+    change in its composition silently changes which specs may share a
+    compiled program: the leading components must stay
+    (algorithm, backend, channel, rounds), placement/engine must never
+    reach a key (unbatchable plans yield no cell), and a mixed batch
+    must partition exactly as pinned here."""
+    mixed = dict(
+        k16=RunSpec(**TINY),
+        k64=RunSpec(**{**TINY, "instance_params":
+                       dict(d=24, kappa=64.0, lam=0.5, m=4)}),
+        kernel=RunSpec(**TINY, backend="kernel"),
+        fp16=RunSpec(**TINY, channel="fp16"),
+        short=RunSpec(**{**TINY, "rounds": 90}),
+        python=RunSpec(**TINY, engine="python"),
+        sharded=RunSpec(instance="random_ridge",
+                        instance_params=dict(n=16, d=12, m=1),
+                        algorithm="dagd", rounds=8, measure="none",
+                        placement="sharded"),
+    )
+    cells = {name: api.prepare_cell(plan(s)) for name, s in mixed.items()}
+
+    # placement/engine never reach the pool: those plans are sequential
+    assert cells["python"] is None and cells["sharded"] is None
+
+    keys = {n: c.group_key() for n, c in cells.items() if c is not None}
+    # same structure, different data -> same key (the whole point)
+    assert keys["k16"] == keys["k64"]
+    # each remaining axis, and the round budget, splits the key
+    algo, backend, channel, rounds = keys["k16"][:4]
+    assert (algo, backend, channel, rounds) == \
+        ("dagd", "einsum", "identity", 120)
+    assert keys["kernel"][:4] == ("dagd", "kernel", "identity", 120)
+    assert keys["fp16"][:4] == ("dagd", "einsum", "fp16", 120)
+    assert keys["short"][:4] == ("dagd", "einsum", "identity", 90)
+
+    # the induced partition of the mixed batch, exactly
+    groups = {}
+    for name, cell in cells.items():
+        if cell is not None:
+            groups.setdefault(cell.group_key(), []).append(name)
+    partition = sorted(sorted(g) for g in groups.values())
+    assert partition == [["fp16"], ["k16", "k64"], ["kernel"], ["short"]]

@@ -1,0 +1,252 @@
+"""Certification service: unit tests + deterministic load/soak.
+
+Everything runs on the injected clock — the service never reads wall
+time — so the soak trace produces the identical batch sequence, cache
+counters, and envelope stream on every run (CI replays it three times
+back-to-back to enforce exactly that).
+"""
+import numpy as np
+import pytest
+
+from repro import api
+from repro.serve import (
+    Arrival, CertificationService, CoalescingScheduler, ProgramCache,
+    QueueFullError, SpecError, SubmissionQueue, replay_trace, spec_pool,
+    synthetic_trace,
+)
+from repro.serve.queue import PendingRun
+
+
+SMALL = dict(instance="thm2_chain",
+             instance_params=dict(d=6, kappa=8.0, lam=0.5, m=2),
+             algorithm="dagd", rounds=5, eps=[1e-1])
+
+
+def _fake_run(key, t=0.0, seq=0, client="c"):
+    class _Cell:
+        def group_key(self):
+            return key
+    return PendingRun(ticket=f"f{seq}", client_id=client, seq=seq,
+                      spec=None, plan=None,
+                      cell=None if key is None else _Cell(), arrival=t)
+
+
+# --------------------------------------------------------------------------
+# Scheduler
+# --------------------------------------------------------------------------
+
+def test_scheduler_count_flush_releases_full_batches():
+    sched = CoalescingScheduler(max_batch=8, max_wait=10.0)
+    for i in range(17):
+        sched.add(_fake_run(("k",), t=0.0, seq=i))
+    batches = sched.due(0.0)
+    assert [b.width for b in batches] == [8, 8]
+    # members in arrival order
+    assert [r.seq for r in batches[0].runs] == list(range(8))
+    assert [r.seq for r in batches[1].runs] == list(range(8, 16))
+    assert sched.pending == 1
+    # the straggler waits for its deadline...
+    assert sched.due(5.0) == []
+    # ...and is released once its wait exceeds max_wait
+    (tail,) = sched.due(10.0)
+    assert tail.width == 1 and tail.runs[0].seq == 16
+    assert sched.pending == 0
+
+
+def test_scheduler_deadline_and_flush():
+    sched = CoalescingScheduler(max_batch=8, max_wait=0.25)
+    for i in range(3):
+        sched.add(_fake_run(("k",), t=0.0, seq=i))
+    assert sched.due(0.2) == []
+    (b,) = sched.due(0.25)
+    assert b.width == 3 and b.grouped
+    # flush releases partial groups regardless of age
+    sched.add(_fake_run(("k",), t=1.0, seq=9))
+    (b,) = sched.due(1.0, flush=True)
+    assert b.width == 1
+
+
+def test_scheduler_sequential_runs_bypass_the_pool():
+    sched = CoalescingScheduler(max_batch=8, max_wait=10.0)
+    sched.add(_fake_run(None, t=0.0, seq=0))
+    sched.add(_fake_run(("k",), t=0.0, seq=1))
+    batches = sched.due(0.0)          # no flush, nothing due but the
+    assert len(batches) == 1          # unbatchable singleton
+    assert not batches[0].grouped and batches[0].width == 1
+
+
+def test_scheduler_release_order_is_pool_insertion_order():
+    sched = CoalescingScheduler(max_batch=8, max_wait=0.1)
+    sched.add(_fake_run(("b",), t=0.0, seq=0))
+    sched.add(_fake_run(("a",), t=0.0, seq=1))
+    sched.add(_fake_run(("b",), t=0.0, seq=2))
+    keys = [b.key for b in sched.due(1.0)]
+    assert keys == [("b",), ("a",)]
+
+
+# --------------------------------------------------------------------------
+# Program cache
+# --------------------------------------------------------------------------
+
+def test_cache_hit_requires_key_and_width():
+    cache = ProgramCache(capacity=4)
+    e1, hit = cache.lookup(("k",), 8)
+    assert not hit                    # new key
+    _, hit = cache.lookup(("k",), 1)
+    assert not hit                    # known key, new width: jit respecializes
+    e2, hit = cache.lookup(("k",), 8)
+    assert hit and e2 is e1           # same runners dict survives
+    st = cache.stats()
+    assert (st.hits, st.misses, st.executions) == (1, 2, 3)
+
+
+def test_cache_lru_eviction():
+    cache = ProgramCache(capacity=2)
+    cache.lookup(("a",), 1)
+    cache.lookup(("b",), 1)
+    cache.lookup(("a",), 1)           # touch a: b is now LRU
+    cache.lookup(("c",), 1)           # evicts b
+    assert cache.stats().evictions == 1 and len(cache) == 2
+    _, hit = cache.lookup(("a",), 1)
+    assert hit
+    _, hit = cache.lookup(("b",), 1)  # evicted: pays the compile again
+    assert not hit
+
+
+# --------------------------------------------------------------------------
+# Admission queue
+# --------------------------------------------------------------------------
+
+def test_queue_rejects_before_any_compute():
+    q = SubmissionQueue(max_depth=4)
+    with pytest.raises(SpecError):
+        q.admit("{not json")
+    with pytest.raises(SpecError):
+        q.admit(dict(SMALL, bogus=1))
+    with pytest.raises(api.PlanError):
+        q.admit(dict(SMALL, algorithm="bogus"))
+    with pytest.raises(SpecError, match="resolution-only"):
+        q.admit(dict(instance_params=dict(d=6, kappa=8.0, m=2),
+                     rounds=5))
+    assert (q.admitted, q.rejected, q.outstanding) == (0, 4, 0)
+
+
+def test_queue_admission_control_and_client_seq():
+    q = SubmissionQueue(max_depth=2)
+    r0 = q.admit(SMALL, client_id="a", now=1.0)
+    with pytest.raises(SpecError):
+        q.admit("{", client_id="a")   # rejection must not burn a seq
+    r1 = q.admit(SMALL, client_id="a", now=2.0)
+    assert (r0.seq, r1.seq) == (0, 1)
+    assert (r0.ticket, r1.ticket) == ("t000001", "t000002")
+    assert r0.arrival == 1.0 and r0.cell is not None
+    with pytest.raises(QueueFullError):
+        q.admit(SMALL, client_id="b")
+    q.complete()
+    r2 = q.admit(SMALL, client_id="b")
+    assert r2.seq == 0                # seq is per-client
+
+
+# --------------------------------------------------------------------------
+# Service: sequential fallback + rejection accounting
+# --------------------------------------------------------------------------
+
+def test_service_sequential_fallback_matches_direct_execution():
+    svc = CertificationService(max_batch=8, max_wait=10.0)
+    spec = api.RunSpec(**SMALL, engine="python")   # unbatchable
+    svc.submit(spec, client_id="c", now=0.0)
+    (env,) = svc.step(0.0)            # immediately due, no coalescing
+    assert not env.batched and not env.cache_hit and env.width == 1
+    assert svc.stats()["fallbacks"] == 1 and svc.stats()["batches"] == 0
+    pl = api.plan(spec)
+    ref = pl.execute()
+    assert env.result.ledger.typed_stream() == ref.ledger.typed_stream()
+    assert env.verdicts == [dict(
+        eps=e, measured_rounds=ref.measured_rounds(pl.eps_abs(e)),
+        bound_rounds=pl.bound(pl.eps_abs(e)).rounds,
+        certified=pl.certify(ref, e)) for e in spec.eps]
+
+
+# --------------------------------------------------------------------------
+# The deterministic soak
+# --------------------------------------------------------------------------
+
+def _soak_trace():
+    """192 dense arrivals (3 structures x 64, shuffled, 5 clients,
+    1ms apart) + 9 stragglers spaced 1s apart.  With max_batch=8 and
+    max_wait=0.25 the dense phase (0.191s span) can only count-flush:
+    8 full width-8 batches per structure; every straggler deadline-
+    flushes alone at width 1.  Expected cache ledger, exactly:
+
+        dense:      per structure 1 miss + 7 hits   -> 3 miss, 21 hit
+        stragglers: per structure 1 miss + 2 hits   -> 3 miss,  6 hit
+        total:      33 executions, 6 misses, hit rate 27/33 ~ 0.818
+    """
+    pools = spec_pool()
+    dense = synthetic_trace(n_per_structure=64, seed=7, dt=1e-3,
+                            clients=5, pools=pools)
+    stragglers = [Arrival(t=5.0 + k, client_id="lone",
+                          spec=pools[k % 3][k % 4]) for k in range(9)]
+    return pools, dense + stragglers
+
+
+def test_soak_deterministic_trace():
+    pools, trace = _soak_trace()
+    svc = CertificationService(max_batch=8, max_wait=0.25,
+                               cache_capacity=32)
+    envs = replay_trace(svc, trace)
+
+    # -- no spec lost, duplicated, or reordered within a client --------
+    assert len(envs) == len(trace) == 201
+    assert len({e.ticket for e in envs}) == 201
+    submitted, served = {}, {}
+    for a in trace:
+        submitted.setdefault(a.client_id, []).append(a.spec)
+    for e in envs:
+        served.setdefault(e.client_id, []).append(e)
+    for cid, stream in served.items():
+        assert [e.seq for e in stream] == list(range(len(stream)))
+        assert [e.spec for e in stream] == submitted[cid]
+
+    # -- cache counters: exact, and above the published floor ----------
+    st = svc.cache.stats()
+    assert (st.executions, st.misses, st.hits) == (33, 6, 27)
+    assert st.hit_rate >= 0.80
+    assert st.evictions == 0 and st.size == 3
+    stats = svc.stats()
+    assert stats["fallbacks"] == 0 and stats["rejected"] == 0
+    assert stats["completed"] == 201 and stats["pending"] == 0
+    assert stats["batches"] == 33
+
+    # -- every served result identical to direct execution -------------
+    refs = {}
+    for pool in pools:
+        for spec in pool:
+            pl = api.plan(spec)
+            res = pl.execute()
+            refs[spec.to_json()] = (pl, res)
+    for e in envs:
+        pl, ref = refs[e.spec.to_json()]
+        assert e.result.ledger.typed_stream() == ref.ledger.typed_stream()
+        assert e.result.ledger.total_bits() == ref.ledger.total_bits()
+        assert e.result.ledger.rounds == ref.ledger.rounds
+        assert e.verdicts == [dict(
+            eps=eps, measured_rounds=ref.measured_rounds(pl.eps_abs(eps)),
+            bound_rounds=pl.bound(pl.eps_abs(eps)).rounds,
+            certified=pl.certify(ref, eps)) for eps in e.spec.eps]
+        np.testing.assert_allclose(e.result.w, ref.w,
+                                   rtol=1e-5, atol=1e-5)
+
+    # -- replaying the same trace on a fresh service is bit-identical --
+    svc2 = CertificationService(max_batch=8, max_wait=0.25,
+                                cache_capacity=32)
+    envs2 = replay_trace(svc2, trace)
+    assert svc2.stats() == stats
+    assert [(e.ticket, e.client_id, e.seq, e.width, e.cache_hit,
+             e.batched) for e in envs2] == \
+           [(e.ticket, e.client_id, e.seq, e.width, e.cache_hit,
+             e.batched) for e in envs]
+    for a, b in zip(envs, envs2):
+        assert a.result.ledger.typed_stream() == \
+            b.result.ledger.typed_stream()
+        assert a.verdicts == b.verdicts

@@ -1,0 +1,145 @@
+"""Property/fuzz tests for RunSpec deserialization and admission.
+
+RunSpecs arrive over the wire now (``repro.serve`` accepts JSON
+payloads; every ``docs/results`` record embeds one), so the
+deserialization boundary must be total: any payload either loads into a
+spec (v1 dicts migrate and round-trip) or raises a clear ``ValueError``
+naming the problem — never a ``TypeError``/``AttributeError`` traceback
+from a coercion or from deep inside ``plan()``.  Uses hypothesis when
+installed, else the deterministic fallback shim replays a fixed spread
+(``tests/_hypothesis_fallback.py``).
+"""
+import json
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import api
+from repro.api import PlanError, RunSpec
+from repro.serve import SpecError, parse_runspec
+
+
+VALID = dict(instance="thm2_chain",
+             instance_params=dict(d=24, kappa=16.0, lam=0.5, m=4),
+             algorithm="dagd", rounds=120, eps=[1e-3])
+
+
+# --------------------------------------------------------------------------
+# Malformed JSON text
+# --------------------------------------------------------------------------
+
+MALFORMED_JSON = [
+    "", "{", "[1, 2", '{"instance": }', "{'instance': 'x'}",
+    '{"instance": "thm2_chain",}', "not json at all", "\x00",
+    '{"a": 1} trailing',
+]
+
+# syntactically valid JSON whose top level is not an object
+NON_OBJECT_JSON = ["null", "[1, 2]", '"thm2_chain"', "3.14", "true"]
+
+
+@given(text=st.sampled_from(MALFORMED_JSON + NON_OBJECT_JSON))
+@settings(max_examples=len(MALFORMED_JSON) + len(NON_OBJECT_JSON),
+          deadline=None)
+def test_bad_json_text_is_a_clear_valueerror(text):
+    with pytest.raises(ValueError):
+        RunSpec.from_json(text)
+    with pytest.raises(SpecError):
+        parse_runspec(text)
+
+
+def test_non_dict_payloads_rejected_not_crashed():
+    for payload in (None, 3.14, True, [VALID], "nope", b"\xff\xfe"):
+        with pytest.raises(ValueError):
+            parse_runspec(payload)
+    with pytest.raises(ValueError, match="JSON object"):
+        RunSpec.from_dict([("instance", "thm2_chain")])
+
+
+# --------------------------------------------------------------------------
+# Wrong-typed fields: load or ValueError, never anything else
+# --------------------------------------------------------------------------
+
+_FIELDS = sorted(VALID) + ["eps_mode", "measure", "placement", "backend",
+                           "engine", "channel", "algo_kwargs",
+                           "check_budget", "tag"]
+_BAD_VALUES = [None, 123, 1.5, True, [1, 2], {"zz": 1}, "bogus", ""]
+
+
+@given(field=st.sampled_from(_FIELDS),
+       value=st.sampled_from(_BAD_VALUES))
+@settings(max_examples=60, deadline=None)
+def test_wrong_typed_axes_load_or_raise_valueerror(field, value):
+    """Fuzz one field at a time: the payload must either produce a spec
+    that then planned cleanly or raises PlanError — or be rejected at
+    load time with a ValueError.  No other exception type may escape
+    either stage (that would be the deep-inside-plan traceback this
+    suite exists to prevent)."""
+    payload = dict(VALID, **{field: value})
+    try:
+        spec = RunSpec.from_dict(payload)
+    except ValueError:
+        return                         # clear load-time rejection
+    try:
+        api.plan(spec)
+    except PlanError:
+        return                         # clear plan-time rejection
+    # some (field, value) pairs are legitimately fine (tag="bogus",
+    # rounds=123, check_budget=True...) — loading + planning is success
+
+
+@given(channel=st.sampled_from(
+    ["gzip", "int4", "fp64", "topk:", "topk:0", "topk:2.0",
+     "topk:-0.1", "identity ", "FP16"]))
+@settings(max_examples=9, deadline=None)
+def test_unknown_channel_strings_rejected_at_plan_time(channel):
+    """The channel vocabulary lives in core.channel; a spec loads with
+    any string but plan() must reject bad ones as PlanError (a
+    ValueError) naming the channel — not crash inside the parser."""
+    spec = RunSpec(**VALID, channel=channel)
+    with pytest.raises(PlanError):
+        api.plan(spec)
+
+
+def test_unknown_fields_and_versions_rejected():
+    with pytest.raises(ValueError, match="unknown RunSpec field"):
+        RunSpec.from_dict(dict(VALID, bogus=1))
+    with pytest.raises(ValueError, match="schema_version"):
+        RunSpec.from_dict(dict(VALID, schema_version=99))
+
+
+# --------------------------------------------------------------------------
+# v1-schema migration
+# --------------------------------------------------------------------------
+
+def _v1_dict():
+    d = RunSpec(**VALID).to_dict()
+    del d["channel"]                  # the axis added in schema 2
+    d["schema_version"] = 1
+    return d
+
+
+def test_v1_schema_loads_and_migration_round_trips():
+    spec = RunSpec.from_dict(_v1_dict())
+    assert spec.channel == "auto"     # v1 default: resolver decides
+    migrated = spec.to_dict()
+    assert migrated["schema_version"] == api.SPEC_SCHEMA_VERSION
+    assert RunSpec.from_dict(migrated) == spec
+    assert RunSpec.from_json(spec.to_json()) == spec
+
+
+@given(rounds=st.integers(1, 5000),
+       eps=st.floats(1e-9, 1.0),
+       eps_mode=st.sampled_from(["abs", "rel"]),
+       channel=st.sampled_from(["auto", "identity", "fp16", "bf16",
+                                "int8", "topk:0.25"]),
+       engine=st.sampled_from(["auto", "scan", "python"]))
+@settings(max_examples=12, deadline=None)
+def test_generated_valid_specs_round_trip(rounds, eps, eps_mode, channel,
+                                          engine):
+    spec = RunSpec(**{**VALID, "rounds": rounds, "eps": [eps]},
+                   eps_mode=eps_mode, channel=channel, engine=engine)
+    assert RunSpec.from_json(spec.to_json()) == spec
+    wire = json.loads(spec.to_json())
+    assert wire["schema_version"] == api.SPEC_SCHEMA_VERSION
+    assert RunSpec.from_dict(wire) == spec
