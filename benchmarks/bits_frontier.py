@@ -1,0 +1,96 @@
+"""Bits-to-eps frontier benchmark: adaptive channels vs the bit bounds.
+
+Thin CLI over ``repro.experiments.frontier`` (the search engine lives in
+the package so ``python -m repro.experiments.sweep --frontier`` and the
+tests share it).  Re-executes certification cells under fixed, scheduled
+(``sched:``) and gap-adaptive (``gap:``) channels, publishes the
+(rounds, bits) frontier, and enforces the subsystem's gates:
+
+  * **bit certification** — every hard point must measure at or above
+    its schedule-aware bit floor (the certifying round bound priced at
+    the stage active in each bounded round);
+  * **negative result** — at least one hard cell (the Theorem-4
+    incremental family) where NO adaptive candidate beats the best
+    fixed channel and the certified floor is channel-invariant
+    (``bound_rounds x 32`` exact scalar bits — channels never touch
+    scalars);
+  * **savings** — at least one real workload (lasso / logistic) with a
+    >= 2x total-bit reduction vs the identity wire at unchanged
+    verdict.
+
+CLI:
+    PYTHONPATH=src python -m benchmarks.bits_frontier
+    PYTHONPATH=src python -m benchmarks.bits_frontier --quick --no-report  # CI
+
+Writes ``docs/results/bits-frontier.json`` + ``.md`` and refreshes the
+results index.  Exit status is non-zero on any missed gate.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import Optional, Sequence
+
+from repro.experiments import frontier
+
+# the published full sweep: both hard families + both workloads
+FULL_PRESETS = ("thm2-small", "thm4-small", "lasso", "logistic")
+
+
+def run():
+    """CSV rows for the legacy benchmarks/run.py surface."""
+    from .common import emit
+    doc = frontier.run_frontier(frontier.QUICK_CELLS[:1])
+    for p in doc["cells"][0]["points"]:
+        pe = p["per_eps"][0]
+        emit(f"bits_frontier/dagd/{p['channel']}",
+             f"{p['bits_per_round']:.0f}",
+             f"rounds_to_{pe['eps']:g}={pe['measured_rounds']};"
+             f"bits_to_eps={pe['bits_to_eps']};"
+             f"pareto={pe.get('pareto')}")
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m benchmarks.bits_frontier", description=__doc__)
+    parser.add_argument("--out", default=None,
+                        help="output directory (default: docs/results)")
+    parser.add_argument("--quick", action="store_true",
+                        help="CI smoke: one small Theorem-2 cell + the "
+                             "Theorem-4 incremental cell + the lasso "
+                             "workload; every gate still enforced")
+    parser.add_argument("--max-rounds", type=int, default=None,
+                        help="override the per-preset round budgets "
+                             "(full mode only)")
+    parser.add_argument("--no-report", action="store_true",
+                        help="run and gate, but write nothing")
+    parser.add_argument("-q", "--quiet", action="store_true")
+    args = parser.parse_args(argv)
+
+    if args.quick:
+        cells = frontier.QUICK_CELLS
+    else:
+        cells = frontier.preset_cells(FULL_PRESETS,
+                                      max_rounds=args.max_rounds)
+    doc = frontier.run_frontier(cells, verbose=not args.quiet)
+
+    summ = doc["summary"]
+    print(f"[bits-frontier] {len(doc['cells'])} cells, "
+          f"{summ['records']} points; bit-certified "
+          f"{summ['certified']}/{summ['certifiable']}; "
+          f"adaptive wins on {summ['hard_adaptive_wins']}, "
+          f"cannot help on {summ['hard_no_adaptive_win']}; "
+          f"workload savings {summ['workload_best_savings']}")
+
+    if not args.no_report:
+        json_path, md_path = frontier.write_report(doc, args.out)
+        print(f"[bits-frontier] report -> {json_path}, {md_path}")
+
+    fails = frontier.gate_failures(doc)
+    for f in fails:
+        print(f"[bits-frontier] GATE FAILED: {f}", file=sys.stderr)
+    return 1 if fails else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

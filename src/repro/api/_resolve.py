@@ -12,7 +12,9 @@ Every run in the repo is positioned on four orthogonal axes:
     or ``scan`` (one ``lax.scan``-compiled XLA program per segment);
   * **channel** — what the per-machine uploads cost on the wire:
     ``identity`` (exact f32) or a lossy transform (``fp16``/``bf16``/
-    ``int8``/``topk[:rho]``, see ``core.channel``).
+    ``int8``/``topk[:rho]``), a round-indexed schedule of those
+    (``sched:<ch>@<round>,...``) or a gap-adaptive spec
+    (``gap:<ch0>,<ch>@<thr>,...``) — see ``core.channel``.
 
 Historically the ``auto`` choices were resolved in three places
 (``core/runtime.py``, ``experiments/sweep.py``, ``launch/dryrun.py``);
@@ -42,7 +44,7 @@ PLACEMENTS = ("local", "sharded")
 # Canonical list lives in repro.core.channel (the transform
 # implementations); mirrored here so the resolver module stays a leaf at
 # load time. tests/test_channel.py pins equality.
-CHANNELS = ("identity", "fp16", "bf16", "int8", "topk")
+CHANNELS = ("identity", "fp16", "bf16", "int8", "topk", "sched", "gap")
 
 BACKEND_ENV = "REPRO_ORACLE_BACKEND"
 ENGINE_ENV = "REPRO_ROUND_ENGINE"

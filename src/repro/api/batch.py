@@ -130,8 +130,13 @@ class Cell:
         meas = (self.meas.structure,
                 tuple((tuple(c.shape), jnp.asarray(c).dtype.str)
                       for c in self.meas.consts)) if self.meas else None
-        return (self.plan.algo.name, self.plan.backend, self.plan.channel,
-                self.plan.spec.rounds, segs, meas)
+        # The channel component is the WIRE channel (the canonical sched:
+        # a gap spec resolved to): two specs whose wires differ — even
+        # only in a stage switch round — must not merge, while a gap spec
+        # may batch with the sched: it resolved to (identical transform,
+        # identical pricing; each cell still replays its own schedule).
+        return (self.plan.algo.name, self.plan.backend,
+                self.plan.wire_channel(), self.plan.spec.rounds, segs, meas)
 
 
 def prepare_cell(plan: ExecutionPlan) -> Optional[Cell]:
@@ -140,6 +145,8 @@ def prepare_cell(plan: ExecutionPlan) -> Optional[Cell]:
             or plan.engine != "scan":
         return None
     dist, program, measure_fn = plan._cell()
+    scheduled = getattr(getattr(dist.comm, "channel", None),
+                        "scheduled", False)
     real = dist.comm.ledger
     dist.comm.ledger = scratch = CommLedger()
     try:
@@ -152,8 +159,24 @@ def prepare_cell(plan: ExecutionPlan) -> Optional[Cell]:
             if key not in by_step:
                 n0, r0 = len(scratch.records), scratch.rounds
                 m0 = len(scratch.round_marks)
-                conv = _convert(lambda c, x: seg.step(dist, c, x),
-                                carry, jnp.asarray(xs[0]))
+                if scheduled:
+                    # scheduled channel: the round index rides along as
+                    # part of xs so the compiled group runner can switch
+                    # stages mid-scan; trace with a symbolic index (the
+                    # example int32 is abstracted by make_jaxpr) and pin
+                    # it for the step's channel transforms.
+                    def traced(c, rx, _step=seg.step):
+                        rk, x = rx
+                        dist.comm.begin_round(rk)
+                        try:
+                            return _step(dist, c, x)
+                        finally:
+                            dist.comm.reset_round()
+                    conv = _convert(traced, carry,
+                                    (jnp.int32(0), jnp.asarray(xs[0])))
+                else:
+                    conv = _convert(lambda c, x: seg.step(dist, c, x),
+                                    carry, jnp.asarray(xs[0]))
                 conv.schedule = (scratch.records[n0:], scratch.rounds - r0,
                                  [m - n0 for m in scratch.round_marks[m0:]])
                 by_step[key] = conv
@@ -203,9 +226,13 @@ def execute_group(cells: List[Cell],
     carry = jax.tree.map(lambda *xs: jnp.stack(xs),
                          *[p.init for p in progs])
     meas0 = cells[0].meas
+    # all cells in a group share the wire channel (group_key pins it)
+    chan0 = getattr(cells[0].dist.comm, "channel", None)
+    sched_chan = chan0 if getattr(chan0, "scheduled", False) else None
     runners = runner_cache if runner_cache is not None else {}
     consts_cache, outs = {}, []
     mconsts = _stack_consts(cells, lambda c: c.meas) if meas0 else []
+    round_base = 0     # global round index of the next segment's start
     for s, seg0 in enumerate(progs[0].segments):
         conv0 = cells[0].steps[s]
         cell_xs = [_segment_xs(c.program.segments[s]) for c in cells]
@@ -221,17 +248,23 @@ def execute_group(cells: List[Cell],
         if ckey not in consts_cache:
             consts_cache[ckey] = _stack_consts(cells, lambda c: c.steps[s])
         consts = consts_cache[ckey]
-        rkey = (conv0.structure, shared_xs)
+        rkey = (conv0.structure, shared_xs, sched_chan is not None)
         if rkey not in runners:
             pure_step = conv0.pure
             pure_meas = meas0.pure if meas0 else None
 
             def runner_fn(consts, mconsts, carry, xs,
                           _step=pure_step, _meas=pure_meas,
-                          _shared=shared_xs):
+                          _shared=shared_xs,
+                          _sched=sched_chan is not None):
+                # scheduled channels scan (round index, per-round input)
+                # pairs; the round index is identical across the batch,
+                # so it broadcasts (in_axes None) like shared xs
+                x_axes = ((None, None) if _shared else (None, 0)) \
+                    if _sched else (None if _shared else 0)
+
                 def body(c, x):
-                    c, w = jax.vmap(_step,
-                                    in_axes=(0, 0, None if _shared else 0)
+                    c, w = jax.vmap(_step, in_axes=(0, 0, x_axes)
                                     )(consts, c, x)
                     out = jax.vmap(_meas)(mconsts, w) if _meas else None
                     return c, out
@@ -240,7 +273,14 @@ def execute_group(cells: List[Cell],
 
             runners[rkey] = jax.jit(runner_fn)
         xs = cell_xs[0] if shared_xs else np.stack(cell_xs, axis=1)
-        carry, out = runners[rkey](consts, mconsts, carry, jnp.asarray(xs))
+        xs_arg = jnp.asarray(xs)
+        rounds_per_step = conv0.schedule[1]
+        if sched_chan is not None:
+            rid = round_base + np.arange(seg0.count,
+                                         dtype=np.int32) * rounds_per_step
+            xs_arg = (jnp.asarray(rid), xs_arg)
+        round_base += rounds_per_step * seg0.count
+        carry, out = runners[rkey](consts, mconsts, carry, xs_arg)
         if meas0 is not None:
             outs.append(out)                        # (count, C)
     gaps_all = np.asarray(jnp.concatenate(outs, axis=0)) if outs else None
@@ -251,13 +291,14 @@ def execute_group(cells: List[Cell],
         for s, seg in enumerate(cell.program.segments):
             records, rounds_per_step, marks = cell.steps[s].schedule
             ledger.replay_schedule(records, rounds_per_step, marks,
-                                   seg.count)
+                                   seg.count, channel=sched_chan)
         carry_i = jax.tree.map(lambda a: a[i], carry)
         w = cell.dist.gather_w(cell.program.final(carry_i))
         pl = cell.plan
         results.append(RunResult(
             spec=pl.spec, placement=pl.placement, backend=pl.backend,
-            engine=pl.engine, channel=pl.channel, w=w,
+            engine=pl.engine, channel=pl.channel,
+            wire_channel=pl.wire_channel(), w=w,
             rounds=cell.program.rounds, ledger=ledger,
             gaps=gaps_all[:, i] if gaps_all is not None else None,
             budget_ok=pl._budget_ok(ledger), batched=True))

@@ -87,6 +87,10 @@ class RunResult:
     budget_ok: Optional[bool] = None      # None: budget check disabled
     batched: bool = False                 # executed via execute_batch group
     channel: str = "identity"             # resolved wire model (canonical)
+    wire_channel: str = ""                # channel actually driven on the
+                                          # wire: == channel except for
+                                          # gap: specs, which resolve to a
+                                          # concrete sched: before running
 
     def measured_rounds(self, eps_abs: float) -> Optional[int]:
         """First round k with f(w_k) - f* <= eps_abs (1-based), or None
@@ -119,6 +123,7 @@ class ExecutionPlan:
     _bundle: Optional[InstanceBundle] = None
     _cell_cache: Optional[tuple] = None
     _gap0: Optional[float] = None
+    _wire: Optional[str] = None       # gap: spec resolved to sched: (lazy)
 
     # ---- lazy problem construction --------------------------------------
     @property
@@ -157,6 +162,37 @@ class ExecutionPlan:
     def bound(self, eps_abs: float) -> Optional[BoundReport]:
         return bound_for(self.bundle, self.algo, eps_abs)
 
+    # ---- gap-adaptive channel resolution ---------------------------------
+    def wire_channel(self) -> str:
+        """The canonical channel actually driven on the wire.
+
+        For fixed and ``sched:`` channels this is ``self.channel``.  A
+        ``gap:`` spec is resolved here — once, lazily — into a concrete
+        ``sched:`` channel by probing the cell under the identity
+        channel, measuring its gap series, and pinning each stage's
+        switch round where the trajectory crosses the stage threshold
+        (``core.channel.GapChannel.resolve``).  The probe is a
+        deterministic identity run of the same cell, so re-executing a
+        recorded gap-channel spec reproduces the schedule — and the wire
+        bits — exactly."""
+        if not self.channel.startswith("gap:"):
+            return self.channel
+        if self._wire is None:
+            from ..core.channel import parse_channel
+            gap = parse_channel(self.channel)
+            probe_spec = self.spec.replace(
+                channel="identity", measure="gap", placement="local",
+                backend=self.backend, engine=self.engine)
+            try:
+                probe = plan(probe_spec, bundle=self._bundle)
+                res = probe.execute()
+            except PlanError as e:
+                raise PlanError(
+                    f"channel {self.channel!r} needs a measurable gap "
+                    f"series to resolve its schedule: {e}") from None
+            self._wire = gap.resolve(res.gaps).name
+        return self._wire
+
     def certify(self, result: "RunResult", eps: float) -> Optional[bool]:
         """The certification verdict for one eps threshold, three-valued
         exactly as the sweep reports it: ``True``/``False`` when the
@@ -182,7 +218,7 @@ class ExecutionPlan:
             from ..core.runtime import LocalDistERM
             b = self.bundle
             dist = LocalDistERM(b.prob, b.part, backend=self.backend,
-                                channel=self.channel)
+                                channel=self.wire_channel())
             program = self.algo.program(dist, rounds=self.spec.rounds,
                                         **self.algo_kwargs())
             measure_fn = None
@@ -232,6 +268,7 @@ class ExecutionPlan:
         return RunResult(
             spec=self.spec, placement=self.placement, backend=self.backend,
             engine=self.engine, channel=self.channel,
+            wire_channel=self.wire_channel(),
             w=dist.gather_w(res.w), rounds=res.rounds,
             ledger=ledger, gaps=res.gaps, budget_ok=self._budget_ok(ledger))
 
@@ -245,17 +282,18 @@ class ExecutionPlan:
                 b.prob, lambda d_, r: self.algo.fn(d_, r, **kwargs),
                 rounds=self.spec.rounds, ledger=ledger,
                 backend=self.backend, engine="python",
-                channel=self.channel)
+                channel=self.wire_channel())
         else:
             w, led = _run_sharded(
                 b.prob, None, rounds=self.spec.rounds, ledger=ledger,
                 backend=self.backend, engine="scan",
                 program_builder=lambda d_, r: self.algo.program(d_, r,
                                                                 **kwargs),
-                channel=self.channel)
+                channel=self.wire_channel())
         return RunResult(
             spec=self.spec, placement=self.placement, backend=self.backend,
             engine=self.engine, channel=self.channel,
+            wire_channel=self.wire_channel(),
             w=w, rounds=led.rounds, ledger=led,
             gaps=None, budget_ok=self._budget_ok(led))
 
@@ -333,6 +371,12 @@ def plan(spec: RunSpec,
     if spec.eps and measure == "none":
         raise PlanError("eps thresholds were requested but measure='none'; "
                         "rounds-to-eps needs the in-run gap series")
+    if channel.startswith("gap:") and placement == "sharded":
+        raise PlanError(
+            "gap-adaptive channels need the local placement (the "
+            "schedule is resolved from an identity probe's measured gap "
+            "series, and the sharded driver has no measurement channel); "
+            "pin an explicit sched: channel for sharded runs")
     if placement == "sharded":
         if measure == "gap":
             raise PlanError(

@@ -20,10 +20,11 @@ from typing import Dict, Optional, Tuple
 import numpy as np
 
 
-SPEC_SCHEMA_VERSION = 2       # 2: channel axis (PR 5)
+SPEC_SCHEMA_VERSION = 3       # 2: channel axis (PR 5); 3: adaptive
+                              # channels — sched:/gap: channel grammar
 # Older spec dicts still load: every field added since a compat version
 # has a default, so from_dict accepts the whole range.
-_SPEC_COMPAT_VERSIONS = (1, SPEC_SCHEMA_VERSION)
+_SPEC_COMPAT_VERSIONS = (1, 2, SPEC_SCHEMA_VERSION)
 
 _EPS_MODES = ("abs", "rel")
 _MEASURES = ("auto", "gap", "none")
@@ -92,6 +93,8 @@ class RunSpec:
     engine: str = "auto"             # "auto" | "scan" | "python"
     channel: str = "auto"            # "auto" | "identity" | "fp16" | "bf16"
                                      # | "int8" | "topk[:rho]"
+                                     # | "sched:<ch>@<round>,..."
+                                     # | "gap:<ch0>,<ch>@<thr>,..."
     algo_kwargs: Dict[str, object] = dataclasses.field(default_factory=dict)
     check_budget: bool = True        # assert the O(n+d)/round budget
     tag: str = ""

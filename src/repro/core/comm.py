@@ -42,11 +42,13 @@ import dataclasses
 import re
 from typing import Dict, List, Optional, Sequence, Tuple
 
+import numpy as np
+
 import jax
 import jax.numpy as jnp
 from jax import lax
 
-from .channel import Channel, parse_channel
+from .channel import AnyChannel, Channel, parse_channel
 
 
 # --------------------------------------------------------------------------
@@ -71,6 +73,12 @@ class CommRecord:
     shape: Optional[Tuple[int, ...]] = None   # () is a scalar; None derives
     dtype: str = "float32"
     bits: int = 0
+    # wire geometry (per-message source elems, message count) for records
+    # the channel prices — lets replay re-price a scheduled channel from
+    # the record's round offset.  None == channel-exempt (scalars).
+    # Deliberately NOT part of typed_stream(): it is pricing provenance,
+    # not a wire observable.
+    wire: Optional[Tuple[int, int]] = None
 
     def __post_init__(self):
         if self.shape is None:
@@ -92,14 +100,16 @@ class CommLedger:
     def record(self, kind: str, elems: int, itemsize: int = 4, tag: str = "",
                *, shape: Optional[Tuple[int, ...]] = None,
                dtype: str = "float32", direction: str = "worker->center",
-               bits: Optional[int] = None):
+               bits: Optional[int] = None,
+               wire: Optional[Tuple[int, int]] = None):
         nbytes = int(elems) * itemsize
         self.records.append(CommRecord(
             kind, int(elems), nbytes, tag,
             direction=direction,
             shape=tuple(shape) if shape is not None else (int(elems),),
             dtype=dtype,
-            bits=int(bits) if bits is not None else nbytes * 8))
+            bits=int(bits) if bits is not None else nbytes * 8,
+            wire=tuple(wire) if wire is not None else None))
         self._round_open = True
 
     def end_round(self):
@@ -108,14 +118,30 @@ class CommLedger:
         self._round_open = False
 
     def replay_schedule(self, records: Sequence[CommRecord], rounds: int,
-                        marks: Sequence[int], count: int):
+                        marks: Sequence[int], count: int,
+                        channel: Optional[AnyChannel] = None):
         """Append a captured per-step schedule ``count`` times: the
         record objects are shared (replay is metering, not mutation), the
         round counter advances by ``rounds`` per repeat, and the step's
         round-boundary marks are rebased onto this ledger's stream.  The
         scan engine and ``execute_batch`` route their trace-once
         schedules through here so the replayed stream — marks included —
-        is bit-identical to the per-call python-engine stream."""
+        is bit-identical to the per-call python-engine stream.
+
+        Under a *scheduled* ``channel`` the captured records carry
+        provisional prices (tracing sees a symbolic round index), so each
+        repeat re-prices its channel-metered records from the record's
+        round offset within the step — wire bits per round stay exact
+        without re-tracing.  Fixed channels keep the shared-object fast
+        path (prices are round-invariant by construction)."""
+        if channel is not None and getattr(channel, "scheduled", False):
+            for _ in range(count):
+                base = len(self.records)
+                self.records.extend(
+                    repriced_records(records, marks, self.rounds, channel))
+                self.round_marks.extend(base + m for m in marks)
+                self.rounds += rounds
+            return
         for _ in range(count):
             base = len(self.records)
             self.records.extend(records)
@@ -172,15 +198,112 @@ class CommLedger:
                 f"> {budget} B/round (n={n}, d={d}, const={const})")
 
 
+def repriced_records(records: Sequence[CommRecord], marks: Sequence[int],
+                     base_round: int, channel: AnyChannel
+                     ) -> List[CommRecord]:
+    """Copies of a captured step's ``records`` with every channel-priced
+    payload (``wire`` set) re-priced for a repeat whose first round is
+    global round ``base_round``.  Record ``j``'s round offset within the
+    step is the number of marks at or before it — the same invariant
+    ``round_marks`` encodes (``marks[k] == #records once round k+1
+    ended``).  Channel-exempt records (scalars) are shared unchanged."""
+    out: List[CommRecord] = []
+    mi, offset = 0, 0
+    for j, rec in enumerate(records):
+        while mi < len(marks) and marks[mi] <= j:
+            offset += 1
+            mi += 1
+        if rec.wire is None:
+            out.append(rec)
+            continue
+        per_elems, nmsg = rec.wire
+        itemsize = rec.bytes // max(1, rec.elems)
+        bits = nmsg * channel.wire_bits(per_elems, itemsize,
+                                        rnd=base_round + offset)
+        out.append(dataclasses.replace(rec, bits=int(bits))
+                   if int(bits) != rec.bits else rec)
+    return out
+
+
 # --------------------------------------------------------------------------
 # Communicators
 # --------------------------------------------------------------------------
 
-class LocalCommunicator:
+class _ChannelWireMixin:
+    """Channel plumbing shared by both communicators: parsing/rejection,
+    round-index tracking for scheduled channels, and wire pricing.
+
+    Round identity: under the python engine nobody calls
+    ``begin_round`` — the ledger's concrete round counter IS the round
+    index (it advances at every ``end_round``, so it is exact even
+    intra-step).  The scan engines thread the round index as scanned
+    ``xs`` and pin it with ``begin_round`` before each step;
+    ``end_round`` then advances a local offset for multi-round steps.  A
+    *traced* index prices provisionally (stage 0); the ledger replay
+    re-prices from round offsets, so the trace-once stream still carries
+    exact per-round wire bits.
+    """
+
+    def _init_channel(self, channel):
+        self.channel: AnyChannel = parse_channel(channel)
+        if getattr(self.channel, "kind", "") == "gap":
+            raise ValueError(
+                f"channel {self.channel.name!r} is a gap-adaptive "
+                f"specification; resolve it to a schedule before "
+                f"constructing a communicator (repro.api.plan resolves "
+                f"gap channels via an identity probe run)")
+        self._round_base = None
+        self._round_offset = 0
+
+    def begin_round(self, rnd):
+        """Pin the round index of subsequent messages (scan engines pass
+        the scanned — possibly traced — index here)."""
+        self._round_base = rnd
+        self._round_offset = 0
+
+    def reset_round(self):
+        """Drop a pinned round index (call after a traced run so a stale
+        tracer never leaks into eager metering)."""
+        self._round_base = None
+        self._round_offset = 0
+
+    def _round_index(self):
+        """The round the next message belongs to: concrete under the
+        python engine (ledger counter), possibly traced under scan."""
+        if self._round_base is None:
+            return self.ledger.rounds
+        return self._round_base + self._round_offset
+
+    def _price(self, per_elems: int, itemsize: int, nmsg: int = 1) -> int:
+        """Wire bits for ``nmsg`` channel-transformed messages of
+        ``per_elems`` elements at the current round (stage 0 provisional
+        when the round index is traced — replay re-prices)."""
+        ch = self.channel
+        if getattr(ch, "scheduled", False):
+            rnd = self._round_index()
+            if not isinstance(rnd, (int, np.integer)):
+                rnd = None
+            return nmsg * ch.wire_bits(per_elems, itemsize, rnd=rnd)
+        return nmsg * ch.wire_bits(per_elems, itemsize)
+
+    def _apply_channel(self, x):
+        """The per-message transform at the current round."""
+        if getattr(self.channel, "scheduled", False):
+            rnd = self._round_index()
+            return self.channel.apply(x, rnd)
+        return self.channel.apply(x)
+
+    def end_round(self):
+        if self._round_base is not None:
+            self._round_offset += 1
+        self.ledger.end_round()
+
+
+class LocalCommunicator(_ChannelWireMixin):
     """Simulates m machines on host. Per-machine values are stacked on a
     leading axis of size m. Used by reference algorithms and tests.
 
-    ``channel`` (name or ``core.channel.Channel``) is applied per machine
+    ``channel`` (name or ``core.channel`` object) is applied per machine
     to every vector upload before the reduction; the identity default
     skips the transform entirely, so channel-free semantics — compute
     graph and ledger stream alike — are untouched."""
@@ -189,13 +312,13 @@ class LocalCommunicator:
                  channel=None):
         self.m = m
         self.ledger = ledger if ledger is not None else CommLedger()
-        self.channel: Channel = parse_channel(channel)
+        self._init_channel(channel)
 
     def _transmit(self, x_stacked):
         """The lossy worker->center wire, per machine (leading axis)."""
         if self.channel.lossless:
             return x_stacked
-        return jax.vmap(self.channel.apply)(x_stacked)
+        return jax.vmap(self._apply_channel)(x_stacked)
 
     def reduce_all(self, x_stacked, tag: str = "") -> jnp.ndarray:
         """ReduceAll: each machine holds x_j (stacked (m, ...)); returns the
@@ -207,7 +330,8 @@ class LocalCommunicator:
                            shape=tuple(per.shape),
                            dtype=str(x_stacked.dtype),
                            direction="worker->center",
-                           bits=self.channel.wire_bits(per.size, itemsize))
+                           bits=self._price(per.size, itemsize),
+                           wire=(per.size, 1))
         return jnp.sum(self._transmit(x_stacked), axis=0)
 
     def reduce_scalar(self, x_stacked, tag: str = "") -> jnp.ndarray:
@@ -230,15 +354,12 @@ class LocalCommunicator:
                            shape=tuple(blocks_stacked.shape),
                            dtype=str(blocks_stacked.dtype),
                            direction="worker->all",
-                           bits=m * self.channel.wire_bits(per_elems,
-                                                           itemsize))
+                           bits=self._price(per_elems, itemsize, m),
+                           wire=(per_elems, m))
         return self._transmit(blocks_stacked)
 
-    def end_round(self):
-        self.ledger.end_round()
 
-
-class ShardMapCommunicator:
+class ShardMapCommunicator(_ChannelWireMixin):
     """The same interface bound to lax collectives over mesh axis ``axis``.
 
     Use inside ``shard_map``: per-machine arrays are the *local* shards (no
@@ -252,12 +373,12 @@ class ShardMapCommunicator:
                  channel=None):
         self.axis = axis
         self.ledger = ledger if ledger is not None else CommLedger()
-        self.channel: Channel = parse_channel(channel)
+        self._init_channel(channel)
 
     def _transmit(self, x_local):
         if self.channel.lossless:
             return x_local
-        return self.channel.apply(x_local)
+        return self._apply_channel(x_local)
 
     def reduce_all(self, x_local, tag: str = "") -> jnp.ndarray:
         itemsize = x_local.dtype.itemsize
@@ -265,8 +386,8 @@ class ShardMapCommunicator:
                            shape=tuple(x_local.shape),
                            dtype=str(x_local.dtype),
                            direction="worker->center",
-                           bits=self.channel.wire_bits(x_local.size,
-                                                       itemsize))
+                           bits=self._price(x_local.size, itemsize),
+                           wire=(x_local.size, 1))
         return lax.psum(self._transmit(x_local), self.axis)
 
     def reduce_scalar(self, x_local, tag: str = "") -> jnp.ndarray:
@@ -282,12 +403,9 @@ class ShardMapCommunicator:
                            shape=tuple(block_local.shape),
                            dtype=str(block_local.dtype),
                            direction="worker->all",
-                           bits=self.channel.wire_bits(block_local.size,
-                                                       itemsize))
+                           bits=self._price(block_local.size, itemsize),
+                           wire=(block_local.size, 1))
         return lax.all_gather(self._transmit(block_local), self.axis)
-
-    def end_round(self):
-        self.ledger.end_round()
 
 
 # --------------------------------------------------------------------------

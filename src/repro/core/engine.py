@@ -209,10 +209,22 @@ def _capture_schedule(dist, seg: Segment, carry, xs: np.ndarray):
     return list(scratch.records), scratch.rounds, list(scratch.round_marks)
 
 
-def _build_runner(dist, step: Callable, measure, history):
+def scheduled_channel(dist):
+    """The communicator's channel iff it is round-scheduled (the case
+    where the scan engines must thread the round index), else None."""
+    chan = getattr(getattr(dist, "comm", None), "channel", None)
+    return chan if getattr(chan, "scheduled", False) else None
+
+
+def _build_runner(dist, step: Callable, measure, history, scheduled: bool):
     collect_w = history and measure is None
 
     def body(carry, x):
+        if scheduled:
+            # xs carry (global round index, per-round input): pin the
+            # index so the channel transform switches stages mid-scan.
+            rk, x = x
+            dist.comm.begin_round(rk)
         carry, w = step(dist, carry, x)
         if measure is not None:
             return carry, measure(w)
@@ -224,6 +236,7 @@ def _build_runner(dist, step: Callable, measure, history):
 def _run_scan(dist, program, measure, history,
               session: EngineSession) -> EngineResult:
     ledger = dist.comm.ledger
+    chan = scheduled_channel(dist)
     carry = program.init
     outs, rounds = [], 0
     for seg in program.segments:
@@ -232,23 +245,36 @@ def _run_scan(dist, program, measure, history,
         if sched_key not in session.schedules:
             session.schedules[sched_key] = _capture_schedule(
                 dist, seg, carry, xs)
-        run_key = (seg.step, measure, history)
+        records, rounds_per_step, marks = session.schedules[sched_key]
+        run_key = (seg.step, measure, history, chan is not None)
         runner = session.runners.get(run_key)
         if runner is None:
-            runner = _build_runner(dist, seg.step, measure, history)
+            runner = _build_runner(dist, seg.step, measure, history,
+                                   chan is not None)
             session.runners[run_key] = runner
+        xs_arg = jnp.asarray(xs)
+        if chan is not None:
+            # Global round index per scan step, precomputed as scanned
+            # xs (the schedule is a pure function of the round index, so
+            # this is data-independent): ledger.rounds is exact here —
+            # every prior segment has already been replayed.
+            rid = ledger.rounds + np.arange(seg.count,
+                                            dtype=np.int32) * rounds_per_step
+            xs_arg = (jnp.asarray(rid), xs_arg)
         # The compiled run records nothing: any trace-time metering goes
         # to a throwaway ledger (jit may or may not retrace — either way
         # the schedule replay below is the single source of truth).
         dist.comm.ledger = CommLedger()
         try:
-            carry, out = runner(carry, jnp.asarray(xs))
+            carry, out = runner(carry, xs_arg)
         finally:
             dist.comm.ledger = ledger
+            if chan is not None:
+                dist.comm.reset_round()
         if measure is not None or history:
             outs.append(out)
-        records, rounds_per_step, marks = session.schedules[sched_key]
-        ledger.replay_schedule(records, rounds_per_step, marks, seg.count)
+        ledger.replay_schedule(records, rounds_per_step, marks, seg.count,
+                               channel=chan)
         rounds += seg.count
     gaps = iterates = None
     if measure is not None:

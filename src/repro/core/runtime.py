@@ -383,13 +383,19 @@ def _run_sharded(prob: ERMProblem, algorithm_body: Optional[Callable],
         A = prob.A
     led = ledger if ledger is not None else CommLedger()
     backend = resolve_oracle_backend(backend)
+    from .channel import parse_channel
+    chan = parse_channel(channel)
+    scheduled = getattr(chan, "scheduled", False)
     pre_records, pre_rounds = len(led.records), led.rounds
     spans = []   # (start, end, rounds_traced, count) per scanned segment
+    # run-time global round base of the NEXT scanned segment (python int:
+    # each segment's rounds-per-step is concrete at trace time)
+    run_base = [pre_rounds]
 
     def body(A_loc, y):
         dist = ShardedDistERM(A_loc, y, prob.loss, prob.lam, prob.n,
                               axis=axis, ledger=led, backend=backend,
-                              channel=channel)
+                              channel=chan)
         if engine == "python":
             return algorithm_body(dist, rounds)
         program = program_builder(dist, rounds)
@@ -403,9 +409,26 @@ def _run_sharded(prob: ERMProblem, algorithm_body: Optional[Callable],
                 c, _ = _step(dist, c, x)
                 return c, None
 
-            carry, _ = lax.scan(scan_body, carry, xs)
-            spans.append((start, len(led.records), led.rounds - r0,
-                          seg.count))
+            def sched_body(cr, x, _step=seg.step):
+                # scheduled channel: thread the global round index as a
+                # carried counter so the transform switches stages
+                # mid-scan; the per-step advance is concrete at trace
+                # time (the ledger meters eagerly while tracing).
+                c, rk = cr
+                dist.comm.begin_round(rk)
+                r_in = led.rounds
+                c, _ = _step(dist, c, x)
+                dist.comm.reset_round()
+                return (c, rk + (led.rounds - r_in)), None
+
+            if scheduled:
+                (carry, _), _ = lax.scan(
+                    sched_body, (carry, jnp.int32(run_base[0])), xs)
+            else:
+                carry, _ = lax.scan(scan_body, carry, xs)
+            r_traced = led.rounds - r0
+            run_base[0] += r_traced * seg.count
+            spans.append((start, len(led.records), r_traced, seg.count))
         return program.final(carry)
 
     # pallas_call has no shard_map replication rule, and lax.scan carries
@@ -438,9 +461,17 @@ def _run_sharded(prob: ERMProblem, algorithm_body: Optional[Callable],
             span_marks = [m - start for m in marks if start < m <= end]
             for _ in range(count):
                 base = len(expanded)
-                expanded.extend(span_records)
+                if scheduled:
+                    # trace-time prices are provisional (the round index
+                    # was a tracer): re-price each repeat from its
+                    # global round base, as the scan-engine replay does.
+                    from .comm import repriced_records
+                    expanded.extend(repriced_records(
+                        span_records, span_marks, rounds_total, chan))
+                else:
+                    expanded.extend(span_records)
                 new_marks.extend(base + m for m in span_marks)
-            rounds_total += r_traced * count
+                rounds_total += r_traced
             prev_end = end
         new_marks.extend(len(expanded) + (m - prev_end)
                          for m in marks if m > prev_end)

@@ -1,0 +1,541 @@
+"""Bits-to-eps frontier: rounds-vs-wire-bits search across channels.
+
+PR 5 made the ledger meter wire bits per round; adaptive channels
+(``core.channel``'s ``sched:``/``gap:`` grammars) make the per-round
+precision a *policy*.  This module searches the resulting frontier: for
+each certification cell (instance x algorithm) it re-executes the run
+under a candidate set of channels —
+
+  * the fixed channels (identity / fp16 / int8 / topk:0.25),
+  * round schedules derived from the identity run's measured
+    rounds-to-eps (coarse-early, fine-late switch points),
+  * gap-adaptive channels whose thresholds sit at the geometric midpoint
+    of the identity run's start gap and the eps target
+
+— and records, per eps threshold, the measured rounds, the exact wire
+bits through that round (``CommLedger.bits_through_round``), the
+schedule-aware bit lower bound (the certifying round bound priced at the
+stage active in each bounded round), and the certification verdicts.
+Points are Pareto-marked on the (rounds, bits) plane.
+
+Two findings the published report must carry (``benchmarks/
+bits_frontier`` gates both):
+
+  * **adaptive helps** where the per-round payload is a compressible
+    vector: on the Theorem-2 hard chain a coarse-early schedule reaches
+    the same eps in the same rounds as the identity wire at a fraction
+    of the bits — strictly beating the best *fixed* channel, whose
+    precision must be paid in every round;
+  * **adaptive cannot help** where the wire floor is scalar-dominated:
+    the incremental family (Theorem 4, DSVRG) spends one exact 32-bit
+    scalar per stochastic round — channels never touch scalars — so the
+    certified bit floor ``bound_rounds x 32`` is *invariant to every
+    candidate*, and no schedule beats the best fixed channel on
+    measured bits either.  That negative result is the frontier-level
+    echo of the paper's lower bound.
+
+Every point embeds its ``RunSpec``; any row re-executes verbatim via
+``repro.api.run(RunSpec.from_dict(point["run_spec"]))`` — the
+differential test in ``tests/test_api.py`` pins this round trip
+bit-identically.
+
+Entry points: ``python -m repro.experiments.sweep --frontier --preset
+<name>`` and ``python -m benchmarks.bits_frontier`` (report + gates).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro import api
+
+from .instances import build_instance
+from .sweep import PRESETS, _bound_bits
+
+FRONTIER_SCHEMA_VERSION = 1
+
+COMMAND = "PYTHONPATH=src python -m benchmarks.bits_frontier"
+
+# the fixed baselines every cell runs; adaptive candidates are derived
+# per cell from the identity run (see _adaptive_candidates)
+FIXED_CANDIDATES = ("identity", "fp16", "int8", "topk:0.25")
+
+# presets the frontier knows how to sweep, with the eps grid the search
+# uses (coarser thresholds than the certification presets: the frontier
+# is about *where* each channel's noise floor bites, so the grid must
+# straddle the floors)
+FRONTIER_EPS: Dict[str, Tuple[float, ...]] = {
+    "thm2-small": (1e-4, 1e-6),
+    "thm4-small": (1e-4,),
+    "lasso": (1e-4, 1e-6),
+    "logistic": (1e-4, 1e-6),
+}
+
+
+# --------------------------------------------------------------------------
+# Cells
+# --------------------------------------------------------------------------
+
+def preset_cells(names: Sequence[str],
+                 max_rounds: Optional[int] = None) -> List[dict]:
+    """One frontier cell per (grid point, algorithm) of each named
+    preset.  Only the presets in ``FRONTIER_EPS`` are sweepable."""
+    cells = []
+    for name in names:
+        if name not in FRONTIER_EPS:
+            raise ValueError(
+                f"preset {name!r} has no frontier configuration; "
+                f"sweepable: {sorted(FRONTIER_EPS)}")
+        spec = PRESETS[name]
+        for point in spec.grid_points():
+            for algo in spec.algorithms:
+                cells.append(dict(
+                    preset=name, instance=spec.instance,
+                    instance_params=dict(point), algorithm=algo,
+                    rounds=max_rounds or spec.max_rounds,
+                    eps=FRONTIER_EPS[name], eps_mode=spec.eps_mode))
+    return cells
+
+
+# the CI smoke set: one Theorem-2 hard cell small enough for seconds
+# (the adaptive-win row), the full Theorem-4 incremental cell (the
+# no-adaptive-win row — it is already CPU-seconds), and the lasso
+# workload (the >= 2x savings row).  Every report gate still applies.
+QUICK_CELLS: List[dict] = [
+    dict(preset="thm2-small", instance="thm2_chain",
+         instance_params=dict(d=48, kappa=16.0, lam=0.5, m=4),
+         algorithm="dagd", rounds=400, eps=(1e-2, 1e-4),
+         eps_mode="abs"),
+    dict(preset="thm4-small", instance="thm4_separable",
+         instance_params=dict(n=16, kappa=64.0, lam=0.5, m=4),
+         algorithm="dsvrg", rounds=12000, eps=(1e-4,), eps_mode="abs"),
+    dict(preset="lasso", instance="lasso",
+         instance_params=dict(n=128, d=256, m=4, tau=2e-3),
+         algorithm="prox_dagd", rounds=2500, eps=(1e-4,),
+         eps_mode="abs"),
+]
+
+
+# --------------------------------------------------------------------------
+# Candidate derivation
+# --------------------------------------------------------------------------
+
+def _adaptive_candidates(identity_result, eps_abs_targets) -> List[str]:
+    """Schedules and gap channels derived from the identity run.
+
+    Switch points come from the finest eps the identity wire reached
+    (coarse stage over the first half / three quarters of that run);
+    gap thresholds sit at the geometric midpoint between the start gap
+    and the eps target, so the channel refines roughly when half the
+    log-scale progress is made.  Deterministic given the identity run —
+    and every emitted point embeds its RunSpec, so the derivation never
+    needs to be repeated to re-execute a row.
+    """
+    reached = [(e, identity_result.measured_rounds(e))
+               for e in eps_abs_targets]
+    reached = [(e, k) for e, k in reached if k is not None]
+    if not reached:
+        return []
+    eps_target, rounds_to_eps = reached[-1]        # finest reached
+    half = max(1, rounds_to_eps // 2)
+    three_q = max(1, (3 * rounds_to_eps) // 4)
+    cands = [f"sched:int8@0,fp16@{half}",
+             f"sched:int8@0,identity@{half}",
+             f"sched:fp16@0,identity@{three_q}"]
+    gaps = identity_result.gaps
+    if gaps is not None and len(gaps):
+        g0 = max(float(gaps[0]), 1e-30)
+        thr = math.sqrt(g0 * max(float(eps_target), 1e-30))
+        if thr > 0 and math.isfinite(thr):
+            cands += [f"gap:int8,fp16@{thr:g}",
+                      f"gap:int8,identity@{thr:g}"]
+    return cands
+
+
+# --------------------------------------------------------------------------
+# One cell
+# --------------------------------------------------------------------------
+
+def _run_point(cell: dict, channel: str, backend, engine) -> dict:
+    spec = api.RunSpec(
+        instance=cell["instance"],
+        instance_params=cell["instance_params"],
+        algorithm=cell["algorithm"], rounds=cell["rounds"],
+        eps=cell["eps"], eps_mode=cell["eps_mode"], measure="gap",
+        backend=backend or "auto", engine=engine or "auto",
+        channel=channel, tag="bits-frontier")
+    pl = api.plan(spec)
+    res = pl.execute()
+    wire = res.wire_channel or res.channel
+    incremental = pl.algo.incremental
+    hard = pl.bundle.hard
+    d = pl.bundle.prob.d
+    per_eps = []
+    for e in cell["eps"]:
+        eps_abs = pl.eps_abs(e)
+        measured = res.measured_rounds(eps_abs)
+        bound = pl.bound(eps_abs)
+        bound_rounds = bound.rounds if bound else None
+        bits = (int(res.ledger.bits_through_round(measured))
+                if measured is not None else None)
+        bound_bits = _bound_bits(bound_rounds, wire, incremental, d)
+        if not hard or bound_bits is None:
+            bits_certified = None
+        elif bits is not None:
+            bits_certified = bool(bits >= bound_bits)
+        else:
+            bits_certified = (True if res.ledger.total_bits() >= bound_bits
+                              else None)
+        per_eps.append(dict(
+            eps=e, eps_abs=float(eps_abs), measured_rounds=measured,
+            bits_to_eps=bits, bound_rounds=bound_rounds,
+            bound_theorem=bound.theorem if bound else None,
+            bound_bits=bound_bits, bits_certified=bits_certified,
+            certified=pl.certify(res, e)))
+    point = dict(
+        channel=res.channel, wire_channel=wire,
+        adaptive=res.channel.startswith(("sched:", "gap:")),
+        bits_per_round=float(res.ledger.bits_per_round()),
+        total_bits=int(res.ledger.total_bits()),
+        per_eps=per_eps, run_spec=pl.spec.to_dict())
+    point["_result"] = res          # stripped before serialization
+    point["_hard"] = hard
+    point["_incremental"] = incremental
+    pl.release()
+    return point
+
+
+def _pareto_mark(points: List[dict], eps_index: int) -> None:
+    """Non-dominated points on the (rounds, bits) plane at one eps."""
+    coords = []
+    for p in points:
+        pe = p["per_eps"][eps_index]
+        if pe["measured_rounds"] is not None and pe["bits_to_eps"]:
+            coords.append((p, pe["measured_rounds"], pe["bits_to_eps"]))
+    for p, r, b in coords:
+        dominated = any(
+            (r2 <= r and b2 <= b and (r2 < r or b2 < b))
+            for _, r2, b2 in coords)
+        p["per_eps"][eps_index]["pareto"] = not dominated
+    for p in points:
+        p["per_eps"][eps_index].setdefault("pareto", False)
+
+
+def run_cell(cell: dict, backend=None, engine=None,
+             verbose: bool = False) -> dict:
+    """Run one cell under the full candidate set; returns the cell
+    record (points + per-eps summary)."""
+    import sys
+
+    identity = _run_point(cell, "identity", backend, engine)
+    eps_abs = [pe["eps_abs"] for pe in identity["per_eps"]]
+    candidates = [c for c in FIXED_CANDIDATES if c != "identity"]
+    candidates += _adaptive_candidates(identity["_result"], eps_abs)
+    points = [identity]
+    for ch in candidates:
+        points.append(_run_point(cell, ch, backend, engine))
+    hard = identity.pop("_hard")
+    incremental = identity.pop("_incremental")
+    for p in points:
+        p.pop("_result", None)
+        p.pop("_hard", None)
+        p.pop("_incremental", None)
+
+    # savings vs the identity wire, per eps
+    for p in points:
+        for pe, ipe in zip(p["per_eps"], identity["per_eps"]):
+            pe["savings_vs_identity"] = (
+                round(ipe["bits_to_eps"] / pe["bits_to_eps"], 2)
+                if pe["bits_to_eps"] and ipe["bits_to_eps"] else None)
+
+    summary = []
+    for i, e in enumerate(cell["eps"]):
+        _pareto_mark(points, i)
+        summary.append(_eps_summary(points, i, e, hard))
+    record = dict(
+        preset=cell["preset"], instance=cell["instance"],
+        instance_params=dict(cell["instance_params"]),
+        algorithm=cell["algorithm"], rounds=cell["rounds"],
+        eps=list(cell["eps"]), eps_mode=cell["eps_mode"],
+        hard=hard, incremental=incremental,
+        points=points, per_eps_summary=summary)
+    if verbose:
+        for s in summary:
+            print(f"[frontier] {cell['instance']} {cell['algorithm']:>9} "
+                  f"eps={s['eps']:g}: best fixed "
+                  f"{s['best_fixed'] or '-'} ({s['best_fixed_bits'] or '-'}"
+                  f" bits), best adaptive {s['best_adaptive'] or '-'} "
+                  f"({s['best_adaptive_bits'] or '-'} bits), "
+                  f"adaptive_win={s['adaptive_win']}", file=sys.stderr)
+    return record
+
+
+def _usable(p: dict, i: int, hard: bool) -> Optional[int]:
+    """bits_to_eps iff the point reached this eps (and, on a hard
+    instance, kept both certifications)."""
+    pe = p["per_eps"][i]
+    if pe["bits_to_eps"] is None:
+        return None
+    if hard and (pe["certified"] is False or pe["bits_certified"] is False):
+        return None
+    return pe["bits_to_eps"]
+
+
+def _eps_summary(points: List[dict], i: int, eps: float,
+                 hard: bool) -> dict:
+    fixed = [(p["channel"], _usable(p, i, hard))
+             for p in points if not p["adaptive"]]
+    adaptive = [(p["channel"], _usable(p, i, hard))
+                for p in points if p["adaptive"]]
+    fixed = [(c, b) for c, b in fixed if b is not None]
+    adaptive = [(c, b) for c, b in adaptive if b is not None]
+    best_fixed = min(fixed, key=lambda cb: cb[1]) if fixed else (None, None)
+    best_adaptive = (min(adaptive, key=lambda cb: cb[1])
+                     if adaptive else (None, None))
+    bounds = {pe["bound_bits"] for p in points
+              for pe in [p["per_eps"][i]] if pe["bound_bits"] is not None}
+    return dict(
+        eps=eps,
+        best_fixed=best_fixed[0], best_fixed_bits=best_fixed[1],
+        best_adaptive=best_adaptive[0],
+        best_adaptive_bits=best_adaptive[1],
+        adaptive_win=bool(best_adaptive[1] is not None
+                          and best_fixed[1] is not None
+                          and best_adaptive[1] < best_fixed[1]),
+        # the certified floor is channel-invariant iff every candidate
+        # prices the bound identically (always true for the scalar-
+        # dominated incremental family)
+        bound_bits_invariant=(len(bounds) <= 1))
+
+
+# --------------------------------------------------------------------------
+# The sweep
+# --------------------------------------------------------------------------
+
+def run_frontier(cells: List[dict], backend=None, engine=None,
+                 verbose: bool = False) -> dict:
+    """Run every cell and assemble the report document (the
+    ``spec``/``summary``/``command`` envelope the results index
+    expects)."""
+    import jax
+
+    records = [run_cell(c, backend=backend, engine=engine, verbose=verbose)
+               for c in cells]
+    all_pe = [pe for r in records for p in r["points"]
+              for pe in p["per_eps"]]
+    certifiable = [pe for pe in all_pe if pe["bits_certified"] is not None]
+    hard_no_win = list(dict.fromkeys(
+        f"{r['instance']}/{r['algorithm']}" for r in records
+        if r["hard"] and not any(s["adaptive_win"]
+                                 for s in r["per_eps_summary"])))
+    hard_wins = list(dict.fromkeys(
+        f"{r['instance']}/{r['algorithm']}" for r in records
+        if r["hard"] and any(s["adaptive_win"]
+                             for s in r["per_eps_summary"])))
+    workload_best = {}
+    for r in records:
+        if r["hard"]:
+            continue
+        best = _workload_best_savings(r)
+        if best is not None:
+            workload_best[f"{r['instance']}/{r['algorithm']}"] = best
+    return dict(
+        schema_version=FRONTIER_SCHEMA_VERSION,
+        command=COMMAND,
+        spec=dict(name="bits-frontier",
+                  instance=",".join(sorted({r["instance"]
+                                            for r in records})),
+                  presets=sorted({r["preset"] for r in records}),
+                  fixed_candidates=list(FIXED_CANDIDATES)),
+        platform=jax.default_backend(),
+        summary=dict(
+            records=len(all_pe),
+            certifiable=len(certifiable),
+            certified=sum(1 for pe in certifiable if pe["bits_certified"]),
+            failed=sum(1 for pe in certifiable
+                       if pe["bits_certified"] is False),
+            hard_no_adaptive_win=hard_no_win,
+            hard_adaptive_wins=hard_wins,
+            workload_best_savings=workload_best),
+        cells=records)
+
+
+def _workload_best_savings(record: dict) -> Optional[float]:
+    """Best bits savings vs identity among points whose *reach* matches
+    the identity wire at every eps (the unchanged-verdict condition for
+    workloads, where certification does not apply)."""
+    identity = next(p for p in record["points"]
+                    if p["channel"] == "identity")
+    ident_reach = [pe["measured_rounds"] is not None
+                   for pe in identity["per_eps"]]
+    best = None
+    for p in record["points"]:
+        if [pe["measured_rounds"] is not None
+                for pe in p["per_eps"]] != ident_reach:
+            continue
+        for pe in p["per_eps"]:
+            s = pe["savings_vs_identity"]
+            if s is not None and (best is None or s > best):
+                best = s
+    return best
+
+
+# --------------------------------------------------------------------------
+# Gates (shared by benchmarks/bits_frontier and the sweep CLI)
+# --------------------------------------------------------------------------
+
+def gate_failures(doc: dict) -> List[str]:
+    """The acceptance gates: every point bit-certified against its
+    (schedule-aware) floor; at least one hard cell where adaptivity
+    provably cannot help; at least one workload with >= 2x total-bit
+    reduction at unchanged verdict."""
+    fails = []
+    if doc["summary"]["failed"]:
+        bad = [(r["instance"], r["algorithm"], p["channel"], pe["eps"])
+               for r in doc["cells"] for p in r["points"]
+               for pe in p["per_eps"] if pe["bits_certified"] is False]
+        fails.append(f"bit-certification BELOW BOUND at {bad}")
+    no_win = doc["summary"]["hard_no_adaptive_win"]
+    if not no_win:
+        fails.append("no hard instance exhibits the no-adaptive-win "
+                     "negative result (expected the incremental family)")
+    else:
+        # the negative result must be floor-level, not just measured:
+        # on those cells the certified bound must be channel-invariant
+        for r in doc["cells"]:
+            label = f"{r['instance']}/{r['algorithm']}"
+            if label in no_win and r["incremental"]:
+                if not all(s["bound_bits_invariant"]
+                           for s in r["per_eps_summary"]):
+                    fails.append(f"{label}: certified floor varies "
+                                 f"across candidates")
+    best = doc["summary"]["workload_best_savings"]
+    if not any(v is not None and v >= 2.0 for v in best.values()):
+        fails.append(f"no workload reached a 2x bit reduction at "
+                     f"unchanged verdict (best: {best})")
+    return fails
+
+
+# --------------------------------------------------------------------------
+# Reporting
+# --------------------------------------------------------------------------
+
+def render_markdown(doc: dict) -> str:
+    lines = [
+        "# Bits-to-eps frontier — `bits-frontier`",
+        "",
+        f"<!-- Generated by `{doc['command']}`. Do not edit by hand. -->",
+        f"*Generated by* `{doc['command']}` *— regenerate instead of "
+        "editing.*",
+        "",
+        f"- **Platform:** `{doc['platform']}`",
+        f"- **Fixed candidates:** "
+        + ", ".join(f"`{c}`" for c in doc["spec"]["fixed_candidates"])
+        + "; adaptive `sched:`/`gap:` candidates derived per cell from "
+        "the identity run",
+        f"- **Bit certification:** {doc['summary']['certified']}/"
+        f"{doc['summary']['certifiable']} hard points at or above their "
+        "schedule-aware bit floor"
+        + (f", **{doc['summary']['failed']} FAILED**"
+           if doc['summary']['failed'] else ""),
+        f"- **Adaptive wins (hard):** "
+        + (", ".join(f"`{c}`"
+                     for c in doc["summary"]["hard_adaptive_wins"])
+           or "none"),
+        f"- **Adaptive cannot help (hard):** "
+        + (", ".join(f"`{c}`"
+                     for c in doc["summary"]["hard_no_adaptive_win"])
+           or "none"),
+        "",
+    ]
+    for r in doc["cells"]:
+        params = ", ".join(f"{k}={v:g}"
+                           for k, v in r["instance_params"].items())
+        lines += [
+            f"## `{r['algorithm']}` on `{r['instance']}` ({params})"
+            + (" — hard" if r["hard"] else " — workload"),
+            "",
+            "| channel | wire channel | "
+            + " | ".join(f"rounds @ {e:g} | bits @ {e:g} | ×fewer | "
+                         f"frontier" for e in r["eps"]) + " |",
+            "|---|---|" + "---|" * (4 * len(r["eps"])),
+        ]
+        for p in r["points"]:
+            cells = []
+            for pe in p["per_eps"]:
+                if pe["measured_rounds"] is None:
+                    cells += ["not reached", "—", "—", ""]
+                else:
+                    cells += [
+                        str(pe["measured_rounds"]),
+                        f"{pe['bits_to_eps']:,}",
+                        (f"{pe['savings_vs_identity']:.2f}×"
+                         if pe["savings_vs_identity"] else "—"),
+                        "◆" if pe.get("pareto") else ""]
+            wire = (f"`{p['wire_channel']}`"
+                    if p["wire_channel"] != p["channel"] else "=")
+            lines.append(f"| `{p['channel']}` | {wire} | "
+                         + " | ".join(cells) + " |")
+        for s in r["per_eps_summary"]:
+            if s["best_fixed"] is None:
+                continue
+            verdict = ("**adaptive wins**" if s["adaptive_win"]
+                       else "adaptive does not beat the best fixed "
+                            "channel")
+            lines.append("")
+            lines.append(
+                f"At eps={s['eps']:g}: best fixed `{s['best_fixed']}` "
+                f"({s['best_fixed_bits']:,} bits), best adaptive "
+                f"{'`' + s['best_adaptive'] + '`' if s['best_adaptive'] else '—'}"
+                + (f" ({s['best_adaptive_bits']:,} bits)"
+                   if s["best_adaptive_bits"] else "")
+                + f" — {verdict}."
+                + (" The certified bit floor is channel-invariant "
+                   "across every candidate."
+                   if s["bound_bits_invariant"] and r["incremental"]
+                   else ""))
+        lines.append("")
+    lines += [
+        "## Reading the frontier",
+        "",
+        "Each table re-executes one certification cell under every "
+        "candidate channel. `×fewer` is the identity wire's bits-to-eps "
+        "over the candidate's; `◆` marks the (rounds, bits) Pareto "
+        "frontier at that eps. A `gap:` channel resolves to the "
+        "`sched:` schedule in its *wire channel* column before "
+        "executing (deterministic identity probe; see "
+        "`docs/architecture.md`).",
+        "",
+        "The negative result is structural: incremental (Theorem-4) "
+        "rounds carry one exact 32-bit scalar — channels never touch "
+        "scalar reductions — so the certified floor "
+        "`bound_rounds × 32` cannot be lowered by *any* schedule, and "
+        "the measured frontier confirms no adaptive candidate beats "
+        "the best fixed channel there. On vector-payload cells "
+        "(Theorem 2, lasso, logistic) coarse-early schedules beat "
+        "every fixed channel: the early rounds don't need the "
+        "precision the late rounds do.",
+        "",
+        "Every point embeds its `run_spec`: re-execute any row "
+        "verbatim with "
+        "`repro.api.run(RunSpec.from_dict(point['run_spec']))`.",
+        "",
+    ]
+    return "\n".join(lines)
+
+
+def write_report(doc: dict, out_dir=None):
+    """Write bits-frontier.{json,md} and refresh the results index."""
+    import json
+    import pathlib
+
+    from .report import default_results_dir, refresh_index
+
+    out = pathlib.Path(out_dir) if out_dir else default_results_dir()
+    out.mkdir(parents=True, exist_ok=True)
+    json_path = out / "bits-frontier.json"
+    md_path = out / "bits-frontier.md"
+    json_path.write_text(json.dumps(doc, indent=2) + "\n")
+    md_path.write_text(render_markdown(doc))
+    refresh_index(out)
+    return json_path, md_path

@@ -50,7 +50,8 @@ from .instances import build_instance
 # Spec / record / result
 # --------------------------------------------------------------------------
 
-SCHEMA_VERSION = 3      # 3: bit-level accounting + channel axis (PR 5)
+SCHEMA_VERSION = 4      # 4: wire_channel (adaptive sched:/gap: channels)
+                        # 3: bit-level accounting + channel axis (PR 5)
                         # 2: records embed their run_spec (PR 4)
 
 # Bits one exact f32 scalar occupies: the per-round wire floor of the
@@ -133,6 +134,11 @@ class SweepRecord:
     # ---- bit-level accounting (schema 3) --------------------------------
     channel: str = "identity"             # wire model; identity leaves the
                                           # legacy stream bit-identical
+    wire_channel: str = ""                # the channel actually driven on
+                                          # the wire: == channel except for
+                                          # gap: specs, which resolve to the
+                                          # sched: schedule recorded here
+                                          # (schema 4)
     bits_per_round: float = 0.0           # mean wire bits/round
     total_bits: int = 0                   # wire bits over the full budget
     bits_to_eps: Optional[int] = None     # wire bits of the first
@@ -195,6 +201,7 @@ def _ledger_fields(result: api.RunResult, bundle) -> dict:
                 sample_model_bytes_per_round=float(
                     bundle.ctx.m * bundle.prob.d * 4),
                 channel=result.channel,
+                wire_channel=result.wire_channel or result.channel,
                 bits_per_round=float(led.bits_per_round()),
                 total_bits=int(led.total_bits()))
 
@@ -207,13 +214,28 @@ def _bound_bits(bound_rounds: Optional[float], channel: str,
     full R^n / R^d vector per round (n >= d on every hard instance), so
     the floor is one d-element message through the channel — the
     ``d x precision`` scaling; incremental rounds carry one exact scalar
-    (channels never touch scalar reductions), so the floor is 32 bits."""
+    (channels never touch scalar reductions), so the floor is 32 bits —
+    a floor NO schedule can lower (the incremental bound is therefore
+    invariant to every adaptive channel).
+
+    For a round-scheduled channel the non-incremental floor is summed
+    round by round — round k's payload floor is the stage active at k —
+    which reduces exactly to ``bound_rounds * unit`` whenever the wire
+    cost is round-invariant (fixed channels, one-entry schedules)."""
     if bound_rounds is None:
         return None
     from repro.core.channel import parse_channel
-    unit = (_SCALAR_BITS if incremental
-            else parse_channel(channel).wire_bits(d, 4))
-    return float(bound_rounds) * unit
+    if incremental:
+        return float(bound_rounds) * _SCALAR_BITS
+    ch = parse_channel(channel)
+    if not getattr(ch, "scheduled", False):
+        return float(bound_rounds) * ch.wire_bits(d, 4)
+    whole = int(bound_rounds)
+    total = float(sum(ch.wire_bits(d, 4, rnd=k) for k in range(whole)))
+    frac = float(bound_rounds) - whole
+    if frac > 0:
+        total += frac * ch.wire_bits(d, 4, rnd=whole)
+    return total
 
 
 def _cell_records(spec: SweepSpec, pl: api.ExecutionPlan,
@@ -245,7 +267,10 @@ def _cell_records(spec: SweepSpec, pl: api.ExecutionPlan,
                  if measured and bound_rounds else None)
         bits_to_eps = (int(result.ledger.bits_through_round(measured))
                        if measured is not None else None)
-        bound_bits = _bound_bits(bound_rounds, result.channel,
+        # bound against the channel actually driven on the wire (a gap:
+        # spec prices as the sched: schedule it resolved to)
+        bound_bits = _bound_bits(bound_rounds,
+                                 result.wire_channel or result.channel,
                                  algo.incremental, bundle.prob.d)
         if not bundle.hard or bound_bits is None:
             bits_certified = None
@@ -434,11 +459,22 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                              "RunSpec(engine=...) via repro.api")
     parser.add_argument("--channel", default=None,
                         help="wire model for per-machine uploads "
-                             "(identity/fp16/bf16/int8/topk[:rho]); "
-                             "feeds RunSpec(channel=...) for every cell. "
-                             "Presets are published under identity; a "
-                             "lossy channel legitimately changes "
-                             "measured rounds and bits")
+                             "(identity/fp16/bf16/int8/topk[:rho], a "
+                             "round schedule 'sched:<ch>@0,<ch>@<k>,...' "
+                             "or a gap-adaptive 'gap:<ch>,<ch>@<thr>,"
+                             "...'); feeds RunSpec(channel=...) for "
+                             "every cell. Presets are published under "
+                             "identity; a lossy channel legitimately "
+                             "changes measured rounds and bits")
+    parser.add_argument("--frontier", action="store_true",
+                        help="run the bits-to-eps frontier search "
+                             "(repro.experiments.frontier) over the "
+                             "named presets instead of the plain sweep: "
+                             "every cell is re-run under a candidate "
+                             "set of fixed + scheduled + gap-adaptive "
+                             "channels and the rounds-vs-bits frontier "
+                             "is published to docs/results/"
+                             "bits-frontier.{json,md}")
     parser.add_argument("--no-report", action="store_true",
                         help="run and print, but write nothing")
     parser.add_argument("-q", "--quiet", action="store_true")
@@ -457,6 +493,32 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
 
     names = sorted(PRESETS) if "all" in args.preset else args.preset
     out_dir = args.out or default_results_dir()
+
+    if args.frontier:
+        from . import frontier
+        if "all" in args.preset:
+            names = sorted(frontier.FRONTIER_EPS)
+        try:
+            cells = frontier.preset_cells(names,
+                                          max_rounds=args.max_rounds)
+        except ValueError as e:
+            print(f"[frontier] {e}", file=sys.stderr)
+            return 2
+        doc = frontier.run_frontier(cells, backend=args.backend,
+                                    engine=args.engine,
+                                    verbose=not args.quiet)
+        line = (f"[frontier] {len(doc['cells'])} cells, "
+                f"{doc['summary']['certified']}/"
+                f"{doc['summary']['certifiable']} points bit-certified")
+        if not args.no_report:
+            json_path, md_path = frontier.write_report(doc, out_dir)
+            line += f" -> {json_path}, {md_path}"
+        print(line)
+        fails = frontier.gate_failures(doc)
+        for f in fails:
+            print(f"[frontier] GATE FAILED: {f}", file=sys.stderr)
+        return 1 if fails else 0
+
     failed = 0
     for name in names:
         spec = PRESETS[name]

@@ -281,3 +281,72 @@ def test_group_key_composition_partitions_the_axes():
             groups.setdefault(cell.group_key(), []).append(name)
     partition = sorted(sorted(g) for g in groups.values())
     assert partition == [["fp16"], ["k16", "k64"], ["kernel"], ["short"]]
+
+
+# --------------------------------------------------------------------------
+# adaptive channels: batching, grouping, and the frontier round trip
+# --------------------------------------------------------------------------
+
+def test_group_key_separates_schedules():
+    """Scheduled channels reach the group key as their canonical wire
+    channel: same schedule pools, different switch round never does, and
+    a gap: spec pools with the sched: it resolves to."""
+    k64 = {**TINY, "instance_params": dict(d=24, kappa=64.0, lam=0.5,
+                                           m=4)}
+    a = api.prepare_cell(plan(RunSpec(**TINY,
+                                      channel="sched:int8@0,fp16@10")))
+    b = api.prepare_cell(plan(RunSpec(**k64,
+                                      channel="sched:int8@0,fp16@10")))
+    c = api.prepare_cell(plan(RunSpec(**TINY,
+                                      channel="sched:int8@0,fp16@20")))
+    assert a.group_key() == b.group_key()
+    assert a.group_key() != c.group_key()
+    assert a.group_key()[2] == "sched:int8@0,fp16@10"
+
+
+def test_execute_batch_matches_sequential_under_schedules():
+    """The vmapped group threads the same global round indices the
+    sequential scan does, so scheduled-channel ledgers — re-priced
+    records, marks and all — stay bit-identical between the paths."""
+    k64 = {**TINY, "instance_params": dict(d=24, kappa=64.0, lam=0.5,
+                                           m=4)}
+    specs = [RunSpec(**TINY, channel="sched:int8@0,fp16@10"),
+             RunSpec(**k64, channel="sched:int8@0,fp16@10")]
+    seq = [plan(s).execute() for s in specs]
+    bat = execute_batch([plan(s) for s in specs])
+    assert all(r.batched for r in bat)
+    for s, b in zip(seq, bat):
+        assert b.ledger.typed_stream() == s.ledger.typed_stream()
+        assert b.ledger.round_marks == s.ledger.round_marks
+        assert b.measured_rounds(1e-3) == s.measured_rounds(1e-3)
+        np.testing.assert_allclose(np.asarray(b.w), np.asarray(s.w),
+                                   atol=1e-5, rtol=1e-5)
+
+
+def test_frontier_points_reexecute_bit_identically():
+    """Differential gate for the bits-to-eps frontier: every point the
+    search emits embeds a RunSpec, and re-executing that spec from its
+    serialized form reproduces the verdicts, the measured rounds, and
+    the total wire bits exactly — gap: points included (their schedule
+    re-resolves from a fresh deterministic identity probe)."""
+    from repro.experiments import frontier
+    cell = dict(preset="thm2-small", instance="thm2_chain",
+                instance_params=dict(d=24, kappa=16.0, lam=0.5, m=4),
+                algorithm="dagd", rounds=120, eps=(1e-2, 1e-3),
+                eps_mode="abs")
+    record = frontier.run_cell(cell)
+    assert any(p["adaptive"] for p in record["points"])
+    assert any(p["channel"].startswith("gap:") for p in record["points"])
+    for p in record["points"]:
+        pl = plan(RunSpec.from_dict(p["run_spec"]))
+        res = pl.execute()
+        assert (res.wire_channel or res.channel) == p["wire_channel"]
+        assert int(res.ledger.total_bits()) == p["total_bits"]
+        for pe in p["per_eps"]:
+            measured = res.measured_rounds(pl.eps_abs(pe["eps"]))
+            assert measured == pe["measured_rounds"], p["channel"]
+            assert pl.certify(res, pe["eps"]) == pe["certified"]
+            if measured is not None:
+                assert int(res.ledger.bits_through_round(measured)) == \
+                    pe["bits_to_eps"], p["channel"]
+        pl.release()

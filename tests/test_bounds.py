@@ -118,14 +118,33 @@ def test_sweep_produces_certified_record(tiny_sweep_result):
     assert r.bytes_per_round > 0
 
 
+@pytest.mark.slow
+def test_full_frontier_sweep_gates(tmp_path):
+    """The full published bits-to-eps frontier (both hard families +
+    both workloads) passes every gate: all hard points bit-certified
+    against their schedule-aware floors, the Theorem-4 no-adaptive-win
+    negative result present with a channel-invariant floor, and a >= 2x
+    workload savings at unchanged verdict.  CI runs the --quick subset;
+    this is the sweep behind docs/results/bits-frontier.{json,md}."""
+    from benchmarks.bits_frontier import FULL_PRESETS
+    from repro.experiments import frontier
+    cells = frontier.preset_cells(FULL_PRESETS)
+    doc = frontier.run_frontier(cells, verbose=False)
+    assert frontier.gate_failures(doc) == []
+    json_path, md_path = frontier.write_report(doc, tmp_path)
+    assert json_path.exists() and md_path.exists()
+
+
 def test_sweep_report_renders(tiny_sweep_result, tmp_path):
     from repro.experiments import write_report
     json_path, md_path = write_report(tiny_sweep_result, tmp_path)
     assert json_path.exists() and md_path.exists()
     assert (tmp_path / "README.md").exists()    # index refreshed
     doc = json_path.read_text()
-    assert '"schema_version": 2' in doc       # 2: records embed run_spec
+    assert '"schema_version": 4' in doc       # 4: records carry wire_channel
+    assert '"schema_version": 3' in doc       # embedded run_specs (schema 3)
     assert '"run_spec"' in doc
+    assert '"wire_channel"' in doc
     md = md_path.read_text()
     assert "Measured rounds vs lower bound" in md
     assert "thm2" in md

@@ -1,0 +1,222 @@
+"""Metamorphic properties of the adaptive (scheduled / gap) channels.
+
+Four families of relations, each checkable without knowing a "correct"
+output, only how a *transformed* input must relate:
+
+  * **bit monotonicity** — replacing any stage of a schedule with a
+    coarser channel can only shrink the wire bits, per round and
+    cumulatively through every round of a real metered run;
+  * **identity at round 0** — a schedule whose first stage is fp32 is
+    *invisible* before its first switch: payloads pass through exactly
+    and the ledger prefix is bit-identical to the identity wire;
+  * **schedule-vs-constant equivalence** — a one-entry schedule
+    (``sched:<ch>@0``) is the fixed channel ``<ch>``: typed ledger
+    streams, marks, and iterates agree bit-for-bit on both engines;
+  * **prefix additivity** — ``bits_through_round(k)`` is an exact
+    prefix sum over the round marks, on non-uniform round structures
+    (DISCO-F's Newton+CG segments, DSVRG's snapshot+epoch), and each
+    round's records price at the stage active at that round.
+
+Property tests use hypothesis when installed; otherwise the
+deterministic fallback shim in ``tests/_hypothesis_fallback.py``.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.channel import make_schedule, parse_channel
+from repro.core.engine import run_program
+from repro.core.runtime import LocalDistERM
+from repro.experiments.instances import build_instance
+from repro.experiments.registry import get_algorithm
+
+
+# fine -> coarse, by bits per element (overheads included for elems >= 4:
+# int8's 32-bit scale amortizes below fp16 from 4 elements up)
+PRECISION_ORDER = ("identity", "fp16", "int8")
+
+
+def _payload(n, seed, scale=1.0):
+    rng = np.random.RandomState(seed)
+    return jnp.asarray(rng.randn(n).astype(np.float32) * scale)
+
+
+def _run_ledger(channel, engine="scan", algorithm="dagd", rounds=10,
+                n=24, d=32, m=4):
+    bundle = build_instance("random_ridge", n=n, d=d, m=m)
+    algo = get_algorithm(algorithm)
+    dist = LocalDistERM(bundle.prob, bundle.part, backend="einsum",
+                        channel=channel)
+    program = algo.program(dist, rounds=rounds,
+                           **algo.make_kwargs(bundle.ctx))
+    result = run_program(dist, program, engine=engine)
+    return dist.comm.ledger, result
+
+
+# --------------------------------------------------------------------------
+# bit monotonicity
+# --------------------------------------------------------------------------
+
+@given(elems=st.integers(4, 4096), itemsize=st.sampled_from([4, 8]),
+       rnd=st.integers(0, 40))
+@settings(max_examples=6, deadline=None)
+def test_coarser_stage_never_costs_more_wire_bits(elems, itemsize, rnd):
+    """Pointwise: at every round, coarsening any stage of a schedule can
+    only shrink that round's message cost."""
+    for i in range(len(PRECISION_ORDER) - 1):
+        fine = parse_channel(PRECISION_ORDER[i])
+        coarse = parse_channel(PRECISION_ORDER[i + 1])
+        assert coarse.wire_bits(elems, itemsize) <= \
+            fine.wire_bits(elems, itemsize)
+    sched = parse_channel("sched:identity@0,fp16@5,int8@20")
+    coarsened = parse_channel("sched:fp16@0,int8@5,int8@20")
+    assert coarsened.wire_bits(elems, itemsize, rnd=rnd) <= \
+        sched.wire_bits(elems, itemsize, rnd=rnd)
+
+
+@given(switch=st.integers(1, 9), seed=st.integers(0, 99))
+@settings(max_examples=4, deadline=None)
+def test_coarsened_schedule_shrinks_every_ledger_prefix(switch, seed):
+    """Cumulative, on a real metered run: the coarsened schedule's
+    bits_through_round(k) is <= the original's at EVERY k, not just in
+    total."""
+    del seed    # the run is deterministic; seed only spreads examples
+    fine = f"sched:identity@0,fp16@{switch}"
+    coarse = f"sched:fp16@0,int8@{switch}"
+    led_f, _ = _run_ledger(fine, rounds=12)
+    led_c, _ = _run_ledger(coarse, rounds=12)
+    assert led_f.rounds == led_c.rounds == 12
+    for k in range(13):
+        assert led_c.bits_through_round(k) <= led_f.bits_through_round(k)
+
+
+# --------------------------------------------------------------------------
+# identity at round 0
+# --------------------------------------------------------------------------
+
+@given(n=st.integers(4, 300), seed=st.integers(0, 99),
+       switch=st.integers(1, 9))
+@settings(max_examples=6, deadline=None)
+def test_fp32_head_passes_payloads_through_exactly(n, seed, switch):
+    ch = parse_channel(f"sched:fp32@0,int8@{switch}")
+    x = _payload(n, seed)
+    for r in (0, switch - 1):
+        np.testing.assert_array_equal(np.asarray(ch.apply(x, r)),
+                                      np.asarray(x))
+        assert ch.wire_bits(n, 4, rnd=r) == 32 * n
+    # ...and the switch round is no longer identity
+    assert ch.wire_bits(n, 4, rnd=switch) == 8 * n + 32
+
+
+@given(switch=st.integers(2, 8))
+@settings(max_examples=4, deadline=None)
+def test_fp32_head_ledger_prefix_matches_identity(switch):
+    """Before the first switch the schedule's metered stream is
+    bit-identical to the identity wire — per round, via the marks."""
+    led_id, _ = _run_ledger("identity", rounds=10)
+    led_s, _ = _run_ledger(f"sched:fp32@0,int8@{switch}", rounds=10)
+    assert led_s.round_marks == led_id.round_marks
+    for k in range(switch + 1):
+        assert led_s.bits_through_round(k) == \
+            led_id.bits_through_round(k), k
+    assert led_s.total_bits() < led_id.total_bits()
+
+
+# --------------------------------------------------------------------------
+# schedule-vs-constant equivalence
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("fixed", ["identity", "fp16", "int8",
+                                   "topk:0.25"])
+@pytest.mark.parametrize("engine", ["python", "scan"])
+def test_one_entry_schedule_is_the_fixed_channel(fixed, engine):
+    led_fix, res_fix = _run_ledger(fixed, engine=engine)
+    led_one, res_one = _run_ledger(f"sched:{fixed}@0", engine=engine)
+    assert led_one.typed_stream() == led_fix.typed_stream()
+    assert led_one.round_marks == led_fix.round_marks
+    assert led_one.rounds == led_fix.rounds
+    np.testing.assert_array_equal(np.asarray(res_one.w),
+                                  np.asarray(res_fix.w))
+
+
+def test_one_entry_schedule_is_not_scheduled():
+    """The scan engines' fast path: a single-stage schedule needs no
+    round threading (that is WHY the streams above are bit-identical)."""
+    assert parse_channel("sched:int8@0").scheduled is False
+    assert parse_channel("sched:fp32@0").lossless is True
+    assert parse_channel("sched:int8@0,fp16@3").scheduled is True
+
+
+# --------------------------------------------------------------------------
+# prefix additivity on non-uniform round structures
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("algorithm,rounds", [("disco_f", 12),
+                                              ("dsvrg", 30)])
+@pytest.mark.parametrize("engine", ["python", "scan"])
+def test_bits_through_round_is_an_exact_prefix_sum(algorithm, rounds,
+                                                   engine):
+    """On multi-segment programs (Newton+CG, snapshot+epochs) under a
+    mid-run schedule switch: bits_through_round(k) == the literal sum of
+    the records the marks assign to the first k rounds, and splitting at
+    any j is additive."""
+    channel = f"sched:identity@0,int8@{rounds // 2}"
+    led, _ = _run_ledger(channel, engine=engine, algorithm=algorithm,
+                         rounds=rounds)
+    assert len(led.round_marks) == led.rounds
+    marks = [0] + list(led.round_marks)
+    for k in range(led.rounds + 1):
+        expect = sum(r.bits for r in led.records[:marks[k]])
+        assert led.bits_through_round(k) == expect, k
+    for j in (1, led.rounds // 2, led.rounds - 1):
+        head = led.bits_through_round(j)
+        tail = sum(r.bits for r in led.records[marks[j]:])
+        assert head + tail == led.total_bits(), j
+
+
+def test_round_records_price_at_the_active_stage():
+    """Every vector record in round r carries exactly the bits of the
+    stage active at r — the ledger is a faithful replay of the schedule,
+    not an average."""
+    rounds, switch = 12, 5
+    ch = parse_channel(f"sched:identity@0,int8@{switch}")
+    led, _ = _run_ledger(str(ch.name), engine="scan", rounds=rounds)
+    marks = [0] + list(led.round_marks)
+    for r in range(led.rounds):
+        stage = ch.stage_at(r)
+        for rec in led.records[marks[r]:marks[r + 1]]:
+            itemsize = np.dtype(rec.dtype).itemsize
+            if tuple(rec.shape) == ():
+                assert rec.bits == 32          # scalars bypass channels
+            elif rec.direction == "worker->all" and len(rec.shape) >= 2:
+                m = rec.shape[0]
+                assert rec.bits == m * stage.wire_bits(rec.elems // m,
+                                                       itemsize), r
+            else:
+                assert rec.bits == stage.wire_bits(rec.elems, itemsize), r
+
+
+# --------------------------------------------------------------------------
+# gap channels resolve to schedules deterministically
+# --------------------------------------------------------------------------
+
+def test_gap_channel_resolution_is_deterministic_and_monotone():
+    from repro.core.channel import GapChannel
+    gap = parse_channel("gap:int8,fp16@0.01,identity@0.0001")
+    assert isinstance(gap, GapChannel)
+    gaps = np.array([1.0, 0.5, 0.02, 0.009, 0.001, 5e-5, 1e-6])
+    sched = gap.resolve(gaps)
+    # threshold 0.01 first crossed at index 3 -> switch at round 4;
+    # 1e-4 first crossed at index 5 -> switch at round 6
+    assert sched.name == "sched:int8@0,fp16@4,identity@6"
+    assert sched.name == make_schedule(
+        [(0, parse_channel("int8")), (4, parse_channel("fp16")),
+         (6, parse_channel("identity"))]).name
+    # an unreached threshold drops its stage
+    sched2 = gap.resolve(np.array([1.0, 0.5, 0.009]))
+    assert sched2.name == "sched:int8@0,fp16@3"
+    # a communicator refuses an unresolved gap channel
+    from repro.core.comm import LocalCommunicator
+    with pytest.raises(ValueError, match="resolve"):
+        LocalCommunicator(2, channel=gap)

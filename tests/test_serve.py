@@ -250,3 +250,71 @@ def test_soak_deterministic_trace():
         assert a.result.ledger.typed_stream() == \
             b.result.ledger.typed_stream()
         assert a.verdicts == b.verdicts
+
+
+# --------------------------------------------------------------------------
+# scheduled channels through the service
+# --------------------------------------------------------------------------
+
+SCHED_STRUCTURES = (
+    ("dagd", "identity"),
+    ("dagd", "sched:int8@0,fp16@10"),
+    ("dagd", "sched:int8@0,fp16@20"),
+    ("dgd", "sched:int8@0,fp16@10"),
+)
+
+
+def test_soak_mixed_scheduled_channels():
+    """Mixed fixed/scheduled structures under load: the group key
+    separates schedules (same algorithm, different switch round never
+    pools), the cache ledger stays exact, and every envelope — the
+    re-priced scheduled records included — is bit-identical to direct
+    execution of its spec.
+
+    64 dense arrivals (4 structures x 16, shuffled, 3 clients, 1ms
+    apart): with max_batch=8 the dense phase can only count-flush, two
+    width-8 batches per structure -> per structure 1 miss + 1 hit."""
+    pools = spec_pool(structures=SCHED_STRUCTURES)
+    trace = synthetic_trace(n_per_structure=16, seed=11, dt=1e-3,
+                            clients=3, pools=pools)
+    svc = CertificationService(max_batch=8, max_wait=0.25,
+                               cache_capacity=16)
+    envs = replay_trace(svc, trace)
+
+    assert len(envs) == len(trace) == 64
+    st = svc.cache.stats()
+    assert (st.executions, st.misses, st.hits) == (8, 4, 4)
+    assert st.evictions == 0 and st.size == 4
+    stats = svc.stats()
+    assert stats["fallbacks"] == 0 and stats["rejected"] == 0
+    assert stats["completed"] == 64 and stats["batches"] == 8
+
+    # four distinct group keys; the wire channel is the separating axis
+    keys = {}
+    for pool, (algo, channel) in zip(pools, SCHED_STRUCTURES):
+        cell = api.prepare_cell(api.plan(pool[0]))
+        assert cell is not None, (algo, channel)
+        keys[(algo, channel)] = cell.group_key()
+    assert len(set(keys.values())) == len(SCHED_STRUCTURES)
+    assert keys[("dagd", "sched:int8@0,fp16@10")][2] == \
+        "sched:int8@0,fp16@10"
+    assert keys[("dagd", "sched:int8@0,fp16@20")][2] == \
+        "sched:int8@0,fp16@20"
+
+    # every envelope bit-identical to direct execution of its spec
+    refs = {}
+    for pool in pools:
+        for spec in pool:
+            pl = api.plan(spec)
+            refs[spec.to_json()] = (pl, pl.execute())
+    for e in envs:
+        pl, ref = refs[e.spec.to_json()]
+        assert e.result.ledger.typed_stream() == ref.ledger.typed_stream()
+        assert e.result.ledger.round_marks == ref.ledger.round_marks
+        assert e.result.ledger.total_bits() == ref.ledger.total_bits()
+        assert e.verdicts == [dict(
+            eps=eps, measured_rounds=ref.measured_rounds(pl.eps_abs(eps)),
+            bound_rounds=pl.bound(pl.eps_abs(eps)).rounds,
+            certified=pl.certify(ref, eps)) for eps in e.spec.eps]
+        np.testing.assert_allclose(e.result.w, ref.w,
+                                   rtol=1e-5, atol=1e-5)

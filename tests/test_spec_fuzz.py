@@ -90,8 +90,13 @@ def test_wrong_typed_axes_load_or_raise_valueerror(field, value):
 
 @given(channel=st.sampled_from(
     ["gzip", "int4", "fp64", "topk:", "topk:0", "topk:2.0",
-     "topk:-0.1", "identity ", "FP16"]))
-@settings(max_examples=9, deadline=None)
+     "topk:-0.1", "identity ", "FP16", "topk:0.0.1",
+     "sched", "sched:", "sched:fp16@5", "sched:int8@0,fp16@0",
+     "sched:@0", "sched:int8@x", "sched:int8", "sched:int8@0,gzip@4",
+     "gap", "gap:", "gap:int8", "gap:int8@0.1,fp16",
+     "gap:int8,fp16@nope", "gap:int8,fp16@0",
+     "gap:int8,fp16@0.1,identity@0.5"]))
+@settings(max_examples=25, deadline=None)
 def test_unknown_channel_strings_rejected_at_plan_time(channel):
     """The channel vocabulary lives in core.channel; a spec loads with
     any string but plan() must reject bad ones as PlanError (a
@@ -99,6 +104,47 @@ def test_unknown_channel_strings_rejected_at_plan_time(channel):
     spec = RunSpec(**VALID, channel=channel)
     with pytest.raises(PlanError):
         api.plan(spec)
+
+
+# every malformed schedule/gap string must name the offending SEGMENT
+# (not just fail) — the strings arrive over the wire and via the
+# REPRO_CHANNEL env var, where "ValueError: could not convert string"
+# from a bare float() would be useless
+_SEGMENT_ERRORS = [
+    ("sched:@0", "missing channel name"),
+    ("sched:int8@0,@5", "'@5'.*missing channel name"),
+    ("sched:int8@x", "'int8@x'.*'x' is not an integer"),
+    ("sched:int8", "'int8'.*missing '@"),
+    ("sched:fp16@5", "must start at round 0"),
+    ("sched:int8@0,fp16@0", "strictly increasing"),
+    ("sched:int8@0,gzip@4", "'gzip@4'.*unknown channel"),
+    ("gap:int8@0.1,fp16", "'int8@0.1'.*no threshold"),
+    ("gap:int8,fp16@nope", "'fp16@nope'.*'nope' is not a number"),
+    ("gap:int8,fp16@0", "'fp16@0'.*finite and > 0"),
+    ("gap:int8,fp16@0.1,identity@0.5", "strictly decrease"),
+    ("topk:0.0.1", "bad topk keep fraction '0.0.1'"),
+]
+
+
+@pytest.mark.parametrize("channel, match", _SEGMENT_ERRORS)
+def test_malformed_schedule_errors_name_the_segment(channel, match):
+    from repro.core.channel import parse_channel
+    with pytest.raises(ValueError, match=match):
+        parse_channel(channel)
+    with pytest.raises(PlanError, match=match):
+        api.plan(RunSpec(**VALID, channel=channel))
+
+
+def test_malformed_channel_env_var_raises_named_error(monkeypatch):
+    """resolve_channel(None) consults REPRO_CHANNEL: a malformed
+    schedule there must surface the same segment-naming ValueError, not
+    a bare parse failure."""
+    from repro.api import CHANNEL_ENV, _resolve
+    monkeypatch.setenv(CHANNEL_ENV, "sched:int8@x")
+    with pytest.raises(ValueError, match="'x' is not an integer"):
+        _resolve.resolve_channel(None)
+    monkeypatch.setenv(CHANNEL_ENV, "sched:int8@0,fp16@4")
+    assert _resolve.resolve_channel(None) == "sched:int8@0,fp16@4"
 
 
 def test_unknown_fields_and_versions_rejected():
@@ -132,7 +178,9 @@ def test_v1_schema_loads_and_migration_round_trips():
        eps=st.floats(1e-9, 1.0),
        eps_mode=st.sampled_from(["abs", "rel"]),
        channel=st.sampled_from(["auto", "identity", "fp16", "bf16",
-                                "int8", "topk:0.25"]),
+                                "int8", "topk:0.25",
+                                "sched:int8@0,fp16@10",
+                                "gap:int8,fp16@0.001"]),
        engine=st.sampled_from(["auto", "scan", "python"]))
 @settings(max_examples=12, deadline=None)
 def test_generated_valid_specs_round_trip(rounds, eps, eps_mode, channel,
