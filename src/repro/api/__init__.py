@@ -23,9 +23,10 @@ embedded in every sweep record under ``docs/results/``, so any published
 row can be re-executed verbatim.
 """
 from ._resolve import (BACKEND_ENV, CHANNEL_ENV, CHANNELS, ENGINE_ENV,
-                       ENGINES, ORACLE_BACKENDS, PLACEMENTS, capabilities,
-                       resolve_channel, resolve_engine,
-                       resolve_oracle_backend, resolve_placement)
+                       ENGINES, FAULTS_ENV, ORACLE_BACKENDS, PLACEMENTS,
+                       capabilities, resolve_channel, resolve_engine,
+                       resolve_faults, resolve_oracle_backend,
+                       resolve_placement)
 from .spec import SPEC_SCHEMA_VERSION, RunSpec
 from .plan import (ExecutionPlan, PlanError, RunResult, bound_for, plan,
                    run)
@@ -33,8 +34,8 @@ from .batch import Cell, execute_batch, execute_group, prepare_cell
 
 __all__ = [
     "BACKEND_ENV", "CHANNEL_ENV", "CHANNELS", "ENGINE_ENV", "ENGINES",
-    "ORACLE_BACKENDS", "PLACEMENTS",
-    "capabilities", "resolve_channel", "resolve_engine",
+    "FAULTS_ENV", "ORACLE_BACKENDS", "PLACEMENTS",
+    "capabilities", "resolve_channel", "resolve_engine", "resolve_faults",
     "resolve_oracle_backend", "resolve_placement",
     "SPEC_SCHEMA_VERSION", "RunSpec",
     "ExecutionPlan", "PlanError", "RunResult", "bound_for", "plan", "run",

@@ -49,6 +49,7 @@ CHANNELS = ("identity", "fp16", "bf16", "int8", "topk", "sched", "gap")
 BACKEND_ENV = "REPRO_ORACLE_BACKEND"
 ENGINE_ENV = "REPRO_ROUND_ENGINE"
 CHANNEL_ENV = "REPRO_CHANNEL"
+FAULTS_ENV = "REPRO_FAULTS"
 
 
 def capabilities() -> Dict[str, object]:
@@ -111,6 +112,21 @@ def resolve_channel(channel: Optional[str] = None) -> str:
     # time would violate this module's leaf constraint.
     from ..core.channel import parse_channel
     return parse_channel(channel).name
+
+
+def resolve_faults(faults: Optional[str] = None) -> str:
+    """``"none"``/``None`` -> no faults (the default: fault injection is
+    an explicit opt-in; unlike the other axes, the env var is consulted
+    only for ``"auto"``, so a stray ``REPRO_FAULTS`` can never perturb a
+    spec that didn't ask).  Returns the *canonical name* (idempotent
+    under re-parse); raises ``ValueError`` on a malformed spec."""
+    if faults == "auto":
+        faults = os.environ.get(FAULTS_ENV, "").strip() or None
+    if faults in (None, "auto", "", "none"):
+        return "none"
+    # call-time import for the same leaf-constraint reason as channels.
+    from ..core.faults import parse_faults
+    return parse_faults(faults).name
 
 
 def resolve_placement(placement: Optional[str] = None) -> str:

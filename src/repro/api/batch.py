@@ -59,7 +59,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from ..core.comm import CommLedger
+from ..core.comm import CommLedger, inject_crash_recovery
 from ..core.engine import Segment
 from .plan import ExecutionPlan, PlanError, RunResult
 
@@ -135,8 +135,13 @@ class Cell:
         # only in a stage switch round — must not merge, while a gap spec
         # may batch with the sched: it resolved to (identical transform,
         # identical pricing; each cell still replays its own schedule).
+        # The faults axis is appended LAST (the channel stays component
+        # 2, which tests/test_serve.py pins): two cells under different
+        # fault schedules compute identical values but replay different
+        # recovery streams, so they must not merge either.
         return (self.plan.algo.name, self.plan.backend,
-                self.plan.wire_channel(), self.plan.spec.rounds, segs, meas)
+                self.plan.wire_channel(), self.plan.spec.rounds, segs, meas,
+                self.plan.faults)
 
 
 def prepare_cell(plan: ExecutionPlan) -> Optional[Cell]:
@@ -149,7 +154,8 @@ def prepare_cell(plan: ExecutionPlan) -> Optional[Cell]:
                         "scheduled", False)
     real = dist.comm.ledger
     dist.comm.ledger = scratch = CommLedger()
-    try:
+    dist.comm._tracing = True   # captured schedules stay fault-free; the
+    try:                        # per-cell ledger replay injects faults
         carry = program.init
         by_step = {}
         steps = []
@@ -192,6 +198,7 @@ def prepare_cell(plan: ExecutionPlan) -> Optional[Cell]:
                                 "measurement must stay oracle-free")
     finally:
         dist.comm.ledger = real
+        dist.comm._tracing = False
     return Cell(plan=plan, dist=dist, program=program, steps=steps,
                 meas=meas)
 
@@ -285,20 +292,28 @@ def execute_group(cells: List[Cell],
             outs.append(out)                        # (count, C)
     gaps_all = np.asarray(jnp.concatenate(outs, axis=0)) if outs else None
 
+    # all cells in a group share the fault schedule (group_key pins it);
+    # each cell's replay draws its own fault stream into its own ledger
+    faults0 = getattr(cells[0].dist.comm, "faults", None)
+    if faults0 is not None and not faults0.active:
+        faults0 = None
     results = []
     for i, cell in enumerate(cells):
         ledger = CommLedger()
         for s, seg in enumerate(cell.program.segments):
             records, rounds_per_step, marks = cell.steps[s].schedule
             ledger.replay_schedule(records, rounds_per_step, marks,
-                                   seg.count, channel=sched_chan)
+                                   seg.count, channel=sched_chan,
+                                   faults=faults0)
+        if faults0 is not None:
+            inject_crash_recovery(ledger, faults0)
         carry_i = jax.tree.map(lambda a: a[i], carry)
         w = cell.dist.gather_w(cell.program.final(carry_i))
         pl = cell.plan
         results.append(RunResult(
             spec=pl.spec, placement=pl.placement, backend=pl.backend,
             engine=pl.engine, channel=pl.channel,
-            wire_channel=pl.wire_channel(), w=w,
+            wire_channel=pl.wire_channel(), faults=pl.faults, w=w,
             rounds=cell.program.rounds, ledger=ledger,
             gaps=gaps_all[:, i] if gaps_all is not None else None,
             budget_ok=pl._budget_ok(ledger), batched=True))

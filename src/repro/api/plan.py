@@ -91,6 +91,8 @@ class RunResult:
                                           # wire: == channel except for
                                           # gap: specs, which resolve to a
                                           # concrete sched: before running
+    faults: str = "none"                  # resolved fault schedule
+                                          # (canonical core.faults name)
 
     def measured_rounds(self, eps_abs: float) -> Optional[int]:
         """First round k with f(w_k) - f* <= eps_abs (1-based), or None
@@ -120,6 +122,7 @@ class ExecutionPlan:
     channel: str                      # canonical name, e.g. "topk:0.1"
     measure: str                      # "gap" | "none"
     algo: Optional[AlgorithmSpec]
+    faults: str = "none"              # canonical core.faults name
     _bundle: Optional[InstanceBundle] = None
     _cell_cache: Optional[tuple] = None
     _gap0: Optional[float] = None
@@ -182,7 +185,7 @@ class ExecutionPlan:
             gap = parse_channel(self.channel)
             probe_spec = self.spec.replace(
                 channel="identity", measure="gap", placement="local",
-                backend=self.backend, engine=self.engine)
+                backend=self.backend, engine=self.engine, faults="none")
             try:
                 probe = plan(probe_spec, bundle=self._bundle)
                 res = probe.execute()
@@ -210,6 +213,30 @@ class ExecutionPlan:
             return bool(measured >= bound.rounds)
         return True if self.spec.rounds >= bound.rounds else None
 
+    def recovery_report(self, result: "RunResult") -> dict:
+        """Measured rounds-with-faults against the bound's currency plus
+        the *declared* recovery budget.  The fault schedule is seeded and
+        data-independent, so its recovery cost (straggler idle rounds +
+        the crash replay span) is computable before the run; a healthy
+        recovery layer measures exactly the declared budget — no silent
+        extra traffic, no unpriced recovery."""
+        from ..core.faults import parse_faults
+        led = result.ledger
+        f = parse_faults(self.faults)
+        declared = f.declared_recovery_rounds(led.algo_rounds)
+        return dict(
+            faults=self.faults,
+            algo_rounds=led.algo_rounds,
+            wire_rounds=led.rounds,
+            recovery_rounds=led.recovery_rounds,
+            declared_recovery_rounds=declared,
+            within_budget=led.recovery_rounds <= declared,
+            retransmissions=led.retransmissions(),
+            retransmit_bits=led.retransmit_bits(),
+            clean_bits=led.clean_bits(),
+            total_bits=led.total_bits(),
+        )
+
     # ---- execution -------------------------------------------------------
     def _cell(self):
         """(dist, program, measure_fn) — built once, reused across
@@ -218,7 +245,8 @@ class ExecutionPlan:
             from ..core.runtime import LocalDistERM
             b = self.bundle
             dist = LocalDistERM(b.prob, b.part, backend=self.backend,
-                                channel=self.wire_channel())
+                                channel=self.wire_channel(),
+                                faults=self.faults)
             program = self.algo.program(dist, rounds=self.spec.rounds,
                                         **self.algo_kwargs())
             measure_fn = None
@@ -268,7 +296,7 @@ class ExecutionPlan:
         return RunResult(
             spec=self.spec, placement=self.placement, backend=self.backend,
             engine=self.engine, channel=self.channel,
-            wire_channel=self.wire_channel(),
+            wire_channel=self.wire_channel(), faults=self.faults,
             w=dist.gather_w(res.w), rounds=res.rounds,
             ledger=ledger, gaps=res.gaps, budget_ok=self._budget_ok(ledger))
 
@@ -346,14 +374,23 @@ def plan(spec: RunSpec,
         backend = _resolve.resolve_oracle_backend(spec.backend, caps=caps)
         engine = _resolve.resolve_engine(spec.engine)
         channel = _resolve.resolve_channel(spec.channel)
+        faults = _resolve.resolve_faults(spec.faults)
     except ValueError as e:
         raise PlanError(str(e)) from None
+
+    if faults != "none" and placement == "sharded":
+        raise PlanError(
+            "fault injection needs the local placement (the "
+            "detect/retransmit recovery dance runs on concrete host "
+            "arrays; the shard_map driver meters at trace time); run "
+            "faulted specs with placement='local'")
 
     if spec.instance is None and spec.algorithm is None:
         # resolution-only: the axes are the whole request (dry-run tools)
         return ExecutionPlan(spec=spec, placement=placement,
                              backend=backend, engine=engine,
-                             channel=channel, measure="none", algo=None)
+                             channel=channel, measure="none", algo=None,
+                             faults=faults)
     if spec.instance is None or spec.algorithm is None:
         raise PlanError("a runnable RunSpec needs BOTH instance and "
                         "algorithm (leave both None for a resolution-only "
@@ -405,7 +442,7 @@ def plan(spec: RunSpec,
 
     return ExecutionPlan(spec=spec, placement=placement, backend=backend,
                          engine=engine, channel=channel, measure=measure,
-                         algo=algo, _bundle=bundle)
+                         algo=algo, faults=faults, _bundle=bundle)
 
 
 def run(spec: RunSpec, bundle: Optional[InstanceBundle] = None) -> RunResult:

@@ -20,11 +20,12 @@ from typing import Dict, Optional, Tuple
 import numpy as np
 
 
-SPEC_SCHEMA_VERSION = 3       # 2: channel axis (PR 5); 3: adaptive
-                              # channels — sched:/gap: channel grammar
+SPEC_SCHEMA_VERSION = 4       # 2: channel axis (PR 5); 3: adaptive
+                              # channels — sched:/gap: channel grammar;
+                              # 4: faults axis (seeded fault injection)
 # Older spec dicts still load: every field added since a compat version
 # has a default, so from_dict accepts the whole range.
-_SPEC_COMPAT_VERSIONS = (1, 2, SPEC_SCHEMA_VERSION)
+_SPEC_COMPAT_VERSIONS = (1, 2, 3, SPEC_SCHEMA_VERSION)
 
 _EPS_MODES = ("abs", "rel")
 _MEASURES = ("auto", "gap", "none")
@@ -35,7 +36,7 @@ _MEASURES = ("auto", "gap", "none")
 # a wrong-typed payload dies with a clear ValueError at load time, never
 # a TypeError from deep inside the resolvers.
 _STR_FIELDS = ("instance", "algorithm", "eps_mode", "measure", "placement",
-               "backend", "engine", "channel", "tag")
+               "backend", "engine", "channel", "faults", "tag")
 
 
 def _type_error(name: str, value, expected: str) -> ValueError:
@@ -95,6 +96,12 @@ class RunSpec:
                                      # | "int8" | "topk[:rho]"
                                      # | "sched:<ch>@<round>,..."
                                      # | "gap:<ch0>,<ch>@<thr>,..."
+    faults: str = "none"             # "auto" | "none" |
+                                     # "inject:seed=..,drop=..,flip=..,
+                                     #  straggle=<p>x<r>,crash=<k>,snap=<s>"
+                                     # (core.faults grammar; "none" keeps
+                                     # streams bit-identical to pre-fault
+                                     # builds)
     algo_kwargs: Dict[str, object] = dataclasses.field(default_factory=dict)
     check_budget: bool = True        # assert the O(n+d)/round budget
     tag: str = ""

@@ -1,3 +1,5 @@
-from .store import save_checkpoint, restore_checkpoint, latest_step
+from .store import (save_checkpoint, restore_checkpoint, latest_step,
+                    RoundSnapshotter)
 
-__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step"]
+__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step",
+           "RoundSnapshotter"]

@@ -11,6 +11,8 @@ from __future__ import annotations
 import json
 import os
 import re
+import shutil
+import tempfile
 from typing import Any, Optional
 
 import numpy as np
@@ -61,3 +63,37 @@ def restore_checkpoint(ckpt_dir: str, step: int, like: Any,
         tree = jax.tree_util.tree_map(
             lambda x, s: jax.device_put(x, s), tree, shardings)
     return tree
+
+
+class RoundSnapshotter:
+    """Round-level carry snapshots for crash recovery.
+
+    The fault model (``core.faults``) crashes the center after round ``k``
+    and replays from the last snapshot; the python round engine routes
+    those snapshots through this store so recovery exercises the real
+    save/restore path (f32 npz round-trips are bit-exact, which is what
+    makes recovered state provably identical to the lost state).  Owns a
+    temporary directory unless given one; ``close()`` removes an owned
+    directory.
+    """
+
+    def __init__(self, ckpt_dir: Optional[str] = None):
+        self._owned = ckpt_dir is None
+        self.dir = ckpt_dir if ckpt_dir is not None else tempfile.mkdtemp(
+            prefix="repro-snap-")
+
+    def save(self, rnd: int, tree: Any) -> str:
+        return save_checkpoint(self.dir, rnd, tree)
+
+    def restore(self, rnd: int, like: Any) -> Any:
+        return restore_checkpoint(self.dir, rnd, like)
+
+    def close(self):
+        if self._owned:
+            shutil.rmtree(self.dir, ignore_errors=True)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()

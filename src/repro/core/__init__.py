@@ -17,7 +17,8 @@ from .bounds import (BoundReport, agd_smooth_upper_bound, agd_upper_bound,
 from .channel import CHANNELS, Channel, parse_channel
 from .comm import (CollectiveAudit, CommLedger, CommRecord,
                    LocalCommunicator, ShardMapCommunicator,
-                   collective_bytes_from_hlo)
+                   collective_bytes_from_hlo, inject_crash_recovery)
+from .faults import (FaultRecoveryError, FaultSpec, NO_FAULTS, parse_faults)
 from .feasible_set import SpanOracle
 
 __all__ = [
@@ -30,7 +31,9 @@ __all__ = [
     "gd_upper_bound", "thm2_strongly_convex", "thm3_smooth_convex",
     "thm4_incremental",
     "CHANNELS", "Channel", "parse_channel",
+    "FaultRecoveryError", "FaultSpec", "NO_FAULTS", "parse_faults",
     "CollectiveAudit", "CommLedger", "CommRecord", "LocalCommunicator",
     "ShardMapCommunicator", "collective_bytes_from_hlo",
+    "inject_crash_recovery",
     "SpanOracle",
 ]

@@ -32,6 +32,19 @@ ledger.  The default identity channel leaves both the computation graph
 and the legacy ``(kind, elems, bytes, tag)`` record stream bit-identical
 to a channel-free build; scalar reductions always bypass the channel.
 
+Both communicators also accept a ``faults`` spec (``core.faults``): a
+seeded schedule of injected wire faults (message drops, bit flips,
+straggler rounds, one crash-restart).  Faults are *value-transparent* —
+every faulted message is detected (checksum / timeout), NACKed, and
+retransmitted until a clean copy arrives, so delivered payloads and all
+computed results stay bit-identical to the fault-free run.  What changes
+is the ledger: each failed attempt appends a 32-bit NACK plus a resend
+copy of the record, both ``retransmit=True``, and straggler / crash
+recovery appends extra rounds counted in ``recovery_rounds``.  Fault
+granularity is the ledger record (a record's ``wire`` message bundle
+fails and resends atomically), so ``total_bits == clean bits + exactly
+the injected retransmission bits`` holds by construction.
+
 Also here: ``collective_bytes_from_hlo`` — the dry-run HLO auditor that sums
 payload bytes of all-gather / all-reduce / reduce-scatter / all-to-all /
 collective-permute ops in a lowered/compiled module (used by the roofline).
@@ -49,6 +62,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from .channel import AnyChannel, Channel, parse_channel
+from .faults import FaultSpec, checksum as _fault_checksum, corrupt as _fault_corrupt, parse_faults
 
 
 # --------------------------------------------------------------------------
@@ -79,6 +93,11 @@ class CommRecord:
     # Deliberately NOT part of typed_stream(): it is pricing provenance,
     # not a wire observable.
     wire: Optional[Tuple[int, int]] = None
+    # recovery traffic: True for NACKs, resends of faulted messages, and
+    # crash-replay records.  Part of typed_stream() (it is a wire
+    # observable: the receiver sees the duplicate), so total_bits splits
+    # exactly into clean_bits() + retransmit_bits().
+    retransmit: bool = False
 
     def __post_init__(self):
         if self.shape is None:
@@ -96,30 +115,79 @@ class CommLedger:
     # bit totals stay exact for non-uniform round structures.
     round_marks: List[int] = dataclasses.field(default_factory=list)
     _round_open: bool = False
+    # wire rounds spent on recovery (straggler idles + crash replay);
+    # algo_rounds == rounds - recovery_rounds is the algorithm's own
+    # round count, which keys scheduled-channel stages and fault draws.
+    recovery_rounds: int = 0
+    # index of the next non-retransmit wire message — the per-message key
+    # of the fault schedule.  Advanced identically by eager metering and
+    # by replay, so both engines draw the same faults for the same
+    # message.
+    wire_msgs: int = 0
+    # while True, every record is flagged retransmit (crash-replay
+    # re-execution) and no fresh faults are drawn.
+    mark_retransmit: bool = False
+
+    @property
+    def algo_rounds(self) -> int:
+        return self.rounds - self.recovery_rounds
 
     def record(self, kind: str, elems: int, itemsize: int = 4, tag: str = "",
                *, shape: Optional[Tuple[int, ...]] = None,
                dtype: str = "float32", direction: str = "worker->center",
                bits: Optional[int] = None,
-               wire: Optional[Tuple[int, int]] = None):
+               wire: Optional[Tuple[int, int]] = None,
+               retransmit: bool = False):
         nbytes = int(elems) * itemsize
+        retransmit = bool(retransmit or self.mark_retransmit)
         self.records.append(CommRecord(
             kind, int(elems), nbytes, tag,
             direction=direction,
             shape=tuple(shape) if shape is not None else (int(elems),),
             dtype=dtype,
             bits=int(bits) if bits is not None else nbytes * 8,
-            wire=tuple(wire) if wire is not None else None))
+            wire=tuple(wire) if wire is not None else None,
+            retransmit=retransmit))
+        if wire is not None and not retransmit:
+            self.wire_msgs += 1
         self._round_open = True
 
-    def end_round(self):
+    def end_round(self, recovery: bool = False):
         self.rounds += 1
+        if recovery:
+            self.recovery_rounds += 1
         self.round_marks.append(len(self.records))
         self._round_open = False
 
+    def idle_round(self):
+        """An empty recovery round (straggler delay): the wire stays open
+        but carries nothing — wire rounds advance, the algorithm's don't."""
+        self.end_round(recovery=True)
+
+    def append_recovery(self, rec: CommRecord):
+        """Price one failed delivery of ``rec``: a 32-bit NACK
+        (center->worker resend request) plus a resend copy of the full
+        record.  The checksum itself rides in the unpriced message header
+        (like shape/dtype metadata), so this pair is *exactly* the
+        injected retransmission traffic."""
+        self.records.append(CommRecord(
+            "nack", 1, 4, rec.tag, direction="center->worker", shape=(),
+            retransmit=True))
+        self.records.append(dataclasses.replace(rec, retransmit=True))
+        self._round_open = True
+
+    def end_round_faulted(self, faults: FaultSpec):
+        """End an algorithm round, then inject the fault schedule's
+        straggler delay for it (deterministic in the 0-based algo round)."""
+        r = self.algo_rounds
+        self.end_round()
+        for _ in range(faults.straggle_delay(r)):
+            self.idle_round()
+
     def replay_schedule(self, records: Sequence[CommRecord], rounds: int,
                         marks: Sequence[int], count: int,
-                        channel: Optional[AnyChannel] = None):
+                        channel: Optional[AnyChannel] = None,
+                        faults: Optional[FaultSpec] = None):
         """Append a captured per-step schedule ``count`` times: the
         record objects are shared (replay is metering, not mutation), the
         round counter advances by ``rounds`` per repeat, and the step's
@@ -133,7 +201,18 @@ class CommLedger:
         repeat re-prices its channel-metered records from the record's
         round offset within the step — wire bits per round stay exact
         without re-tracing.  Fixed channels keep the shared-object fast
-        path (prices are round-invariant by construction)."""
+        path (prices are round-invariant by construction).
+
+        With an active ``faults`` spec the replay walks the schedule
+        record by record, drawing the same per-message fault decisions
+        the eager python engine draws live, and appending the identical
+        NACK/resend records and straggler idle rounds — so the faulted
+        trace-once stream is bit-identical to the faulted per-call
+        stream."""
+        if faults is not None and faults.active:
+            self._replay_faulted(records, rounds, marks, count, channel,
+                                 faults)
+            return
         if channel is not None and getattr(channel, "scheduled", False):
             for _ in range(count):
                 base = len(self.records)
@@ -148,6 +227,32 @@ class CommLedger:
             self.round_marks.extend(base + m for m in marks)
         self.rounds += rounds * count
 
+    def _replay_faulted(self, records: Sequence[CommRecord], rounds: int,
+                        marks: Sequence[int], count: int,
+                        channel: Optional[AnyChannel],
+                        faults: FaultSpec):
+        scheduled = channel is not None and getattr(channel, "scheduled",
+                                                    False)
+        for _ in range(count):
+            recs = (repriced_records(records, marks, self.algo_rounds,
+                                     channel) if scheduled else records)
+            mi = 0
+            for j, rec in enumerate(recs):
+                while mi < len(marks) and marks[mi] <= j:
+                    self.end_round_faulted(faults)
+                    mi += 1
+                self.records.append(rec)
+                if rec.wire is not None and not rec.retransmit:
+                    msg = self.wire_msgs
+                    self.wire_msgs += 1
+                    for _kind in faults.attempts(msg):
+                        self.append_recovery(rec)
+            while mi < len(marks):
+                self.end_round_faulted(faults)
+                mi += 1
+            for _ in range(rounds - len(marks)):
+                self.end_round_faulted(faults)
+
     # ---- summaries -----------------------------------------------------
     def typed_stream(self) -> List[Tuple]:
         """The full typed record stream — legacy tuple plus the
@@ -155,13 +260,26 @@ class CommLedger:
         surfaces (tests, ``benchmarks/comm_bits``) compare THIS, so a
         future field lands in every one of them at once."""
         return [(r.kind, r.elems, r.bytes, r.bits, r.tag, tuple(r.shape),
-                 r.dtype, r.direction) for r in self.records]
+                 r.dtype, r.direction, r.retransmit) for r in self.records]
 
     def total_bytes(self) -> int:
         return sum(r.bytes for r in self.records)
 
     def total_bits(self) -> int:
         return sum(r.bits for r in self.records)
+
+    def retransmit_bits(self) -> int:
+        """Wire bits of recovery traffic (NACKs + resends + crash replay)."""
+        return sum(r.bits for r in self.records if r.retransmit)
+
+    def clean_bits(self) -> int:
+        """Wire bits net of recovery — bit-identical to a fault-free run."""
+        return sum(r.bits for r in self.records if not r.retransmit)
+
+    def retransmissions(self) -> int:
+        """Number of resent payload messages (NACKs not counted)."""
+        return sum(1 for r in self.records
+                   if r.retransmit and r.kind != "nack")
 
     def op_counts(self) -> Dict[str, int]:
         out: Dict[str, int] = {}
@@ -225,6 +343,58 @@ def repriced_records(records: Sequence[CommRecord], marks: Sequence[int],
     return out
 
 
+def inject_crash_recovery(ledger: CommLedger, faults: FaultSpec) -> int:
+    """Post-pass for the trace-once engines: splice the crash-replay
+    records into a replayed ledger exactly where the live python engine
+    records them.
+
+    The fault model crashes the center after it completes algorithm round
+    ``k``, losing everything since its last snapshot (round ``s``); rounds
+    ``s+1..k`` are re-executed from the restored snapshot.  The python
+    engine does this live (``engine._run_python`` restores the carry via
+    ``repro.checkpoint`` and re-runs the steps under
+    ``ledger.mark_retransmit``); the scan/batch engines replay a captured
+    schedule, so the same traffic is spliced in here: copies of rounds
+    ``s+1..k``'s non-retransmit records, flagged ``retransmit=True``,
+    inserted right after round ``k`` (and after its straggler idles, which
+    the live path emits inside the round's ``end_round``).  Original
+    per-record bits are kept — the live path pins the original round index
+    for scheduled-channel pricing, so both streams price the replay at the
+    round it re-executes.  Returns the number of replayed rounds."""
+    s, k = faults.crash_span(ledger.algo_rounds)
+    if k == 0:
+        return 0
+
+    def end_mark_index(r: int) -> int:
+        """round_marks index of 1-based algo round ``r``'s end (straggle
+        idles own their own marks, recomputed from the seeded schedule)."""
+        w = 0
+        for j in range(r - 1):
+            w += 1 + faults.straggle_delay(j)
+        return w
+
+    def end_pos(r: int) -> int:
+        return 0 if r == 0 else ledger.round_marks[end_mark_index(r)]
+
+    insert_at = end_pos(k)
+    copied: List[CommRecord] = []
+    copy_marks: List[int] = []
+    for r in range(s + 1, k + 1):
+        copied.extend(dataclasses.replace(rc, retransmit=True)
+                      for rc in ledger.records[end_pos(r - 1):end_pos(r)]
+                      if not rc.retransmit)
+        copy_marks.append(insert_at + len(copied))
+    # marks splice point: after round k's own mark and its straggle idles
+    splice = end_mark_index(k) + 1 + faults.straggle_delay(k - 1)
+    n = len(copied)
+    ledger.records[insert_at:insert_at] = copied
+    ledger.round_marks = (ledger.round_marks[:splice] + copy_marks +
+                          [m + n for m in ledger.round_marks[splice:]])
+    ledger.rounds += k - s
+    ledger.recovery_rounds += k - s
+    return k - s
+
+
 # --------------------------------------------------------------------------
 # Communicators
 # --------------------------------------------------------------------------
@@ -255,6 +425,13 @@ class _ChannelWireMixin:
         self._round_base = None
         self._round_offset = 0
 
+    def _init_faults(self, faults):
+        self.faults: FaultSpec = parse_faults(faults)
+        # True while an engine captures a schedule (jax.eval_shape /
+        # make_jaxpr): fault injection must not pollute the captured
+        # stream — the ledger replay injects it instead.
+        self._tracing = False
+
     def begin_round(self, rnd):
         """Pin the round index of subsequent messages (scan engines pass
         the scanned — possibly traced — index here)."""
@@ -269,9 +446,11 @@ class _ChannelWireMixin:
 
     def _round_index(self):
         """The round the next message belongs to: concrete under the
-        python engine (ledger counter), possibly traced under scan."""
+        python engine (ledger counter), possibly traced under scan.
+        Channel schedules are indexed by *algorithm* round, so recovery
+        rounds (straggler idles, crash replay) never shift the stage."""
         if self._round_base is None:
-            return self.ledger.rounds
+            return self.ledger.algo_rounds
         return self._round_base + self._round_offset
 
     def _price(self, per_elems: int, itemsize: int, nmsg: int = 1) -> int:
@@ -296,7 +475,48 @@ class _ChannelWireMixin:
     def end_round(self):
         if self._round_base is not None:
             self._round_offset += 1
-        self.ledger.end_round()
+        led = self.ledger
+        if led.mark_retransmit:
+            # crash-replay re-execution: a recovery round, no fresh faults
+            led.end_round(recovery=True)
+            return
+        f = getattr(self, "faults", None)
+        if f is not None and f.active and not self._tracing:
+            led.end_round_faulted(f)
+            return
+        led.end_round()
+
+    def _inject_faults(self, payload):
+        """The eager detect-and-retransmit dance for the wire message the
+        ledger just recorded.  Draws the seeded fault schedule for this
+        message index; for each failed attempt, genuinely corrupts the
+        concrete payload in transit (bit flip), verifies the XOR-fold
+        checksum catches it, and prices the NACK + resend.  The delivered
+        payload is always the clean copy, so computed values stay
+        bit-identical to the fault-free run.  No-op while tracing (the
+        ledger replay injects the identical records instead) or during
+        crash-replay re-execution (a replayed message is recovery
+        traffic, not a fresh draw)."""
+        led = self.ledger
+        f = getattr(self, "faults", None)
+        if (f is None or not f.active or led.mark_retransmit
+                or self._tracing or isinstance(payload, jax.core.Tracer)):
+            return
+        rec = led.records[-1]
+        if rec.wire is None or rec.retransmit:
+            return
+        msg = led.wire_msgs - 1   # record() just advanced it
+        events = f.attempts(msg)
+        if not events:
+            return
+        clean = np.asarray(payload)
+        for a, kind in enumerate(events):
+            if kind == "flip":
+                sent = _fault_corrupt(clean, f.seed, msg, a)
+                if _fault_checksum(sent) == _fault_checksum(clean):
+                    raise AssertionError(
+                        "checksum failed to detect an injected bit flip")
+            led.append_recovery(rec)
 
 
 class LocalCommunicator(_ChannelWireMixin):
@@ -309,10 +529,11 @@ class LocalCommunicator(_ChannelWireMixin):
     graph and ledger stream alike — are untouched."""
 
     def __init__(self, m: int, ledger: Optional[CommLedger] = None,
-                 channel=None):
+                 channel=None, faults=None):
         self.m = m
         self.ledger = ledger if ledger is not None else CommLedger()
         self._init_channel(channel)
+        self._init_faults(faults)
 
     def _transmit(self, x_stacked):
         """The lossy worker->center wire, per machine (leading axis)."""
@@ -332,6 +553,7 @@ class LocalCommunicator(_ChannelWireMixin):
                            direction="worker->center",
                            bits=self._price(per.size, itemsize),
                            wire=(per.size, 1))
+        self._inject_faults(x_stacked)
         return jnp.sum(self._transmit(x_stacked), axis=0)
 
     def reduce_scalar(self, x_stacked, tag: str = "") -> jnp.ndarray:
@@ -356,6 +578,7 @@ class LocalCommunicator(_ChannelWireMixin):
                            direction="worker->all",
                            bits=self._price(per_elems, itemsize, m),
                            wire=(per_elems, m))
+        self._inject_faults(blocks_stacked)
         return self._transmit(blocks_stacked)
 
 
@@ -370,10 +593,16 @@ class ShardMapCommunicator(_ChannelWireMixin):
     """
 
     def __init__(self, axis: str, ledger: Optional[CommLedger] = None,
-                 channel=None):
+                 channel=None, faults=None):
         self.axis = axis
         self.ledger = ledger if ledger is not None else CommLedger()
         self._init_channel(channel)
+        if parse_faults(faults).active:
+            raise ValueError(
+                "fault injection requires the local placement (the "
+                "detect/retransmit dance runs on concrete host arrays); "
+                "run faulted specs with placement='local'")
+        self._init_faults(None)
 
     def _transmit(self, x_local):
         if self.channel.lossless:

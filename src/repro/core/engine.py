@@ -58,7 +58,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from .comm import CommLedger
+from .comm import CommLedger, inject_crash_recovery
+from .faults import FaultRecoveryError
 
 
 # Canonical list lives in repro.api._resolve (the single resolver);
@@ -166,22 +167,84 @@ def run_program(dist, program: RoundProgram, *, engine: Optional[str] = None,
 # python engine — the per-call reference
 # --------------------------------------------------------------------------
 
+def _engine_faults(dist):
+    """The communicator's active fault schedule, if any."""
+    f = getattr(getattr(dist, "comm", None), "faults", None)
+    return f if f is not None and f.active else None
+
+
 def _run_python(dist, program, measure, history) -> EngineResult:
+    faults = _engine_faults(dist)
+    crash_at = None
+    snap = flat = None
+    if faults is not None and faults.crash_round is not None \
+            and faults.crash_round <= program.rounds:
+        # live crash-restart: snapshot the carry on the declared cadence
+        # through the real checkpoint store, so recovery replays the real
+        # save/restore path (not an in-memory copy).
+        from ..checkpoint import RoundSnapshotter
+        crash_at = faults.crash_round
+        snap = RoundSnapshotter()
+        snap.save(0, program.init)
+        flat = [(seg, k) for seg in program.segments
+                for k in range(seg.count)]
     carry = program.init
     gaps, iterates, rounds = [], [], 0
-    for seg in program.segments:
-        for k in range(seg.count):
-            x = seg.xs[k] if seg.xs is not None else k
-            carry, w = seg.step(dist, carry, x)
-            rounds += 1
-            if measure is not None:
-                gaps.append(measure(w))
-            elif history:
-                iterates.append(w)
+    try:
+        for seg in program.segments:
+            for k in range(seg.count):
+                x = seg.xs[k] if seg.xs is not None else k
+                carry, w = seg.step(dist, carry, x)
+                rounds += 1
+                if crash_at is not None:
+                    if rounds < crash_at \
+                            and rounds % faults.snapshot_every == 0:
+                        snap.save(rounds, carry)
+                    elif rounds == crash_at:
+                        carry = _recover_crash(dist, flat, faults, snap,
+                                               carry)
+                        crash_at = None
+                if measure is not None:
+                    gaps.append(measure(w))
+                elif history:
+                    iterates.append(w)
+    finally:
+        if snap is not None:
+            snap.close()
     return EngineResult(
         w=program.final(carry), rounds=rounds,
         gaps=np.asarray(jnp.stack(gaps)) if measure is not None else None,
         iterates=iterates if history else None)
+
+
+def _recover_crash(dist, flat, faults, snap, lost_carry):
+    """Crash-restart after algorithm round ``k``: restore the round-``s``
+    snapshot and re-execute rounds ``s+1..k`` for real, metered as
+    recovery traffic (``mark_retransmit``: every record retransmit=True,
+    no fresh fault draws, recovery rounds).  The channel round index is
+    pinned to the round being re-executed so scheduled-channel pricing
+    matches the original.  Self-healing is then *proved*: the recomputed
+    carry must be bit-identical to the state the crash lost."""
+    s, k = faults.crash_span(len(flat))
+    carry = snap.restore(s, like=lost_carry)
+    comm, led = dist.comm, dist.comm.ledger
+    led.mark_retransmit = True
+    try:
+        for r in range(s, k):          # 0-based rounds s..k-1 == algo s+1..k
+            seg, j = flat[r]
+            comm.begin_round(r)
+            x = seg.xs[j] if seg.xs is not None else j
+            carry, _ = seg.step(dist, carry, x)
+    finally:
+        led.mark_retransmit = False
+        comm.reset_round()
+    for a, b in zip(jax.tree_util.tree_leaves(lost_carry),
+                    jax.tree_util.tree_leaves(carry)):
+        if not np.array_equal(np.asarray(a), np.asarray(b)):
+            raise FaultRecoveryError(
+                f"crash recovery diverged: replay of rounds {s + 1}..{k} "
+                f"did not reproduce the pre-crash state")
+    return carry
 
 
 # --------------------------------------------------------------------------
@@ -201,11 +264,13 @@ def _capture_schedule(dist, seg: Segment, carry, xs: np.ndarray):
     real = dist.comm.ledger
     scratch = CommLedger()
     dist.comm.ledger = scratch
-    try:
+    dist.comm._tracing = True   # captured schedules stay fault-free;
+    try:                        # the ledger replay injects the faults
         x_abs = jax.ShapeDtypeStruct(xs.shape[1:], xs.dtype)
         jax.eval_shape(lambda c, x: seg.step(dist, c, x), carry, x_abs)
     finally:
         dist.comm.ledger = real
+        dist.comm._tracing = False
     return list(scratch.records), scratch.rounds, list(scratch.round_marks)
 
 
@@ -237,6 +302,7 @@ def _run_scan(dist, program, measure, history,
               session: EngineSession) -> EngineResult:
     ledger = dist.comm.ledger
     chan = scheduled_channel(dist)
+    faults = _engine_faults(dist)
     carry = program.init
     outs, rounds = [], 0
     for seg in program.segments:
@@ -256,10 +322,11 @@ def _run_scan(dist, program, measure, history,
         if chan is not None:
             # Global round index per scan step, precomputed as scanned
             # xs (the schedule is a pure function of the round index, so
-            # this is data-independent): ledger.rounds is exact here —
-            # every prior segment has already been replayed.
-            rid = ledger.rounds + np.arange(seg.count,
-                                            dtype=np.int32) * rounds_per_step
+            # this is data-independent): ledger.algo_rounds is exact
+            # here — every prior segment has already been replayed, and
+            # recovery rounds never shift the channel schedule.
+            rid = ledger.algo_rounds + np.arange(
+                seg.count, dtype=np.int32) * rounds_per_step
             xs_arg = (jnp.asarray(rid), xs_arg)
         # The compiled run records nothing: any trace-time metering goes
         # to a throwaway ledger (jit may or may not retrace — either way
@@ -274,8 +341,14 @@ def _run_scan(dist, program, measure, history,
         if measure is not None or history:
             outs.append(out)
         ledger.replay_schedule(records, rounds_per_step, marks, seg.count,
-                               channel=chan)
+                               channel=chan, faults=faults)
         rounds += seg.count
+    if faults is not None:
+        # splice the crash-replay traffic exactly where the live python
+        # engine records it (drops/flips/stragglers were injected by the
+        # replay above; values need no recovery — replay is metering, and
+        # the fault model's recovery is value-transparent).
+        inject_crash_recovery(ledger, faults)
     gaps = iterates = None
     if measure is not None:
         gaps = np.asarray(jnp.concatenate(outs)) if outs else np.zeros((0,))

@@ -1,0 +1,318 @@
+"""Seeded, declarative fault model for the communicator boundary.
+
+The paper prices every message that crosses the machine boundary; a real
+deployment also pays for the messages that cross it *twice* because the
+first copy was dropped or corrupted, and for the rounds a crashed machine
+spends replaying from its last snapshot.  This module is the declarative
+half of that story: a :class:`FaultSpec` names a deterministic schedule of
+injected faults, and the communicator/engine layers consult it to decide
+*which* message fails, *how*, and *what the recovery costs*.
+
+Design rules (mirroring ``core/channel.py``):
+
+- A fault spec is named by a canonical string (the ``faults=`` RunSpec
+  axis).  ``"none"`` is the inactive spec; everything else is
+  ``inject:key=value,...``.
+- Every fault decision is a pure function of ``(seed, message index)`` or
+  ``(seed, algorithm round)`` — never of payload values, wall clock, or
+  engine.  The python engine (which injects eagerly, corrupting real
+  arrays) and the scan engine (which injects during ledger replay)
+  therefore price the *identical* recovery stream bit for bit.
+- Recovery is value-transparent: a faulted message is retransmitted until
+  a clean copy arrives, so delivered payloads — and hence all computed
+  results — are bit-identical to the fault-free run.  Only the ledger
+  (extra ``retransmit=True`` records, extra recovery rounds) differs.
+
+Grammar::
+
+    none
+    inject:seed=<int>[,drop=<p>][,flip=<p>][,straggle=<p>x<rounds>]
+                     [,crash=<round>][,snap=<every>][,resend=<max>]
+
+- ``drop=p``      each wire message is dropped (timeout -> NACK -> resend)
+                  independently with probability ``p`` per attempt.
+- ``flip=p``      each wire message has one bit flipped in transit with
+                  probability ``p`` per attempt (checksum -> NACK -> resend).
+- ``straggle=pxr`` after each algorithm round, with probability ``p`` the
+                  slowest machine straggles for ``r`` extra (empty) rounds.
+- ``crash=k``     the center crashes after completing algorithm round ``k``
+                  (1-based) and replays rounds since its last snapshot.
+- ``snap=s``      snapshot cadence for crash recovery (default 1).
+- ``resend=n``    max resend attempts per message before giving up
+                  (default 4); exceeding it raises FaultRecoveryError.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import List, Optional, Tuple, Union
+
+import numpy as np
+
+__all__ = [
+    "FaultSpec",
+    "NO_FAULTS",
+    "parse_faults",
+    "FaultRecoveryError",
+    "checksum",
+    "corrupt",
+    "NACK_BITS",
+]
+
+# A NACK is a single 32-bit control scalar sent center->worker to request a
+# resend.  Checksums ride in the (unpriced) message header, exactly like
+# the shape/dtype metadata the ledger already treats as free; the NACK and
+# the resent payload are the only *priced* recovery traffic, which is what
+# makes ``total_bits == clean_bits + retransmit_bits`` exact.
+NACK_BITS = 32
+
+
+class FaultRecoveryError(RuntimeError):
+    """Recovery budget exceeded (message unrecoverable within ``resend=``)."""
+
+
+def _mix(*keys: int) -> int:
+    """splitmix64-style avalanche over a tuple of integer keys.
+
+    Pure python, 64-bit wraparound; deterministic across platforms and
+    engines (never traced, never dependent on payload values).
+    """
+    h = 0x9E3779B97F4A7C15
+    for k in keys:
+        h = (h ^ (int(k) & 0xFFFFFFFFFFFFFFFF)) * 0xBF58476D1CE4E5B9 % (1 << 64)
+        h ^= h >> 27
+        h = h * 0x94D049BB133111EB % (1 << 64)
+        h ^= h >> 31
+    return h
+
+
+def _uniform(*keys: int) -> float:
+    """Deterministic uniform in [0, 1) from integer keys (53-bit mantissa)."""
+    return (_mix(*keys) >> 11) / float(1 << 53)
+
+
+# Domain-separation tags so drop/flip/straggle draws never alias.
+_DOM_DROP = 0xD809
+_DOM_FLIP = 0xF11D
+_DOM_STRAGGLE = 0x57A6
+_DOM_SITE = 0x517E
+
+
+def checksum(arr) -> int:
+    """XOR-fold checksum over the raw bytes of ``arr`` (uint32 words).
+
+    A single flipped bit always changes exactly one bit of the fold, so
+    every single-bit corruption this module injects is detected.
+    """
+    a = np.ascontiguousarray(np.asarray(arr))
+    buf = a.view(np.uint8).reshape(-1)
+    pad = (-buf.size) % 4
+    if pad:
+        buf = np.concatenate([buf, np.zeros(pad, dtype=np.uint8)])
+    words = buf.view(np.uint32)
+    return int(np.bitwise_xor.reduce(words)) if words.size else 0
+
+
+def corrupt(arr, seed: int, msg: int, attempt: int) -> np.ndarray:
+    """Return a copy of ``arr`` with one deterministic bit flipped in transit."""
+    a = np.ascontiguousarray(np.asarray(arr)).copy()
+    flat = a.view(np.uint8).reshape(-1)
+    if flat.size == 0:
+        return a
+    h = _mix(seed, _DOM_SITE, msg, attempt)
+    byte = h % flat.size
+    bit = (h >> 17) % 8
+    flat[byte] ^= np.uint8(1 << bit)
+    return a
+
+
+def _parse_prob(key: str, val: str) -> float:
+    try:
+        p = float(val)
+    except ValueError:
+        raise ValueError(f"bad probability {val!r} for {key}=") from None
+    if not 0.0 <= p <= 1.0:
+        raise ValueError(f"probability {key}={p:g} outside [0, 1]")
+    return p
+
+
+def _parse_int(key: str, val: str, lo: int) -> int:
+    try:
+        n = int(val)
+    except ValueError:
+        raise ValueError(f"bad integer {val!r} for {key}=") from None
+    if n < lo:
+        raise ValueError(f"{key}={n} must be >= {lo}")
+    return n
+
+
+@dataclass(frozen=True)
+class FaultSpec:
+    """A canonical, seeded fault schedule (the ``faults=`` RunSpec axis)."""
+
+    seed: int = 0
+    drop: float = 0.0
+    flip: float = 0.0
+    straggle: float = 0.0
+    straggle_rounds: int = 1
+    crash_round: Optional[int] = None
+    snapshot_every: int = 1
+    max_resend: int = 4
+
+    # ------------------------------------------------------------------
+    # identity
+    # ------------------------------------------------------------------
+    @property
+    def active(self) -> bool:
+        return bool(self.drop or self.flip or self.straggle or self.crash_round)
+
+    @property
+    def name(self) -> str:
+        """Canonical string form (parse -> name is idempotent)."""
+        if not self.active:
+            return "none"
+        parts = [f"seed={self.seed}"]
+        if self.drop:
+            parts.append(f"drop={self.drop:g}")
+        if self.flip:
+            parts.append(f"flip={self.flip:g}")
+        if self.straggle:
+            parts.append(f"straggle={self.straggle:g}x{self.straggle_rounds}")
+        if self.crash_round is not None:
+            parts.append(f"crash={self.crash_round}")
+            if self.snapshot_every != 1:
+                parts.append(f"snap={self.snapshot_every}")
+        if self.max_resend != 4:
+            parts.append(f"resend={self.max_resend}")
+        return "inject:" + ",".join(parts)
+
+    # ------------------------------------------------------------------
+    # per-message decisions (keyed on the wire-message index)
+    # ------------------------------------------------------------------
+    def attempts(self, msg: int) -> Tuple[str, ...]:
+        """Failure kinds for the failed attempts of wire message ``msg``.
+
+        Returns e.g. ``("drop", "flip")`` meaning attempt 0 was dropped,
+        attempt 1 corrupted, attempt 2 clean — so two NACK+resend pairs
+        are priced.  Raises :class:`FaultRecoveryError` if the message
+        fails more than ``max_resend`` times.
+        """
+        out: List[str] = []
+        for a in range(self.max_resend + 1):
+            if self.drop and _uniform(self.seed, _DOM_DROP, msg, a) < self.drop:
+                out.append("drop")
+            elif self.flip and _uniform(self.seed, _DOM_FLIP, msg, a) < self.flip:
+                out.append("flip")
+            else:
+                return tuple(out)
+        raise FaultRecoveryError(
+            f"message {msg} unrecoverable: {self.max_resend + 1} consecutive "
+            f"faulted attempts under {self.name!r}"
+        )
+
+    def straggle_delay(self, algo_round: int) -> int:
+        """Extra (empty) rounds injected after 0-based algorithm round."""
+        if not self.straggle:
+            return 0
+        if _uniform(self.seed, _DOM_STRAGGLE, algo_round) < self.straggle:
+            return self.straggle_rounds
+        return 0
+
+    # ------------------------------------------------------------------
+    # crash bookkeeping
+    # ------------------------------------------------------------------
+    def snapshot_round(self) -> int:
+        """Last snapshotted algorithm round before the crash (may be 0)."""
+        if self.crash_round is None:
+            return 0
+        return ((self.crash_round - 1) // self.snapshot_every) * self.snapshot_every
+
+    def crash_span(self, total_rounds: int) -> Tuple[int, int]:
+        """(snapshot round s, crash round k): rounds s+1..k are replayed.
+
+        Returns ``(0, 0)`` when no crash fires within ``total_rounds``.
+        """
+        k = self.crash_round
+        if k is None or k > total_rounds:
+            return (0, 0)
+        return (self.snapshot_round(), k)
+
+    def declared_recovery_rounds(self, total_rounds: int) -> int:
+        """The recovery budget: extra wire rounds the schedule will inject.
+
+        Deterministic (data-independent), so it can be *declared* before a
+        run and certified ``==`` measured afterwards: straggle delays over
+        every algorithm round plus the crash replay span.
+        """
+        extra = sum(self.straggle_delay(r) for r in range(total_rounds))
+        s, k = self.crash_span(total_rounds)
+        return extra + (k - s)
+
+    def __str__(self) -> str:  # pragma: no cover - convenience
+        return self.name
+
+
+NO_FAULTS = FaultSpec()
+
+
+def parse_faults(spec: Union[str, FaultSpec, None]) -> FaultSpec:
+    """Parse a ``faults=`` axis value into a :class:`FaultSpec`.
+
+    Accepts an existing FaultSpec (pass-through), ``None``/``"none"`` (no
+    faults), or the ``inject:...`` grammar above.  Raises ``ValueError``
+    naming the offending segment, in the ``parse_channel`` style.
+    """
+    if isinstance(spec, FaultSpec):
+        return spec
+    if spec is None:
+        return NO_FAULTS
+    name = spec.strip()
+    if name in ("", "none"):
+        return NO_FAULTS
+    if not name.startswith("inject:"):
+        raise ValueError(
+            f"faults {name!r}: expected 'none' or 'inject:key=value,...'"
+        )
+    kw = {}
+    seen = set()
+    for seg in name[len("inject:"):].split(","):
+        seg = seg.strip()
+        if not seg:
+            raise ValueError(f"faults {name!r}: empty segment")
+        if "=" not in seg:
+            raise ValueError(f"faults {name!r}: bad segment {seg!r}: missing '='")
+        key, _, val = seg.partition("=")
+        key = key.strip()
+        val = val.strip()
+        if key in seen:
+            raise ValueError(f"faults {name!r}: duplicate key {key!r}")
+        seen.add(key)
+        try:
+            if key == "seed":
+                kw["seed"] = _parse_int(key, val, 0)
+            elif key == "drop":
+                kw["drop"] = _parse_prob(key, val)
+            elif key == "flip":
+                kw["flip"] = _parse_prob(key, val)
+            elif key == "straggle":
+                p, _, r = val.partition("x")
+                kw["straggle"] = _parse_prob(key, p)
+                kw["straggle_rounds"] = _parse_int(key, r, 1) if r else 1
+            elif key == "crash":
+                kw["crash_round"] = _parse_int(key, val, 1)
+            elif key == "snap":
+                kw["snapshot_every"] = _parse_int(key, val, 1)
+            elif key == "resend":
+                kw["max_resend"] = _parse_int(key, val, 1)
+            else:
+                raise ValueError(f"unknown key {key!r}")
+        except ValueError as e:
+            raise ValueError(f"faults {name!r}: bad segment {seg!r}: {e}") from None
+    if "snapshot_every" in kw and "crash_round" not in kw:
+        raise ValueError(f"faults {name!r}: snap= requires crash=")
+    f = FaultSpec(**kw)
+    if f.drop >= 1.0 or f.flip >= 1.0:
+        raise ValueError(
+            f"faults {name!r}: drop/flip probability 1.0 is unrecoverable"
+        )
+    return f

@@ -126,10 +126,11 @@ class LocalDistERM:
     def __init__(self, prob: ERMProblem, part: FeaturePartition,
                  ledger: Optional[CommLedger] = None,
                  backend: Optional[str] = None,
-                 channel=None):
+                 channel=None, faults=None):
         self.prob = prob
         self.part = part
-        self.comm = LocalCommunicator(part.m, ledger, channel=channel)
+        self.comm = LocalCommunicator(part.m, ledger, channel=channel,
+                                      faults=faults)
         self.backend = resolve_oracle_backend(backend)
         self.A_stk = part.pad_blocks(part.split_columns(prob.A))  # (m,n,dmax)
         self.mask = part.mask()                                   # (m,dmax)

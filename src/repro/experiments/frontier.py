@@ -221,10 +221,30 @@ def _pareto_mark(points: List[dict], eps_index: int) -> None:
         p["per_eps"][eps_index].setdefault("pareto", False)
 
 
+def _error_point(cell: dict, channel: str, exc: BaseException) -> dict:
+    """A placeholder point for a candidate whose run failed: no
+    measurements, the cause in ``error``.  It renders as "not reached"
+    in the tables and trips the error gate — a crashing candidate never
+    loses the cell's other points."""
+    return dict(
+        channel=channel, wire_channel=channel,
+        adaptive=channel.startswith(("sched:", "gap:")),
+        bits_per_round=0.0, total_bits=0,
+        per_eps=[dict(eps=e, eps_abs=None, measured_rounds=None,
+                      bits_to_eps=None, bound_rounds=None,
+                      bound_theorem=None, bound_bits=None,
+                      bits_certified=None, certified=None)
+                 for e in cell["eps"]],
+        run_spec=None, error=f"{type(exc).__name__}: {exc}")
+
+
 def run_cell(cell: dict, backend=None, engine=None,
              verbose: bool = False) -> dict:
     """Run one cell under the full candidate set; returns the cell
-    record (points + per-eps summary)."""
+    record (points + per-eps summary).  A failing candidate degrades to
+    an error point; only a failing *identity* run (no baseline to derive
+    candidates from) raises — the caller records the whole cell as
+    errored."""
     import sys
 
     identity = _run_point(cell, "identity", backend, engine)
@@ -233,7 +253,10 @@ def run_cell(cell: dict, backend=None, engine=None,
     candidates += _adaptive_candidates(identity["_result"], eps_abs)
     points = [identity]
     for ch in candidates:
-        points.append(_run_point(cell, ch, backend, engine))
+        try:
+            points.append(_run_point(cell, ch, backend, engine))
+        except Exception as e:        # noqa: BLE001 — degrade per-point
+            points.append(_error_point(cell, ch, e))
     hard = identity.pop("_hard")
     incremental = identity.pop("_incremental")
     for p in points:
@@ -316,11 +339,32 @@ def run_frontier(cells: List[dict], backend=None, engine=None,
                  verbose: bool = False) -> dict:
     """Run every cell and assemble the report document (the
     ``spec``/``summary``/``command`` envelope the results index
-    expects)."""
+    expects).  A cell whose identity baseline fails is recorded under
+    ``summary.errors`` — the (partial) report is still assembled and
+    written; the error gate then fails it."""
+    import sys
+
     import jax
 
-    records = [run_cell(c, backend=backend, engine=engine, verbose=verbose)
-               for c in cells]
+    records, errors = [], []
+    for c in cells:
+        try:
+            records.append(run_cell(c, backend=backend, engine=engine,
+                                    verbose=verbose))
+        except Exception as e:        # noqa: BLE001 — degrade per-cell
+            cause = f"{type(e).__name__}: {e}"
+            errors.append(dict(
+                preset=c.get("preset"), instance=c["instance"],
+                instance_params=dict(c["instance_params"]),
+                algorithm=c["algorithm"], error=cause))
+            print(f"[frontier] cell {c['instance']}/{c['algorithm']} "
+                  f"FAILED ({cause}); continuing with remaining cells",
+                  file=sys.stderr)
+    errors += [dict(preset=r["preset"], instance=r["instance"],
+                    instance_params=r["instance_params"],
+                    algorithm=r["algorithm"], channel=p["channel"],
+                    error=p["error"])
+               for r in records for p in r["points"] if p.get("error")]
     all_pe = [pe for r in records for p in r["points"]
               for pe in p["per_eps"]]
     certifiable = [pe for pe in all_pe if pe["bits_certified"] is not None]
@@ -354,6 +398,7 @@ def run_frontier(cells: List[dict], backend=None, engine=None,
             certified=sum(1 for pe in certifiable if pe["bits_certified"]),
             failed=sum(1 for pe in certifiable
                        if pe["bits_certified"] is False),
+            errors=errors,
             hard_no_adaptive_win=hard_no_win,
             hard_adaptive_wins=hard_wins,
             workload_best_savings=workload_best),
@@ -390,6 +435,11 @@ def gate_failures(doc: dict) -> List[str]:
     provably cannot help; at least one workload with >= 2x total-bit
     reduction at unchanged verdict."""
     fails = []
+    for err in doc["summary"].get("errors", []):
+        where = f"{err['instance']}/{err['algorithm']}"
+        if err.get("channel"):
+            where += f" [{err['channel']}]"
+        fails.append(f"cell ERRORED at {where}: {err['error']}")
     if doc["summary"]["failed"]:
         bad = [(r["instance"], r["algorithm"], p["channel"], pe["eps"])
                for r in doc["cells"] for p in r["points"]
@@ -448,6 +498,16 @@ def render_markdown(doc: dict) -> str:
            or "none"),
         "",
     ]
+    errors = doc["summary"].get("errors", [])
+    if errors:
+        lines += [f"- **ERRORS ({len(errors)}):** this is a PARTIAL "
+                  "report — the listed runs failed to execute", ""]
+        for err in errors:
+            where = f"{err['instance']}/{err['algorithm']}"
+            if err.get("channel"):
+                where += f" [{err['channel']}]"
+            lines.append(f"  - `{where}`: {err['error']}")
+        lines.append("")
     for r in doc["cells"]:
         params = ", ".join(f"{k}={v:g}"
                            for k, v in r["instance_params"].items())

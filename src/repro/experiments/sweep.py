@@ -50,7 +50,8 @@ from .instances import build_instance
 # Spec / record / result
 # --------------------------------------------------------------------------
 
-SCHEMA_VERSION = 4      # 4: wire_channel (adaptive sched:/gap: channels)
+SCHEMA_VERSION = 5      # 5: per-record error field (graceful degradation)
+                        # 4: wire_channel (adaptive sched:/gap: channels)
                         # 3: bit-level accounting + channel axis (PR 5)
                         # 2: records embed their run_spec (PR 4)
 
@@ -150,6 +151,11 @@ class SweepRecord:
                                           # one exact scalar for I^{lam,L})
     bits_certified: Optional[bool] = None # bits_to_eps >= bound_bits on
                                           # hard instances
+    # ---- graceful degradation (schema 5) --------------------------------
+    error: Optional[str] = None           # execution failure cause; an
+                                          # errored cell still lands in the
+                                          # report (partial results beat a
+                                          # lost sweep) and fails the gate
 
     def to_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -172,10 +178,12 @@ class SweepResult:
             bits_certifiable=len(bits_app),
             bits_certified=sum(1 for r in bits_app if r.bits_certified),
             bits_failed=sum(1 for r in bits_app if not r.bits_certified),
-            # union, not sum: one record can fail both ways
+            errors=sum(1 for r in self.records if r.error is not None),
+            # union, not sum: one record can fail several ways
             failed_records=sum(1 for r in self.records
                                if r.certified is False
-                               or r.bits_certified is False),
+                               or r.bits_certified is False
+                               or r.error is not None),
         )
 
     def to_dict(self) -> dict:
@@ -291,6 +299,29 @@ def _cell_records(spec: SweepSpec, pl: api.ExecutionPlan,
     return records
 
 
+def _error_record(spec: SweepSpec, pl: api.ExecutionPlan,
+                  exc: BaseException) -> SweepRecord:
+    """A placeholder record for a cell whose execution failed: identity
+    fields from the (already validated) plan, zeroed measurements, the
+    failure cause in ``error``.  Lands in the report like any other
+    record and trips the certification gate."""
+    bundle, algo = pl.bundle, pl.algo
+    return SweepRecord(
+        instance_kind=bundle.kind, instance_label=bundle.label,
+        instance_params=dict(bundle.params), hard=bundle.hard,
+        algorithm=algo.name, family=algo.family,
+        incremental=algo.incremental, accelerated=algo.accelerated,
+        oracle_backend=pl.backend, engine=pl.engine,
+        max_rounds=pl.spec.rounds, run_spec=pl.spec.to_dict(),
+        eps=None, eps_abs=None, measured_rounds=None, bound_theorem=None,
+        bound_rounds=None, ratio=None, certified=None,
+        ledger_rounds=0, bytes_per_round=0.0, total_bytes=0,
+        op_counts={}, budget_ok=False,
+        sample_model_bytes_per_round=float(
+            bundle.ctx.m * bundle.prob.d * 4),
+        channel=pl.channel, error=f"{type(exc).__name__}: {exc}")
+
+
 def run_sweep(spec: SweepSpec, max_rounds: Optional[int] = None,
               verbose: bool = False,
               backend: Optional[str] = None,
@@ -328,17 +359,39 @@ def run_sweep(spec: SweepSpec, max_rounds: Optional[int] = None,
                                       channel=channel)
                 yield api.plan(cell, bundle=bundle)
 
+    def _execute_one(pl):
+        # graceful degradation: a failing cell yields its exception (turned
+        # into an error record below) instead of losing the whole sweep
+        try:
+            return pl.execute()
+        except Exception as e:        # noqa: BLE001 — recorded per-cell
+            return e
+
     if execute == "batch":
         # grouping needs every cell up front — one compiled program per
         # same-shaped group is the whole point
         plans = list(_plans())
-        executed = zip(plans, api.execute_batch(plans))
+        try:
+            executed = list(zip(plans, api.execute_batch(plans)))
+        except Exception as e:        # noqa: BLE001 — degrade to per-cell
+            print(f"[sweep] batch execution failed "
+                  f"({type(e).__name__}: {e}); degrading to sequential "
+                  f"per-cell execution", file=sys.stderr)
+            executed = ((pl, _execute_one(pl)) for pl in plans)
     else:
         # one cell in memory at a time: execute as plans materialize
-        executed = ((pl, pl.execute()) for pl in _plans())
+        executed = ((pl, _execute_one(pl)) for pl in _plans())
 
     records: List[SweepRecord] = []
     for pl, result in executed:
+        if isinstance(result, BaseException):
+            err = _error_record(spec, pl, result)
+            pl.release()
+            records.append(err)
+            if verbose:
+                print(f"  {err.instance_label} {err.algorithm:>9} "
+                      f"ERROR {err.error}", file=sys.stderr)
+            continue
         cell = _cell_records(spec, pl, result)
         pl.release()      # drop the cell's data copies before the next one
         records.extend(cell)
@@ -536,14 +589,19 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                 f"{summ['certified']}/{summ['certifiable']} certified, "
                 f"{summ['bits_certified']}/{summ['bits_certifiable']} "
                 f"bit-certified")
+        if summ["errors"]:
+            line += f", {summ['errors']} ERRORED"
         if not args.no_report:
+            # the (possibly partial) report is written BEFORE the gate
+            # exits non-zero — an errored cell never loses its siblings
             json_path, md_path = write_report(result, out_dir)
             line += f" -> {json_path}, {md_path}"
         print(line)
     if failed:
         print(f"[sweep] CERTIFICATION FAILED for {failed} record(s): a "
               f"measured round count or bit total fell below its lower "
-              f"bound", file=sys.stderr)
+              f"bound, or the cell errored (see per-record 'error')",
+              file=sys.stderr)
     return 1 if failed else 0
 
 

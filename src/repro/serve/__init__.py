@@ -32,8 +32,8 @@ machinery.
 CLI:  ``PYTHONPATH=src python -m repro.serve --demo 96``
 """
 from .cache import CacheStats, ProgramCache
-from .queue import (PendingRun, QueueFullError, SpecError, SubmissionQueue,
-                    parse_runspec)
+from .queue import (PendingRun, QuarantinedError, QueueFullError, SpecError,
+                    SubmissionQueue, parse_runspec)
 from .scheduler import Batch, CoalescingScheduler
 from .service import CertificationService, ResultEnvelope, replay_trace
 from .workload import Arrival, DEFAULT_STRUCTURES, spec_pool, synthetic_trace
@@ -41,7 +41,7 @@ from .workload import Arrival, DEFAULT_STRUCTURES, spec_pool, synthetic_trace
 __all__ = [
     "Arrival", "Batch", "CacheStats", "CertificationService",
     "CoalescingScheduler", "DEFAULT_STRUCTURES", "PendingRun",
-    "ProgramCache", "QueueFullError", "ResultEnvelope", "SpecError",
-    "SubmissionQueue", "parse_runspec", "replay_trace", "spec_pool",
-    "synthetic_trace",
+    "ProgramCache", "QuarantinedError", "QueueFullError", "ResultEnvelope",
+    "SpecError", "SubmissionQueue", "parse_runspec", "replay_trace",
+    "spec_pool", "synthetic_trace",
 ]

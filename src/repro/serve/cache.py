@@ -13,12 +13,20 @@ Eviction is LRU over entries: touching a key moves it to the tail;
 exceeding ``capacity`` drops the head (its runners and their compiled
 executables become garbage; a later batch with that key re-traces and
 recompiles, accounted as a miss).
+
+The cache also hosts the **compile circuit breaker**: a per-key count of
+consecutive grouped-execution failures.  Once a key fails
+``breaker_threshold`` times in a row, ``tripped(key)`` flips true and the
+service stops routing batches with that key through the grouped path —
+every future run for it goes straight to the sequential ladder instead of
+re-paying (and re-crashing in) the same XLA compile.  A single grouped
+success for the key resets its count.
 """
 from __future__ import annotations
 
 import dataclasses
 from collections import OrderedDict
-from typing import Set, Tuple
+from typing import Dict, Set, Tuple
 
 
 @dataclasses.dataclass
@@ -35,6 +43,7 @@ class CacheStats:
     evictions: int
     size: int
     capacity: int
+    breaker_open: int = 0             # keys with the breaker tripped
 
     @property
     def executions(self) -> int:
@@ -48,15 +57,21 @@ class CacheStats:
         return dict(hits=self.hits, misses=self.misses,
                     evictions=self.evictions, size=self.size,
                     capacity=self.capacity,
+                    breaker_open=self.breaker_open,
                     hit_rate=round(self.hit_rate, 4))
 
 
 class ProgramCache:
-    def __init__(self, capacity: int = 32):
+    def __init__(self, capacity: int = 32, breaker_threshold: int = 3):
         if capacity < 1:
             raise ValueError(f"capacity must be >= 1; got {capacity}")
+        if breaker_threshold < 1:
+            raise ValueError(f"breaker_threshold must be >= 1; got "
+                             f"{breaker_threshold}")
         self.capacity = int(capacity)
+        self.breaker_threshold = int(breaker_threshold)
         self._entries: "OrderedDict[tuple, CacheEntry]" = OrderedDict()
+        self._failures: Dict[tuple, int] = {}
         self.hits = 0
         self.misses = 0
         self.evictions = 0
@@ -81,6 +96,24 @@ class ProgramCache:
             self.misses += 1
         return entry, hit
 
+    def record_failure(self, key: tuple) -> None:
+        """One grouped-execution failure for ``key``.  Also drops the
+        (possibly half-compiled, possibly poisoned) cache entry so a
+        later retry starts from a clean trace."""
+        self._failures[key] = self._failures.get(key, 0) + 1
+        self._entries.pop(key, None)
+
+    def record_success(self, key: tuple) -> None:
+        self._failures.pop(key, None)
+
+    def tripped(self, key: tuple) -> bool:
+        return self._failures.get(key, 0) >= self.breaker_threshold
+
+    @property
+    def breaker_open(self) -> int:
+        return sum(1 for n in self._failures.values()
+                   if n >= self.breaker_threshold)
+
     def __len__(self) -> int:
         return len(self._entries)
 
@@ -88,4 +121,5 @@ class ProgramCache:
         return CacheStats(hits=self.hits, misses=self.misses,
                           evictions=self.evictions,
                           size=len(self._entries),
-                          capacity=self.capacity)
+                          capacity=self.capacity,
+                          breaker_open=self.breaker_open)

@@ -30,8 +30,24 @@ class SpecError(ValueError):
     """A submission that cannot be turned into a runnable plan."""
 
 
+class QuarantinedError(SpecError):
+    """A spec rejected because earlier copies of it repeatedly failed to
+    execute (poison-spec quarantine; see ``CertificationService``)."""
+
+
 class QueueFullError(RuntimeError):
-    """Admission control tripped: too many outstanding runs."""
+    """Admission control tripped: too many outstanding runs.
+
+    Carries backpressure hints for the client: ``depth`` (current
+    outstanding runs == the configured cap) and ``retry_after`` (the
+    scheduler's coalescing deadline — by then at least one in-flight
+    batch has been released, so capacity is the earliest plausible)."""
+
+    def __init__(self, msg: str, *, depth: int = 0,
+                 retry_after: float = 0.0):
+        super().__init__(msg)
+        self.depth = int(depth)
+        self.retry_after = float(retry_after)
 
 
 def parse_runspec(payload: Union[str, bytes, dict,
@@ -69,6 +85,7 @@ class PendingRun:
     plan: api.ExecutionPlan
     cell: Optional[api.Cell]
     arrival: float                    # injected clock, not wall time
+    attempts: int = 0                 # failed execution attempts so far
 
 
 class SubmissionQueue:
@@ -80,20 +97,25 @@ class SubmissionQueue:
     ``complete`` once its verdict is emitted.
     """
 
-    def __init__(self, max_depth: int = 1024):
+    def __init__(self, max_depth: int = 1024, retry_after: float = 0.05):
         self.max_depth = int(max_depth)
+        self.retry_after = float(retry_after)
         self.outstanding = 0
         self.admitted = 0
         self.rejected = 0
+        self.rejected_full = 0
         self._client_seq: Dict[str, int] = {}
 
     def admit(self, payload, client_id: str = "anon",
               now: float = 0.0) -> PendingRun:
         if self.outstanding >= self.max_depth:
             self.rejected += 1
+            self.rejected_full += 1
             raise QueueFullError(
                 f"submission queue full: {self.outstanding} outstanding "
-                f"runs (max_depth={self.max_depth})")
+                f"runs (max_depth={self.max_depth}); retry after "
+                f"{self.retry_after:g}s",
+                depth=self.outstanding, retry_after=self.retry_after)
         try:
             spec = parse_runspec(payload)
             pl = api.plan(spec)

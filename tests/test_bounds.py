@@ -141,8 +141,8 @@ def test_sweep_report_renders(tiny_sweep_result, tmp_path):
     assert json_path.exists() and md_path.exists()
     assert (tmp_path / "README.md").exists()    # index refreshed
     doc = json_path.read_text()
-    assert '"schema_version": 4' in doc       # 4: records carry wire_channel
-    assert '"schema_version": 3' in doc       # embedded run_specs (schema 3)
+    assert '"schema_version": 5' in doc       # 5: records carry error (PR 8)
+    assert '"schema_version": 4' in doc       # embedded run_specs (4: faults)
     assert '"run_spec"' in doc
     assert '"wire_channel"' in doc
     md = md_path.read_text()

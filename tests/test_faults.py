@@ -1,0 +1,271 @@
+"""Fault injection + self-healing recovery: determinism, detection,
+pricing, and value transparency.
+
+The fault model (``repro.core.faults``) is a seeded, data-independent
+schedule injected at the communicator boundary.  These tests pin the
+four contracts PR 8 claims:
+
+  * **determinism** — every decision is a pure function of
+    ``(seed, message index, attempt)`` or ``(seed, algorithm round)``,
+    so python/scan/batch engines price the identical recovery stream;
+  * **detection** — the XOR-fold checksum catches every single-bit
+    corruption ``corrupt`` can inject;
+  * **pricing** — recovery traffic is first-class in the ledger:
+    ``total_bits == clean_bits + retransmit_bits`` exactly, the clean
+    slice is bit-identical to the ``faults="none"`` run, and measured
+    recovery rounds equal the declared (pre-computable) budget;
+  * **transparency** — delivered payloads are always clean copies, so
+    iterates and verdicts are bit-identical to the fault-free run; a
+    crash replays from its snapshot to the identical state.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro import api
+from repro.core.faults import (FaultRecoveryError, FaultSpec, NACK_BITS,
+                               NO_FAULTS, checksum, corrupt, parse_faults)
+
+CHAOS = "inject:seed=3,drop=0.15,flip=0.15,straggle=0.2x2,crash=8,snap=3"
+
+
+def _spec(faults="none", engine="auto", rounds=12, **kw):
+    base = dict(instance="thm2_chain",
+                instance_params=dict(d=12, kappa=16.0, lam=0.5, m=2),
+                algorithm="dagd", rounds=rounds, eps=(1e-2,),
+                faults=faults, engine=engine)
+    base.update(kw)
+    return api.RunSpec(**base)
+
+
+# --------------------------------------------------------------------------
+# Grammar
+# --------------------------------------------------------------------------
+
+def test_parse_canonicalization_is_idempotent():
+    f = parse_faults(CHAOS)
+    assert f.name == CHAOS
+    assert parse_faults(f.name) == f
+    assert parse_faults(f) is f
+    assert parse_faults(None) == NO_FAULTS == parse_faults("none")
+    assert parse_faults("").name == "none"
+    assert not NO_FAULTS.active and f.active
+
+
+@pytest.mark.parametrize("bad", [
+    "drop=0.5",                       # missing inject: prefix
+    "inject:",                        # empty segment
+    "inject:drop",                    # missing '='
+    "inject:drop=2.0",                # probability out of range
+    "inject:drop=x",                  # not a number
+    "inject:drop=1.0",                # unrecoverable
+    "inject:flip=1.0",                # unrecoverable
+    "inject:snap=3",                  # snap= requires crash=
+    "inject:crash=0",                 # crash round is 1-based
+    "inject:drop=0.1,drop=0.2",       # duplicate key
+    "inject:bogus=1",                 # unknown key
+])
+def test_parse_rejects_bad_grammar(bad):
+    with pytest.raises(ValueError, match="faults"):
+        parse_faults(bad)
+
+
+# --------------------------------------------------------------------------
+# Seeded determinism
+# --------------------------------------------------------------------------
+
+def test_fault_schedule_is_deterministic_and_seed_sensitive():
+    f = parse_faults("inject:seed=1,drop=0.3,flip=0.2,resend=16")
+    g = parse_faults("inject:seed=2,drop=0.3,flip=0.2,resend=16")
+    sched_f = [f.attempts(m) for m in range(200)]
+    assert sched_f == [f.attempts(m) for m in range(200)]
+    assert sched_f != [g.attempts(m) for m in range(200)]
+    assert any(sched_f), "rates this high must fault some message"
+    assert all(k in ("drop", "flip") for ks in sched_f for k in ks)
+    st = parse_faults("inject:seed=1,straggle=0.5x3")
+    delays = [st.straggle_delay(r) for r in range(50)]
+    assert delays == [st.straggle_delay(r) for r in range(50)]
+    assert set(delays) == {0, 3}
+
+
+def test_resend_budget_exhaustion_raises():
+    f = FaultSpec(drop=0.9, max_resend=1)
+    msgs_ok, failed = 0, 0
+    for m in range(100):
+        try:
+            f.attempts(m)
+            msgs_ok += 1
+        except FaultRecoveryError:
+            failed += 1
+    assert failed > 0, "p=0.9 with 2 attempts must exhaust some budget"
+
+
+def test_declared_recovery_budget_is_precomputable():
+    f = parse_faults(CHAOS)
+    total = 12
+    s, k = f.crash_span(total)
+    assert (s, k) == (6, 8)           # snap=3: last snapshot before 8 is 6
+    declared = f.declared_recovery_rounds(total)
+    assert declared == sum(f.straggle_delay(r) for r in range(total)) + 2
+    # a crash beyond the budget never fires
+    assert f.crash_span(4) == (0, 0)
+
+
+# --------------------------------------------------------------------------
+# Checksum detection
+# --------------------------------------------------------------------------
+
+def test_checksum_detects_every_injected_flip():
+    rng = np.random.default_rng(0)
+    for shape in [(7,), (3, 5), (16,), (2, 2, 2)]:
+        a = rng.normal(size=shape).astype(np.float32)
+        ref = checksum(a)
+        for msg in range(20):
+            for attempt in range(3):
+                bad = corrupt(a, seed=3, msg=msg, attempt=attempt)
+                assert bad.shape == a.shape
+                assert np.asarray(bad).dtype == np.asarray(a).dtype
+                assert checksum(bad) != ref, (shape, msg, attempt)
+        # corruption is deterministic per (seed, msg, attempt)
+        assert np.array_equal(corrupt(a, 3, 0, 0), corrupt(a, 3, 0, 0))
+
+
+# --------------------------------------------------------------------------
+# Engine identity: python == scan == batch under faults
+# --------------------------------------------------------------------------
+
+def test_faulted_stream_identical_across_engines():
+    res_py = api.plan(_spec(CHAOS, engine="python")).execute()
+    res_sc = api.plan(_spec(CHAOS, engine="scan")).execute()
+    assert res_py.ledger.typed_stream() == res_sc.ledger.typed_stream()
+    assert res_py.ledger.round_marks == res_sc.ledger.round_marks
+    assert res_py.ledger.rounds == res_sc.ledger.rounds
+    assert res_py.ledger.recovery_rounds == res_sc.ledger.recovery_rounds
+    assert res_py.ledger.retransmissions() > 0
+    np.testing.assert_allclose(res_py.w, res_sc.w, rtol=1e-5, atol=1e-5)
+
+
+def test_faulted_stream_identical_across_batching():
+    def _spec_k(k):
+        return _spec(CHAOS,
+                     instance_params=dict(d=12, kappa=k, lam=0.5, m=2))
+
+    specs = [_spec_k(8.0), _spec_k(16.0)]
+    seq = [api.plan(s).execute() for s in specs]
+    bat = api.execute_batch([api.plan(s) for s in specs])
+    for s, b in zip(seq, bat):
+        assert b.ledger.typed_stream() == s.ledger.typed_stream()
+        assert b.ledger.round_marks == s.ledger.round_marks
+        assert b.ledger.recovery_rounds == s.ledger.recovery_rounds
+        np.testing.assert_allclose(b.w, s.w, rtol=1e-5, atol=1e-5)
+
+
+# --------------------------------------------------------------------------
+# Pricing: every recovered fault is in the ledger, exactly
+# --------------------------------------------------------------------------
+
+def test_retransmission_pricing_is_exact():
+    res = api.plan(_spec(CHAOS)).execute()
+    led = res.ledger
+    assert led.retransmissions() > 0
+    assert led.total_bits() == led.clean_bits() + led.retransmit_bits()
+    # recovery stream structure: one 32-bit NACK per failed attempt,
+    # followed by a resend priced identically to the original record
+    stream = led.typed_stream()
+    nacks = [r for r in stream if r[0] == "nack"]
+    resends = [r for r in stream if r[-1] and r[0] != "nack"]
+    assert nacks and all(r[3] == NACK_BITS and r[-1] for r in nacks)
+    clean = {(r[0], r[4], r[5]): r for r in stream if not r[-1]}
+    for r in resends:
+        ref = clean.get((r[0], r[4], r[5]))
+        if ref is not None:           # crash-replay rounds re-price whole
+            assert r[1:4] == ref[1:4]  # rounds; per-message resends must
+                                       # cost exactly the original
+
+
+def test_clean_slice_is_bit_identical_to_fault_free_run():
+    res_f = api.plan(_spec(CHAOS)).execute()
+    res_0 = api.plan(_spec("none")).execute()
+    led_f, led_0 = res_f.ledger, res_0.ledger
+    assert led_f.clean_bits() == led_0.total_bits()
+    # the non-retransmit sub-stream is the fault-free stream, verbatim
+    clean_stream = [r for r in led_f.typed_stream() if not r[-1]]
+    assert clean_stream == list(led_0.typed_stream())
+    # value transparency: recovered values == fault-free values, bit-for-bit
+    assert np.array_equal(np.asarray(res_f.w), np.asarray(res_0.w))
+    assert res_f.measured_rounds(1e-2) == res_0.measured_rounds(1e-2)
+
+
+def test_faults_none_is_bit_identical_to_default():
+    """The faults axis at "none" leaves every stream byte-identical to a
+    spec that never mentions it — the PR-8 invariance gate."""
+    base = dict(instance="thm2_chain",
+                instance_params=dict(d=12, kappa=16.0, lam=0.5, m=2),
+                algorithm="dagd", rounds=12, eps=(1e-2,))
+    res_default = api.plan(api.RunSpec(**base)).execute()
+    res_none = api.plan(api.RunSpec(**base, faults="none")).execute()
+    led_d, led_n = res_default.ledger, res_none.ledger
+    assert led_n.typed_stream() == led_d.typed_stream()
+    assert led_n.round_marks == led_d.round_marks
+    assert led_n.recovery_rounds == 0 and led_n.retransmit_bits() == 0
+    assert np.array_equal(np.asarray(res_none.w),
+                          np.asarray(res_default.w))
+
+
+def test_recovery_report_certifies_declared_budget():
+    pl = api.plan(_spec(CHAOS))
+    rep = pl.recovery_report(pl.execute())
+    assert rep["faults"] == CHAOS
+    assert rep["within_budget"]
+    assert rep["recovery_rounds"] == rep["declared_recovery_rounds"]
+    assert rep["wire_rounds"] == rep["algo_rounds"] + rep["recovery_rounds"]
+    assert rep["total_bits"] == rep["clean_bits"] + rep["retransmit_bits"]
+    assert rep["retransmissions"] > 0
+
+
+# --------------------------------------------------------------------------
+# Crash recovery
+# --------------------------------------------------------------------------
+
+def test_crash_recovery_replays_to_identical_state():
+    crash = "inject:seed=1,crash=8,snap=3"
+    res_c = api.plan(_spec(crash, engine="python")).execute()
+    res_0 = api.plan(_spec("none", engine="python")).execute()
+    assert np.array_equal(np.asarray(res_c.w), np.asarray(res_0.w))
+    led = res_c.ledger
+    assert led.recovery_rounds == 2   # snapshot at 6, replay 7..8
+    assert led.algo_rounds == 12 and led.rounds == 14
+    # the replayed rounds are priced as retransmission traffic
+    assert led.retransmit_bits() > 0
+    assert led.clean_bits() == res_0.ledger.total_bits()
+
+
+def test_round_snapshotter_roundtrip_is_bit_exact():
+    from repro.checkpoint import RoundSnapshotter
+    rng = np.random.default_rng(1)
+    tree = [rng.normal(size=(5, 3)).astype(np.float32),
+            rng.normal(size=7).astype(np.float32)]
+    with RoundSnapshotter() as snap:
+        snap.save(4, tree)
+        back = snap.restore(4, like=tree)
+    for a, b in zip(tree, back):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+# --------------------------------------------------------------------------
+# Plan-time validation
+# --------------------------------------------------------------------------
+
+def test_plan_rejects_faults_on_sharded_placement():
+    with pytest.raises(api.PlanError, match="fault injection"):
+        api.plan(_spec("inject:seed=1,drop=0.1", placement="sharded"))
+
+
+def test_spec_roundtrip_carries_faults():
+    s = _spec(CHAOS)
+    assert api.RunSpec.from_json(s.to_json()).faults == CHAOS
+    pl = api.plan(s)
+    assert pl.faults == CHAOS
+    res = pl.execute()
+    assert res.faults == CHAOS

@@ -167,3 +167,49 @@ def test_kernel_backend_oracle_values_match_reference():
         hv = dist.gather_w(dist.phvp(v_stk, z, av))
         np.testing.assert_allclose(hv, prob.hvp(w, v), atol=1e-5,
                                    rtol=1e-5)
+
+
+def test_faulted_ledger_bit_identical_across_backends_and_engines():
+    """PR 8: the fault schedule is seeded and data-independent, so the
+    recovery-priced stream — NACKs, resends, straggle idle rounds, the
+    crash replay span — is bit-identical across the {einsum, kernel} x
+    {python, scan} product, exactly like the clean stream."""
+    from repro import api
+
+    faults = "inject:seed=4,drop=0.2,flip=0.1,straggle=0.3x1,crash=4,snap=2"
+    streams = {}
+    for be in ORACLE_BACKENDS:
+        for eng in ENGINES:
+            spec = api.RunSpec(
+                instance="thm2_chain",
+                instance_params=dict(d=16, kappa=16.0, lam=0.5, m=4),
+                algorithm="dagd", rounds=ROUNDS, eps=(1e-2,),
+                backend=be, engine=eng, faults=faults)
+            led = api.plan(spec).execute().ledger
+            streams[(be, eng)] = (led.rounds, led.algo_rounds,
+                                  led.recovery_rounds, led.round_marks,
+                                  led.typed_stream())
+    ref = streams[("einsum", "python")]
+    assert ref[1] == ROUNDS                  # algo rounds unchanged
+    assert ref[0] == ROUNDS + ref[2]         # wire = algo + recovery
+    assert any(r[-1] for r in ref[4]), "no recovery traffic injected"
+    for key, got in streams.items():
+        assert got == ref, key
+
+
+def test_faults_none_leaves_ledger_bit_identical():
+    """The faults axis must be a no-op at "none": stream, marks, and
+    totals match a spec that predates the axis entirely."""
+    from repro import api
+
+    base = dict(instance="thm2_chain",
+                instance_params=dict(d=16, kappa=16.0, lam=0.5, m=4),
+                algorithm="dagd", rounds=ROUNDS, eps=(1e-2,))
+    led_default = api.plan(api.RunSpec(**base)).execute().ledger
+    led_none = api.plan(api.RunSpec(**base, faults="none")).execute().ledger
+    assert led_none.typed_stream() == led_default.typed_stream()
+    assert led_none.round_marks == led_default.round_marks
+    assert led_none.total_bits() == led_default.total_bits()
+    assert led_none.recovery_rounds == 0
+    assert led_none.retransmit_bits() == 0
+    assert not any(r[-1] for r in led_none.typed_stream())

@@ -11,8 +11,8 @@ import pytest
 from repro import api
 from repro.serve import (
     Arrival, CertificationService, CoalescingScheduler, ProgramCache,
-    QueueFullError, SpecError, SubmissionQueue, replay_trace, spec_pool,
-    synthetic_trace,
+    QuarantinedError, QueueFullError, SpecError, SubmissionQueue,
+    replay_trace, spec_pool, synthetic_trace,
 )
 from repro.serve.queue import PendingRun
 
@@ -318,3 +318,214 @@ def test_soak_mixed_scheduled_channels():
             certified=pl.certify(ref, eps)) for eps in e.spec.eps]
         np.testing.assert_allclose(e.result.w, ref.w,
                                    rtol=1e-5, atol=1e-5)
+
+# --------------------------------------------------------------------------
+# Resilience: degradation ladder, retries, dead letters, quarantine
+# --------------------------------------------------------------------------
+
+def test_queue_full_error_carries_backpressure_hints():
+    q = SubmissionQueue(max_depth=1, retry_after=0.25)
+    q.admit(SMALL, client_id="a")
+    with pytest.raises(QueueFullError) as ei:
+        q.admit(SMALL, client_id="b")
+    assert ei.value.depth == 1 and ei.value.retry_after == 0.25
+    assert q.rejected_full == 1 and q.rejected == 1
+
+
+def test_cache_circuit_breaker_trips_and_resets():
+    cache = ProgramCache(capacity=4, breaker_threshold=2)
+    key = ("k",)
+    cache.lookup(key, 8)
+    cache.record_failure(key)
+    assert not cache.tripped(key) and cache.breaker_open == 0
+    assert len(cache) == 0            # failed entry dropped
+    cache.record_failure(key)
+    assert cache.tripped(key) and cache.breaker_open == 1
+    assert cache.stats().breaker_open == 1
+    cache.record_success(key)
+    assert not cache.tripped(key) and cache.breaker_open == 0
+
+
+def test_group_failure_degrades_sequentially_without_loss(monkeypatch):
+    """A grouped batch that raises mid-execution must produce one ok
+    envelope per run via the sequential ladder — no ticket lost, no
+    duplicates, ordering preserved."""
+    orig = api.execute_group
+    calls = dict(n=0)
+
+    def chaotic(cells, runner_cache=None):
+        calls["n"] += 1
+        if calls["n"] == 1:
+            raise RuntimeError("chaos: injected mid-batch failure")
+        return orig(cells, runner_cache=runner_cache)
+
+    monkeypatch.setattr(api, "execute_group", chaotic)
+    svc = CertificationService(max_batch=4, max_wait=10.0)
+    for i in range(4):
+        svc.submit(SMALL, client_id="c", now=0.0)
+    envs = svc.step(0.0)              # count-flush at width 4
+    assert len(envs) == 4
+    assert [e.seq for e in envs] == [0, 1, 2, 3]
+    assert all(e.status == "ok" for e in envs)
+    assert len({e.ticket for e in envs}) == 4
+    stats = svc.stats()
+    assert stats["group_failures"] == 1 and stats["dead_letters"] == 0
+    assert stats["completed"] == 4 and stats["pending"] == 0
+    # the sequential re-runs are still bit-identical to direct execution
+    ref = api.plan(api.RunSpec(**SMALL)).execute()
+    for e in envs:
+        assert e.result.ledger.typed_stream() == ref.ledger.typed_stream()
+
+
+def test_breaker_routes_batches_around_the_grouped_path(monkeypatch):
+    def always_fail(cells, runner_cache=None):
+        raise RuntimeError("chaos: grouped path down")
+
+    monkeypatch.setattr(api, "execute_group", always_fail)
+    svc = CertificationService(max_batch=2, max_wait=10.0,
+                               breaker_threshold=1)
+    svc.submit(SMALL, now=0.0)
+    svc.submit(SMALL, now=0.0)
+    envs = svc.step(0.0)
+    assert len(envs) == 2 and all(e.status == "ok" for e in envs)
+    assert svc.stats()["group_failures"] == 1
+    # breaker now open: the next batch skips execute_group entirely
+    svc.submit(SMALL, now=1.0)
+    svc.submit(SMALL, now=1.0)
+    envs = svc.step(1.0)
+    assert len(envs) == 2 and all(e.status == "ok" for e in envs)
+    stats = svc.stats()
+    assert stats["group_failures"] == 1       # not called again
+    assert stats["breaker_skips"] == 2
+    assert stats["cache"]["breaker_open"] == 1
+
+
+def test_retry_backoff_then_dead_letter_then_quarantine(monkeypatch):
+    """A run whose execution always fails walks the whole ladder: retry
+    with backoff, engine fallback, dead-letter envelope (still in the
+    client stream), and quarantine of later submissions of that spec."""
+    monkeypatch.setattr(api.ExecutionPlan, "execute",
+                        lambda self: (_ for _ in ()).throw(
+                            FloatingPointError("chaos: poisoned spec")))
+    svc = CertificationService(max_batch=8, max_wait=10.0,
+                               max_retries=1, retry_backoff=0.1)
+    spec = api.RunSpec(**SMALL, engine="python")   # unbatchable
+    svc.submit(spec, client_id="c", now=0.0)
+    assert svc.step(0.0) == []        # first failure: retry scheduled
+    assert svc.stats()["retries"] == 1 and svc.pending == 1
+    assert svc.step(0.05) == []       # backoff not yet expired
+    (env,) = svc.step(0.1)            # retry fails -> dead letter
+    assert env.status == "error" and env.result is None
+    assert "FloatingPointError" in env.error
+    assert env.ticket == "t000001" and env.seq == 0
+    d = env.to_dict()
+    assert d["status"] == "error" and "chaos" in d["error"]
+    stats = svc.stats()
+    assert stats["dead_letters"] == 1 and stats["completed"] == 1
+    assert stats["quarantined"] == 1 and stats["pending"] == 0
+    # the poisoned spec is now rejected at the door
+    with pytest.raises(QuarantinedError):
+        svc.submit(spec, client_id="c", now=0.2)
+    assert svc.stats()["rejected_quarantined"] == 1
+    # a different spec is unaffected
+    other = api.RunSpec(**dict(SMALL, rounds=4), engine="python")
+    assert svc.submit(other, client_id="c", now=0.2) == "t000002"
+
+
+def test_python_engine_fallback_rescues_scan_failures(monkeypatch):
+    """When only the compiled path fails, the ladder lands on the python
+    round engine and the envelope is still ok (engine invariance makes
+    the verdicts identical)."""
+    orig = api.ExecutionPlan.execute
+
+    def scan_poison(self):
+        if self.engine == "scan":
+            raise RuntimeError("chaos: compiled path down")
+        return orig(self)
+
+    monkeypatch.setattr(api.ExecutionPlan, "execute", scan_poison)
+    monkeypatch.setattr(api, "execute_group",
+                        lambda cells, runner_cache=None: (_ for _ in ())
+                        .throw(RuntimeError("chaos: grouped path down")))
+    svc = CertificationService(max_batch=1, max_wait=10.0, max_retries=0)
+    svc.submit(SMALL, client_id="c", now=0.0)
+    (env,) = svc.step(0.0)
+    assert env.status == "ok"
+    stats = svc.stats()
+    assert stats["engine_fallbacks"] == 1 and stats["dead_letters"] == 0
+    ref = api.plan(api.RunSpec(**SMALL, engine="python")).execute()
+    assert env.result.ledger.typed_stream() == ref.ledger.typed_stream()
+
+
+def test_chaos_soak_no_loss_dup_reorder(monkeypatch):
+    """The deterministic soak under executor chaos: every 3rd grouped
+    call raises mid-batch.  Delivery invariants (one envelope per
+    ticket, per-client order, all ok) must hold exactly as in the
+    healthy soak."""
+    orig = api.execute_group
+    calls = dict(n=0)
+
+    def chaotic(cells, runner_cache=None):
+        calls["n"] += 1
+        if calls["n"] % 3 == 0:
+            raise RuntimeError("chaos: injected mid-batch failure")
+        return orig(cells, runner_cache=runner_cache)
+
+    monkeypatch.setattr(api, "execute_group", chaotic)
+    pools = spec_pool()
+    trace = synthetic_trace(n_per_structure=32, seed=13, dt=1e-3,
+                            clients=4, pools=pools)
+    svc = CertificationService(max_batch=8, max_wait=0.25)
+    envs = replay_trace(svc, trace)
+
+    assert len(envs) == len(trace) == 96
+    assert len({e.ticket for e in envs}) == 96
+    assert all(e.status == "ok" for e in envs)
+    submitted, served = {}, {}
+    for a in trace:
+        submitted.setdefault(a.client_id, []).append(a.spec)
+    for e in envs:
+        served.setdefault(e.client_id, []).append(e)
+    for cid, stream in served.items():
+        assert [e.seq for e in stream] == list(range(len(stream)))
+        assert [e.spec for e in stream] == submitted[cid]
+    stats = svc.stats()
+    assert stats["group_failures"] > 0, "chaos never fired"
+    assert stats["dead_letters"] == 0 and stats["pending"] == 0
+    assert stats["completed"] == 96
+
+    # served results remain bit-identical to direct execution
+    refs = {}
+    for pool in pools:
+        for spec in pool:
+            refs[spec.to_json()] = api.plan(spec).execute()
+    for e in envs:
+        ref = refs[e.spec.to_json()]
+        assert e.result.ledger.typed_stream() == ref.ledger.typed_stream()
+
+
+def test_faulted_specs_serve_identically(monkeypatch):
+    """RunSpecs with an active faults= axis flow through the service
+    (grouped by the faults component of the key) and serve the same
+    recovery-priced stream as direct execution."""
+    faulted = dict(SMALL, rounds=10,
+                   faults="inject:seed=2,drop=0.2,flip=0.2")
+    clean = dict(SMALL, rounds=10)
+    svc = CertificationService(max_batch=2, max_wait=10.0)
+    svc.submit(faulted, client_id="c", now=0.0)
+    svc.submit(clean, client_id="c", now=0.0)
+    envs = svc.drain(0.0)
+    assert len(envs) == 2 and all(e.status == "ok" for e in envs)
+    # distinct group keys: the faulted spec never pools with the clean one
+    assert svc.stats()["batches"] == 2
+    ref_f = api.plan(api.RunSpec(**faulted)).execute()
+    ref_c = api.plan(api.RunSpec(**clean)).execute()
+    by_faults = {e.spec.faults: e for e in envs}
+    env_f = by_faults["inject:seed=2,drop=0.2,flip=0.2"]
+    env_c = by_faults["none"]
+    assert env_f.result.ledger.typed_stream() == \
+        ref_f.ledger.typed_stream()
+    assert env_f.result.ledger.retransmissions() > 0
+    assert env_c.result.ledger.typed_stream() == \
+        ref_c.ledger.typed_stream()
+    assert env_c.result.ledger.retransmissions() == 0
