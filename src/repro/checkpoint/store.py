@@ -8,7 +8,6 @@ same three-function interface.
 """
 from __future__ import annotations
 
-import json
 import os
 import re
 import shutil

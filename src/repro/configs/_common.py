@@ -1,15 +1,12 @@
 """Shared builders for the architecture config modules."""
 from __future__ import annotations
 
-import dataclasses
 from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from ..models.layers import AttnConfig, MLPConfig
-from ..models.moe import MoEConfig
-from ..models.mamba2 import Mamba2Config
+from ..models.layers import AttnConfig
 from ..models.transformer import LayerSpec, ModelConfig, init_cache
 from . import shapes as S
 

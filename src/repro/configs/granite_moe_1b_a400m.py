@@ -4,7 +4,6 @@ vocab=49155, MoE 32 experts top-8.
 """
 import jax.numpy as jnp
 
-from ..models.layers import MLPConfig
 from ..models.moe import MoEConfig
 from ..models.transformer import LayerSpec, ModelConfig
 from ._common import attn, lm_input_specs

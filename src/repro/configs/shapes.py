@@ -6,7 +6,6 @@ train/prefill lower ``train_step`` / prefill forward.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -43,7 +43,6 @@ Grammar::
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
 from typing import List, Optional, Tuple, Union
 

@@ -37,7 +37,7 @@ directions once any u is present (u=0 is always in W_j^(0)={0}).
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Sequence
+from typing import List
 
 import numpy as np
 

@@ -9,7 +9,7 @@ short training runs (pure-uniform tokens would pin the loss at log V).
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterator, Optional
+from typing import Iterator
 
 import numpy as np
 import jax

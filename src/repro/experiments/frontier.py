@@ -49,7 +49,6 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro import api
 
-from .instances import build_instance
 from .sweep import PRESETS, _bound_bits
 
 FRONTIER_SCHEMA_VERSION = 1

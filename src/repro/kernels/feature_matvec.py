@@ -25,7 +25,6 @@ block VMEM-resident instead of materializing h ⊙ av in HBM first.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -14,7 +14,6 @@ additive f32 bias (B, T) — the kernel itself is mask-agnostic.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -18,14 +18,13 @@ feature dim), FSDP overlays add data-axis parameter sharding for the
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from ..models.common import (Boxed, logical_to_spec, make_rules, unbox)
+from ..models.common import logical_to_spec, unbox
 
 
 def abstract_params(init_fn, *args):

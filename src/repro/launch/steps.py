@@ -9,8 +9,7 @@ signatures to the launcher/dry-run:
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable, Dict
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

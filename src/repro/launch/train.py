@@ -7,10 +7,8 @@ sharded train_step -> metrics -> periodic checkpoint.
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
-import jax.numpy as jnp
 
 from ..checkpoint import save_checkpoint
 from ..configs import get as get_arch
@@ -20,10 +18,9 @@ from ..metrics import MetricsLogger
 from ..models import encdec as E
 from ..models import transformer as T
 from ..models.common import make_rules, sharding_ctx, unbox
-from ..optim import OptConfig, adamw_init, cosine_schedule
+from ..optim import OptConfig, adamw_init
 from .mesh import make_host_mesh
 from .steps import is_encdec, make_train_step
-from . import sharding as shd
 
 
 def main():

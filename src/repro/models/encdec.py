@@ -15,7 +15,7 @@ d_ff 5120, vocab 51866 [arXiv:2212.04356].
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional, Tuple
+from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -16,15 +16,12 @@ Conventions
 from __future__ import annotations
 
 import dataclasses
-import functools
-import math
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 
-from .common import (Boxed, box, dense_init, logical_constraint, ones_init,
-                     zeros_init)
+from .common import dense_init, logical_constraint, ones_init, zeros_init
 
 F32 = jnp.float32
 

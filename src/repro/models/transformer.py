@@ -16,13 +16,12 @@ Blocks are pre-norm residual:  x += mixer(norm(x));  x += ffn(norm(x)).
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from .common import Boxed, box, dense_init, logical_constraint
+from .common import Boxed, dense_init
 from . import layers as L
 from .layers import AttnConfig, MLPConfig
 from .moe import MoEConfig, init_moe, moe

@@ -9,7 +9,6 @@ axes), which the launch layer exploits to build opt-state PartitionSpecs.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
 
 import jax
 import jax.numpy as jnp
