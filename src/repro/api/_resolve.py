@@ -102,8 +102,10 @@ def resolve_channel(channel: Optional[str] = None) -> str:
     change the optimization trajectory, not just its cost.  Returns the
     *canonical name* (e.g. ``"topk:0.1"``); raises ``ValueError`` on an
     unknown channel."""
+    from_env = False
     if channel in (None, "auto"):
         channel = os.environ.get(CHANNEL_ENV, "").strip() or None
+        from_env = channel is not None
     if channel in (None, "auto"):
         return "identity"
     # call-time import (same pattern as the core shims in the other
@@ -111,7 +113,16 @@ def resolve_channel(channel: Optional[str] = None) -> str:
     # in repro.core.channel, and importing repro.core at module-load
     # time would violate this module's leaf constraint.
     from ..core.channel import parse_channel
-    return parse_channel(channel).name
+    try:
+        return parse_channel(channel).name
+    except ValueError as e:
+        if from_env:
+            # without this, a typo'd REPRO_CHANNEL surfaces as if the
+            # caller had passed the bad name explicitly — on a spec that
+            # never mentioned a channel at all.
+            raise ValueError(
+                f"{CHANNEL_ENV} environment variable: {e}") from None
+        raise
 
 
 def resolve_faults(faults: Optional[str] = None) -> str:

@@ -74,7 +74,6 @@ from typing import Optional, Sequence, Tuple, Union
 
 import numpy as np
 
-import jax
 import jax.numpy as jnp
 from jax import lax
 
@@ -316,7 +315,7 @@ def make_schedule(stages: Sequence[Tuple[int, Channel]]) -> ScheduledChannel:
 
 _IDENTITY = Channel(name="identity", kind="identity")
 
-_TOPK_RE = re.compile(r"topk(?::([^,@]+))?\Z")
+_TOPK_RE = re.compile(r"topk(?::([^,@]*))?\Z")
 
 AnyChannel = Union[Channel, ScheduledChannel, GapChannel]
 
@@ -338,6 +337,14 @@ def _parse_fixed(name: str) -> Channel:
     if m:
         if m.group(1) is None:
             rho = DEFAULT_TOPK_RHO
+        elif not m.group(1).strip():
+            # "topk:" used to fall through to the generic unknown-channel
+            # error, which named the whole token instead of the real
+            # problem (an empty keep fraction after the colon).
+            raise ValueError(
+                f"empty topk keep fraction in {name!r}: write "
+                f"'topk' for the default ({DEFAULT_TOPK_RHO:g}) or "
+                f"'topk:<rho>' with 0 < rho <= 1")
         else:
             try:
                 rho = float(m.group(1))
@@ -349,8 +356,15 @@ def _parse_fixed(name: str) -> Channel:
             raise ValueError(f"topk keep fraction must be in (0, 1]; "
                              f"got {rho:g} in {name!r}")
         return Channel(name=f"topk:{rho:g}", kind="topk", rho=rho)
+    hint = ""
+    if "@" in name:
+        # a bare "int8@5" is almost always a schedule stage that lost
+        # its "sched:" prefix; the generic message sent users to the
+        # fixed-channel list, which cannot explain the '@'.
+        hint = (f"; a '<channel>@<round>' stage only makes sense inside "
+                f"a schedule — did you mean 'sched:{name}'?")
     raise ValueError(f"unknown channel {name!r}; expected one of "
-                     f"{CHANNELS} (topk also takes 'topk:<rho>')")
+                     f"{CHANNELS} (topk also takes 'topk:<rho>'){hint}")
 
 
 def _parse_sched(name: str) -> ScheduledChannel:

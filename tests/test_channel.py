@@ -50,6 +50,35 @@ def test_parse_channel_names_and_canonicalization():
             parse_channel(bad)
 
 
+def test_parse_channel_error_messages():
+    """The error paths name the actual problem, not a generic list."""
+    with pytest.raises(ValueError, match="empty topk keep fraction"):
+        parse_channel("topk:")
+    # a bare stage that lost its "sched:" prefix gets pointed at it
+    with pytest.raises(ValueError, match="did you mean 'sched:int8@5'"):
+        parse_channel("int8@5")
+    with pytest.raises(ValueError, match="empty schedule"):
+        parse_channel("sched:")
+    with pytest.raises(ValueError, match="doubled or trailing comma"):
+        parse_channel("sched:int8@0,,fp16@5")
+    with pytest.raises(ValueError, match="missing"):
+        parse_channel("sched:int8")
+
+
+def test_resolve_channel_env_errors_name_the_env_var(monkeypatch):
+    """A typo'd REPRO_CHANNEL must not surface as a caller error."""
+    from repro.api import _resolve
+    monkeypatch.setenv(_resolve.CHANNEL_ENV, "topk:")
+    with pytest.raises(ValueError, match="REPRO_CHANNEL"):
+        _resolve.resolve_channel(None)
+    # an explicit argument wins over the env var and keeps the plain error
+    monkeypatch.setenv(_resolve.CHANNEL_ENV, "int8")
+    assert _resolve.resolve_channel("fp16") == "fp16"
+    with pytest.raises(ValueError) as ei:
+        _resolve.resolve_channel("nope")
+    assert "REPRO_CHANNEL" not in str(ei.value)
+
+
 def test_channel_lists_mirror_api_resolver():
     """core.channel owns the catalogue; the leaf resolver mirrors it."""
     from repro.api import _resolve
