@@ -1,0 +1,186 @@
+"""Mutation fixtures: programs the verifier MUST reject.
+
+A static verifier that has never rejected anything proves nothing.  Each
+fixture here takes a correct round program and plants one specific
+out-of-class behaviour — a feature-block read across machines, a cross-
+machine combination outside the communicator, an incremental inner round
+shipping a vector, a priced message with no graph ops behind it — then
+runs the very audit pipeline ``ExecutionPlan.audit()`` uses and asserts
+the expected typed finding fires.  The CI ``analysis`` leg runs these on
+every push; a verifier change that silently stops rejecting any of them
+fails the build.
+"""
+from __future__ import annotations
+
+from typing import List
+
+import jax.numpy as jnp
+
+from ..core.channel import parse_channel
+from ..core.engine import RoundProgram, Segment
+from .extract import trace_steps
+from .findings import Finding, FixtureResult
+from .lineage import ClassCertifier, thm4_payload_findings
+from .schedule import verify_local_schedule
+
+
+def _fixture_dist():
+    """A small audit-sized LocalDistERM (m=3 distinct from d=12)."""
+    from ..core.runtime import LocalDistERM
+    from ..experiments.instances import build_thm2_chain
+
+    b = build_thm2_chain(d=12, m=3, kappa=16.0)
+    return LocalDistERM(b.prob, b.part, backend="einsum",
+                        channel="identity")
+
+
+def _audit_program(dist, program, incremental: bool = False
+                   ) -> List[Finding]:
+    """The same local audit pipeline ``audit_plan`` runs, over a raw
+    (dist, program) pair — schedule conformance + class certification
+    (+ the Theorem-4 payload restriction for incremental programs)."""
+    steps = trace_steps(dist, program)
+    chan = parse_channel("identity")
+    findings, _ = verify_local_schedule(steps, program, chan)
+    cert = ClassCertifier(dist.part.m)
+    for ts in steps:
+        cert.certify_step(ts)
+    findings = list(findings) + list(cert.findings)
+    if incremental:
+        findings += thm4_payload_findings(steps, program)
+    return findings
+
+
+def _gd_program(dist, rounds: int, mutate=None) -> RoundProgram:
+    """The dgd skeleton every fixture perturbs: one ReduceAll of z = Aw
+    and one scalar ReduceAll per round."""
+    eta = jnp.float32(0.05)
+
+    def step(d_, w, _x):
+        z = d_.response(w)
+        g = d_.pgrad(w, z)
+        w_new = w - eta * g
+        if mutate is not None:
+            w_new = mutate(d_, w, w_new)
+        d_.end_round()
+        return w_new, w_new
+
+    return RoundProgram(init=dist.zeros_like_w(),
+                        segments=[Segment(step, rounds, name="gd")],
+                        final=lambda w: w)
+
+
+# --------------------------------------------------------------------------
+# The fixtures
+# --------------------------------------------------------------------------
+
+def fixture_leaky_dgd() -> FixtureResult:
+    """Machine 0's feature block read by everyone, outside the
+    communicator: ``w[0]`` collapses the machine axis to one machine's
+    slice.  Expected: ``class-leak`` naming the slicing equation."""
+    dist = _fixture_dist()
+
+    def mutate(d_, w, w_new):
+        # every machine nudges its iterate by machine 0's first block
+        # coordinate — data that never crossed the wire
+        return w_new + 0.0 * jnp.sum(w[0])
+
+    program = _gd_program(dist, rounds=3, mutate=mutate)
+    findings = _audit_program(dist, program)
+    expect = ["class-leak"]
+    return FixtureResult(
+        name="leaky-dgd", expect_codes=expect,
+        rejected=any(f.code in expect and f.severity == "error"
+                     for f in findings),
+        findings=findings)
+
+
+def fixture_oob_dgd() -> FixtureResult:
+    """A cross-machine sum computed outside the communicator: the
+    semantic effect of a ReduceAll with no wire pricing.  Expected:
+    ``class-oob`` naming the machine-axis reduce equation."""
+    dist = _fixture_dist()
+
+    def mutate(d_, w, w_new):
+        # sums across the machine axis without dist.comm — free lunch
+        ghost = jnp.sum(w, axis=0)
+        return w_new + 0.0 * ghost[None, :]
+
+    program = _gd_program(dist, rounds=3, mutate=mutate)
+    findings = _audit_program(dist, program)
+    expect = ["class-oob"]
+    return FixtureResult(
+        name="oob-dgd", expect_codes=expect,
+        rejected=any(f.code in expect and f.severity == "error"
+                     for f in findings),
+        findings=findings)
+
+
+def fixture_chatty_dsvrg() -> FixtureResult:
+    """An 'incremental' program whose inner (count > 1) segment ships a
+    full vector per round, violating Theorem 4's O(1)-per-round payload
+    model.  Expected: ``thm4-payload``."""
+    dist = _fixture_dist()
+    eta = jnp.float32(0.05)
+
+    def snapshot(d_, w, _x):
+        z = d_.response(w)              # one full-vector round: allowed
+        g = d_.pgrad(w, z)
+        d_.end_round()
+        return w - eta * g, w
+
+    def inner(d_, w, _x):
+        z = d_.response(w)              # full vector EVERY inner round
+        g = d_.pgrad(w, z)
+        d_.end_round()
+        return w - eta * g, w
+
+    program = RoundProgram(
+        init=dist.zeros_like_w(),
+        segments=[Segment(snapshot, 1, name="snapshot"),
+                  Segment(inner, 4, name="inner")],
+        final=lambda w: w)
+    findings = _audit_program(dist, program, incremental=True)
+    expect = ["thm4-payload"]
+    return FixtureResult(
+        name="chatty-dsvrg", expect_codes=expect,
+        rejected=any(f.code in expect and f.severity == "error"
+                     for f in findings),
+        findings=findings)
+
+
+def fixture_phantom_dgd() -> FixtureResult:
+    """A ledger record priced with no message behind it: the step books
+    a ReduceAll straight into the ledger without transmitting anything.
+    The static schedule (recovered from the jaxpr) is one message short
+    of the captured one.  Expected: ``sched-count``."""
+    dist = _fixture_dist()
+
+    def mutate(d_, w, w_new):
+        # books wire traffic the graph never performs
+        d_.comm.ledger.record("reduce_all", int(w.shape[1]),
+                              tag="phantom", dtype="float32",
+                              shape=(int(w.shape[1]),))
+        return w_new
+
+    program = _gd_program(dist, rounds=3, mutate=mutate)
+    findings = _audit_program(dist, program)
+    expect = ["sched-count"]
+    return FixtureResult(
+        name="phantom-dgd", expect_codes=expect,
+        rejected=any(f.code in expect and f.severity == "error"
+                     for f in findings),
+        findings=findings)
+
+
+FIXTURES = (fixture_leaky_dgd, fixture_oob_dgd, fixture_chatty_dsvrg,
+            fixture_phantom_dgd)
+
+
+def run_fixtures() -> List[FixtureResult]:
+    return [fx() for fx in FIXTURES]
+
+
+__all__ = ["FIXTURES", "run_fixtures", "fixture_chatty_dsvrg",
+           "fixture_leaky_dgd", "fixture_oob_dgd",
+           "fixture_phantom_dgd"]

@@ -77,6 +77,10 @@ class _Converted:
     structure: str                    # jaxpr text, consts abstracted
     schedule: Tuple[list, int, list]  # (ledger records, rounds,
                                       #  round-boundary marks) per call
+    closed: object = None             # the traced ClosedJaxpr itself —
+                                      # repro.analysis walks its
+                                      # equations (structure text is for
+                                      # grouping, not for analysis)
 
 
 def _convert(fn: Callable, *example_args) -> _Converted:
@@ -89,7 +93,8 @@ def _convert(fn: Callable, *example_args) -> _Converted:
         return jax.tree.unflatten(out_tree, out)
 
     return _Converted(pure=pure, consts=list(closed.consts),
-                      structure=str(closed.jaxpr), schedule=([], 0, []))
+                      structure=str(closed.jaxpr), schedule=([], 0, []),
+                      closed=closed)
 
 
 def _segment_xs(seg: Segment) -> np.ndarray:

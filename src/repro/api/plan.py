@@ -275,6 +275,17 @@ class ExecutionPlan:
         except AssertionError:
             return False
 
+    def audit(self, execute: bool = False):
+        """Statically audit this plan's cell (``repro.analysis``):
+        schedule conformance against the trace-once ledger capture and
+        its replay, algorithm-class certification, and the compile-
+        hazard lints.  ``execute=True`` additionally cross-checks the
+        static schedule against an executed run's ledger.  Returns the
+        ``CellAudit``; ``plan(spec, verify="static")`` is the raising
+        front door."""
+        from ..analysis import audit_plan
+        return audit_plan(self, execute=execute)
+
     def release(self) -> None:
         """Drop the cached cell (dist's padded data copy, compiled-step
         closures) and bundle.  A long sweep calls this after harvesting a
@@ -364,10 +375,21 @@ def _validate_algorithm(spec: RunSpec) -> AlgorithmSpec:
 
 
 def plan(spec: RunSpec,
-         bundle: Optional[InstanceBundle] = None) -> ExecutionPlan:
+         bundle: Optional[InstanceBundle] = None,
+         verify: str = "none") -> ExecutionPlan:
     """Resolve + validate a RunSpec.  ``bundle`` optionally supplies a
     pre-built instance (sweeps share one across algorithms); it must
-    match ``spec.instance``."""
+    match ``spec.instance``.
+
+    ``verify="static"`` additionally runs the ``repro.analysis`` audit
+    over the traced cell before returning: the plan is rejected unless
+    its wire schedule is provably the ledger's, its oracles provably
+    read only their own feature partition, and no compile-hazard lint
+    fires at error severity.  Costs one trace per distinct segment step
+    (no rounds execute)."""
+    if verify not in ("none", "static"):
+        raise PlanError(f"unknown verify mode {verify!r}; expected "
+                        f"'none' or 'static'")
     caps = _resolve.capabilities()
     try:
         placement = _resolve.resolve_placement(spec.placement)
@@ -387,6 +409,10 @@ def plan(spec: RunSpec,
 
     if spec.instance is None and spec.algorithm is None:
         # resolution-only: the axes are the whole request (dry-run tools)
+        if verify == "static":
+            raise PlanError("verify='static' needs a runnable spec; a "
+                            "resolution-only plan traces nothing to "
+                            "audit")
         return ExecutionPlan(spec=spec, placement=placement,
                              backend=backend, engine=engine,
                              channel=channel, measure="none", algo=None,
@@ -440,9 +466,22 @@ def plan(spec: RunSpec,
                 f"{spec.instance_params}; the executed problem would not "
                 f"match the recorded run_spec")
 
-    return ExecutionPlan(spec=spec, placement=placement, backend=backend,
-                         engine=engine, channel=channel, measure=measure,
-                         algo=algo, faults=faults, _bundle=bundle)
+    pl = ExecutionPlan(spec=spec, placement=placement, backend=backend,
+                       engine=engine, channel=channel, measure=measure,
+                       algo=algo, faults=faults, _bundle=bundle)
+    if verify == "static":
+        from ..analysis import summarize
+        cell = pl.audit()
+        if cell.skipped:
+            raise PlanError(f"verify='static' cannot audit this plan: "
+                            f"{cell.skipped}")
+        errors = [f for f in cell.findings if f.severity == "error"]
+        if errors:
+            raise PlanError(
+                f"static verification rejected "
+                f"{spec.algorithm}/{placement}/{channel}: "
+                f"{summarize(cell.findings)}")
+    return pl
 
 
 def run(spec: RunSpec, bundle: Optional[InstanceBundle] = None) -> RunResult:

@@ -61,7 +61,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from .channel import AnyChannel, Channel, parse_channel
+from .channel import AnyChannel, parse_channel
 from .faults import FaultSpec, checksum as _fault_checksum, corrupt as _fault_corrupt, parse_faults
 
 
@@ -399,6 +399,79 @@ def inject_crash_recovery(ledger: CommLedger, faults: FaultSpec) -> int:
 # Communicators
 # --------------------------------------------------------------------------
 
+# --------------------------------------------------------------------------
+# Wire scopes — the static-analysis anchor
+# --------------------------------------------------------------------------
+#
+# Every wire message a communicator emits is wrapped in a
+# ``jax.named_scope`` whose name encodes the ledger record it just
+# priced.  ``jax.named_scope`` rides the tracer name stack: it lands in
+# each traced equation's ``source_info.name_stack`` (surviving into
+# ``scan``/``shard_map`` sub-jaxprs) WITHOUT touching the jaxpr's
+# pretty-printed text, the compiled computation, or any numeric value —
+# so ``execute_batch`` structure grouping and every bit-identity gate
+# are unaffected.  ``repro.analysis`` walks the jaxpr and parses these
+# tokens back into the *static* message schedule, which it then proves
+# equal to the trace-once ledger replay.
+
+_SCOPE_SAFE_RE = re.compile(r"[^A-Za-z0-9_.+-]")
+
+_DIRECTION_CODES = {
+    "worker->center": "w2c",
+    "worker->all": "w2a",
+    "center->worker": "c2w",
+}
+_DIRECTION_NAMES = {v: k for k, v in _DIRECTION_CODES.items()}
+
+COMM_SCOPE_RE = re.compile(
+    r"comm\[i=(?P<idx>\d+);r=(?P<rnd>\d+);k=(?P<kind>[a-z_]+);"
+    r"d=(?P<direction>[A-Za-z0-9_.+-]*);s=(?P<shape>[0-9x]*);"
+    r"t=(?P<dtype>[A-Za-z0-9_]*);b=(?P<bits>\d+);"
+    r"w=(?P<wire>(?:\d+\.\d+)|-);g=(?P<tag>[A-Za-z0-9_.+-]*)\]")
+
+
+def sanitize_scope_tag(tag: str) -> str:
+    """Ledger tags (``"z=Aw"``, ``"|w|^2"``) may use characters a scope
+    name cannot carry; both the emitter and the verifier canonicalize
+    through this before comparing."""
+    return _SCOPE_SAFE_RE.sub("-", tag)
+
+
+def comm_scope_name(rec: CommRecord, idx: int, rnd: int) -> str:
+    """Scope token for ledger record ``rec`` at position ``idx``,
+    emitted in round ``rnd`` (an offset within the traced step when the
+    engine pinned a round base, else the ledger's absolute counter)."""
+    shape = "x".join(str(int(s)) for s in rec.shape)
+    wire = "-" if rec.wire is None else f"{rec.wire[0]}.{rec.wire[1]}"
+    d = _DIRECTION_CODES.get(rec.direction, sanitize_scope_tag(rec.direction))
+    return (f"comm[i={idx};r={rnd};k={rec.kind};d={d};s={shape};"
+            f"t={rec.dtype};b={rec.bits};w={wire};g={sanitize_scope_tag(rec.tag)}]")
+
+
+def parse_comm_scope(token: str) -> Optional[Dict[str, object]]:
+    """Inverse of ``comm_scope_name``; ``None`` if ``token`` is not a
+    comm scope.  ``shape`` comes back as a tuple, ``wire`` as
+    ``(per_elems, nmsg)`` or ``None``, ``direction`` decoded."""
+    m = COMM_SCOPE_RE.fullmatch(token)
+    if m is None:
+        return None
+    shape_s = m.group("shape")
+    wire_s = m.group("wire")
+    d = m.group("direction")
+    return {
+        "idx": int(m.group("idx")),
+        "rnd": int(m.group("rnd")),
+        "kind": m.group("kind"),
+        "direction": _DIRECTION_NAMES.get(d, d),
+        "shape": tuple(int(s) for s in shape_s.split("x")) if shape_s else (),
+        "dtype": m.group("dtype"),
+        "bits": int(m.group("bits")),
+        "wire": (None if wire_s == "-"
+                 else tuple(int(p) for p in wire_s.split("."))),
+        "tag": m.group("tag"),
+    }
+
+
 class _ChannelWireMixin:
     """Channel plumbing shared by both communicators: parsing/rejection,
     round-index tracking for scheduled channels, and wire pricing.
@@ -452,6 +525,21 @@ class _ChannelWireMixin:
         if self._round_base is None:
             return self.ledger.algo_rounds
         return self._round_base + self._round_offset
+
+    def _wire_scope(self, payload=None):
+        """``jax.named_scope`` for the graph ops realizing the wire
+        message the ledger just recorded (call right after
+        ``ledger.record``).  The name encodes the record so the static
+        verifier can recover the message schedule from the jaxpr alone;
+        the round field is the concrete offset within the traced step
+        when ``begin_round`` pinned a (possibly traced) base, else the
+        ledger's concrete round counter."""
+        led = self.ledger
+        rec = led.records[-1]
+        idx = len(led.records) - 1
+        rnd = (self._round_offset if self._round_base is not None
+               else led.algo_rounds)
+        return jax.named_scope(comm_scope_name(rec, idx, rnd))
 
     def _price(self, per_elems: int, itemsize: int, nmsg: int = 1) -> int:
         """Wire bits for ``nmsg`` channel-transformed messages of
@@ -545,22 +633,29 @@ class LocalCommunicator(_ChannelWireMixin):
         """ReduceAll: each machine holds x_j (stacked (m, ...)); returns the
         sum, conceptually available on every machine."""
         x_stacked = jnp.asarray(x_stacked)
-        per = x_stacked[0]
+        # per-machine payload metadata from the aval, NOT from slicing
+        # x_stacked[0]: a traced slice would plant a dead machine-axis
+        # gather in every step jaxpr, which the static class certifier
+        # (repro.analysis) must treat as reading another machine's block
+        per_shape = tuple(x_stacked.shape[1:])
+        per_size = int(np.prod(per_shape, dtype=np.int64)) if per_shape else 1
         itemsize = x_stacked.dtype.itemsize
-        self.ledger.record("reduce_all", per.size, itemsize, tag,
-                           shape=tuple(per.shape),
+        self.ledger.record("reduce_all", per_size, itemsize, tag,
+                           shape=per_shape,
                            dtype=str(x_stacked.dtype),
                            direction="worker->center",
-                           bits=self._price(per.size, itemsize),
-                           wire=(per.size, 1))
+                           bits=self._price(per_size, itemsize),
+                           wire=(per_size, 1))
         self._inject_faults(x_stacked)
-        return jnp.sum(self._transmit(x_stacked), axis=0)
+        with self._wire_scope():
+            return jnp.sum(self._transmit(x_stacked), axis=0)
 
     def reduce_scalar(self, x_stacked, tag: str = "") -> jnp.ndarray:
         # scalars carry control quantities: never channel-transformed
         self.ledger.record("reduce_all", 1, 4, tag, shape=(),
                            direction="worker->center")
-        return jnp.sum(x_stacked, axis=0)
+        with self._wire_scope():
+            return jnp.sum(x_stacked, axis=0)
 
     def all_to_all_broadcast(self, blocks_stacked, tag: str = ""):
         """Each machine broadcasts its R^{d_j} block; every machine ends up
@@ -569,7 +664,8 @@ class LocalCommunicator(_ChannelWireMixin):
         messages through the channel)."""
         blocks_stacked = jnp.asarray(blocks_stacked)
         itemsize = blocks_stacked.dtype.itemsize
-        per_elems = blocks_stacked[0].size
+        per_elems = int(np.prod(blocks_stacked.shape[1:], dtype=np.int64)) \
+            if blocks_stacked.ndim > 1 else 1
         m = blocks_stacked.shape[0]
         self.ledger.record("all_to_all_broadcast", blocks_stacked.size,
                            itemsize, tag,
@@ -579,7 +675,16 @@ class LocalCommunicator(_ChannelWireMixin):
                            bits=self._price(per_elems, itemsize, m),
                            wire=(per_elems, m))
         self._inject_faults(blocks_stacked)
-        return self._transmit(blocks_stacked)
+        with self._wire_scope():
+            out = self._transmit(blocks_stacked)
+            if self.channel.lossless:
+                # a lossless local broadcast is the identity — it traces
+                # to zero equations, leaving the scope (and the message)
+                # invisible to the static verifier.  An optimization
+                # barrier is a semantic no-op that still owns an
+                # equation, anchoring the scope in the jaxpr.
+                out = lax.optimization_barrier(out)
+            return out
 
 
 class ShardMapCommunicator(_ChannelWireMixin):
@@ -617,12 +722,14 @@ class ShardMapCommunicator(_ChannelWireMixin):
                            direction="worker->center",
                            bits=self._price(x_local.size, itemsize),
                            wire=(x_local.size, 1))
-        return lax.psum(self._transmit(x_local), self.axis)
+        with self._wire_scope():
+            return lax.psum(self._transmit(x_local), self.axis)
 
     def reduce_scalar(self, x_local, tag: str = "") -> jnp.ndarray:
         self.ledger.record("reduce_all", 1, 4, tag, shape=(),
                            direction="worker->center")
-        return lax.psum(x_local, self.axis)
+        with self._wire_scope():
+            return lax.psum(x_local, self.axis)
 
     def all_to_all_broadcast(self, block_local, tag: str = "") -> jnp.ndarray:
         """all_gather of the local R^{d_j} block -> (m, d_j) on every shard."""
@@ -634,7 +741,8 @@ class ShardMapCommunicator(_ChannelWireMixin):
                            direction="worker->all",
                            bits=self._price(block_local.size, itemsize),
                            wire=(block_local.size, 1))
-        return lax.all_gather(self._transmit(block_local), self.axis)
+        with self._wire_scope():
+            return lax.all_gather(self._transmit(block_local), self.axis)
 
 
 # --------------------------------------------------------------------------
@@ -733,3 +841,18 @@ def collective_bytes_from_hlo(hlo_text: str) -> CollectiveAudit:
         bytes_by_op[opname] = bytes_by_op.get(opname, 0) + nbytes
         count_by_op[opname] = count_by_op.get(opname, 0) + 1
     return CollectiveAudit(bytes_by_op, count_by_op)
+
+
+def collective_bytes_from_lowered(lowered) -> CollectiveAudit:
+    """Audit a ``jax.stages.Lowered`` computation (e.g. the sharded
+    driver's ``lower_only=True`` product): compile it and sum the
+    collective payloads of the optimized HLO module.  Compilation beats
+    auditing the pre-optimization text — it is what actually runs, after
+    fusion, async splitting, and collective combining."""
+    try:
+        text = lowered.compile().as_text()
+    except Exception:
+        # some backends cannot render compiled HLO; the pre-optimization
+        # lowering still names every collective
+        text = lowered.as_text(dialect="hlo")
+    return collective_bytes_from_hlo(text)

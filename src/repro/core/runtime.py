@@ -52,20 +52,18 @@ deprecated legacy entry point.
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
 import warnings
-from typing import Callable, Optional, Tuple
+from typing import Callable, Optional
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 from jax import lax
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 from .comm import CommLedger, LocalCommunicator, ShardMapCommunicator
 from .erm import ERMProblem, GLMLoss
-from .partition import FeaturePartition, even_partition
+from .partition import FeaturePartition
 from ..kernels import ops as kops
 
 
@@ -337,7 +335,8 @@ def _run_sharded(prob: ERMProblem, algorithm_body: Optional[Callable],
                  backend: Optional[str] = None,
                  engine: str = "python",
                  program_builder: Optional[Callable] = None,
-                 channel=None):
+                 channel=None, trace_only: bool = False,
+                 lower_only: bool = False):
     """Run an algorithm under shard_map with the data matrix column-sharded
     over ``axis``.  (Machinery behind ``repro.api``'s sharded placement;
     the public ``run_sharded`` wrapper is the deprecated kwargs surface.)
@@ -440,6 +439,20 @@ def _run_sharded(prob: ERMProblem, algorithm_body: Optional[Callable],
                    in_specs=(P(None, axis), P(None)),
                    out_specs=P(axis),
                    check_rep=(backend != "kernel" and engine != "scan"))
+    if trace_only:
+        # repro.analysis hook: trace the sharded program without running
+        # it and hand back the jaxpr, the raw trace-time ledger (records
+        # metered once per scanned segment, NOT expanded), and the spans
+        # the expansion below would have consumed — the static verifier
+        # performs its own expansion and proves it equal to the ledger
+        # this function produces when actually run.
+        closed = jax.make_jaxpr(fn)(A, prob.y)
+        return closed, led, spans
+    if lower_only:
+        # HLO audit hook: the lowered (compilable, unexecuted) sharded
+        # computation, for collective_bytes_from_hlo cross-checks of the
+        # collectives XLA actually emits against the metered ledger.
+        return jax.jit(fn).lower(A, prob.y), led, spans
     w = jax.jit(fn)(A, prob.y)
     if spans:
         # Expand the trace-once schedule: each segment's single traced

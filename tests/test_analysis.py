@@ -1,0 +1,224 @@
+"""repro.analysis: schedule conformance, class certification, lints.
+
+Four layers:
+
+  * scope token round-trip — the ``named_scope`` encoding every
+    communicator stamps on its graph ops parses back losslessly;
+  * the conformance matrix — every registered algorithm, under both
+    placements and the audited channel axis, statically verifies with
+    zero error findings (and a sampled subset cross-checks against an
+    executed run's ledger);
+  * mutation fixtures — the deliberately out-of-class programs are
+    rejected with the expected typed finding naming a jaxpr equation;
+  * the report schema — ``AuditReport`` round-trips through JSON, and
+    ``plan(verify="static")`` / ``ExecutionPlan.audit()`` gate on it.
+"""
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis import (AUDIT_CHANNELS, AUDIT_INSTANCES, AuditReport,
+                            CellAudit, Finding, audit_plan)
+from repro.analysis.extract import extract_messages, trace_steps
+from repro.analysis.fixtures import (fixture_chatty_dsvrg,
+                                     fixture_leaky_dgd, fixture_oob_dgd,
+                                     fixture_phantom_dgd)
+from repro.analysis.lints import lint_group_stability
+from repro.api import RunSpec
+from repro.api.plan import ExecutionPlan, PlanError, plan
+from repro.core.comm import (CommRecord, comm_scope_name,
+                             parse_comm_scope)
+
+ALGOS = ("dgd", "dagd", "prox_dagd", "bcd", "disco_f", "dsvrg")
+
+_BUNDLES = {}
+
+
+def _plan_for(algo, placement, channel, rounds=8):
+    kind, params, _ = AUDIT_INSTANCES[algo]
+    spec = RunSpec(instance=kind, instance_params=params, algorithm=algo,
+                   rounds=rounds, placement=placement, engine="scan",
+                   backend="einsum", channel=channel, measure="none")
+    key = (kind, tuple(sorted(params.items())))
+    pl = plan(spec, bundle=_BUNDLES.get(key))
+    _BUNDLES.setdefault(key, pl.bundle)
+    return pl
+
+
+# --------------------------------------------------------------------------
+# Scope tokens
+# --------------------------------------------------------------------------
+
+def test_scope_token_roundtrip():
+    rec = CommRecord("reduce_all", 12, 48, tag="z=Aw",
+                     direction="worker->center", shape=(12,),
+                     dtype="float32", bits=96, wire=(12, 1))
+    tok = comm_scope_name(rec, idx=3, rnd=2)
+    meta = parse_comm_scope(tok)
+    assert meta is not None
+    assert meta["idx"] == 3 and meta["rnd"] == 2
+    assert meta["kind"] == "reduce_all"
+    assert meta["direction"] == "worker->center"
+    assert meta["shape"] == (12,) and meta["dtype"] == "float32"
+    assert meta["bits"] == 96 and meta["wire"] == (12, 1)
+
+
+def test_scope_token_sanitizes_tags():
+    rec = CommRecord("reduce_all", 1, 4, tag="|w|^2", shape=(),
+                     dtype="float32", bits=32, wire=None)
+    tok = comm_scope_name(rec, idx=0, rnd=0)
+    assert "|" not in tok and "^" not in tok   # named_scope-safe
+    meta = parse_comm_scope(tok)
+    assert meta is not None and meta["shape"] == ()
+    assert parse_comm_scope("comm[garbage]") is None
+    assert parse_comm_scope("not-a-token") is None
+
+
+def test_extract_messages_from_traced_step():
+    pl = _plan_for("dgd", "local", "identity")
+    dist, program, _ = pl._cell()
+    steps = trace_steps(dist, program)
+    assert len(steps) == 1
+    msgs, problems = extract_messages(steps[0].closed.jaxpr)
+    assert not problems
+    assert len(msgs) == len(steps[0].records) == 1
+    assert msgs[0].kind == "reduce_all"
+    assert msgs[0].prims   # anchored by real equations
+
+
+# --------------------------------------------------------------------------
+# The conformance matrix (the acceptance-criteria grid)
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("channel", AUDIT_CHANNELS)
+@pytest.mark.parametrize("placement", ("local", "sharded"))
+@pytest.mark.parametrize("algo", ALGOS)
+def test_static_matrix(algo, placement, channel):
+    if algo == "bcd" and placement == "sharded":
+        with pytest.raises(PlanError):
+            _plan_for(algo, placement, channel)
+        return
+    pl = _plan_for(algo, placement, channel)
+    cell = audit_plan(pl, execute=False)
+    errs = [f for f in cell.findings if f.severity == "error"]
+    assert not errs, "\n".join(str(f) for f in errs)
+    assert cell.messages > 0 and cell.rounds == 8
+    assert cell.total_bits > 0
+
+
+@pytest.mark.parametrize("placement", ("local", "sharded"))
+def test_dynamic_crosscheck(placement):
+    """The static schedule equals an actually executed run's ledger —
+    sampled on the scheduled channel (the hardest pricing path)."""
+    pl = _plan_for("dgd", placement, "sched:int8@0,fp16@5")
+    cell = audit_plan(pl, execute=True)
+    assert cell.executed
+    errs = [f for f in cell.findings if f.severity == "error"]
+    assert not errs, "\n".join(str(f) for f in errs)
+
+
+def test_incremental_payload_certified():
+    """dsvrg's inner segments really are scalar-only (Theorem 4)."""
+    pl = _plan_for("dsvrg", "local", "identity")
+    cell = audit_plan(pl)
+    assert not any(f.code == "thm4-payload" for f in cell.findings)
+
+
+# --------------------------------------------------------------------------
+# Mutation fixtures: the verifier must reject
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("fixture,code", [
+    (fixture_leaky_dgd, "class-leak"),
+    (fixture_oob_dgd, "class-oob"),
+    (fixture_chatty_dsvrg, "thm4-payload"),
+    (fixture_phantom_dgd, "sched-count"),
+])
+def test_fixture_rejected(fixture, code):
+    fx = fixture()
+    assert fx.rejected, f"{fx.name} was NOT rejected"
+    hits = [f for f in fx.findings
+            if f.code == code and f.severity == "error"]
+    assert hits
+    if code.startswith("class-"):
+        # lineage findings name the offending jaxpr equation
+        assert hits[0].eqn and hits[0].path
+
+
+# --------------------------------------------------------------------------
+# Schema round-trip + plan gating
+# --------------------------------------------------------------------------
+
+def test_audit_report_roundtrip():
+    pl = _plan_for("dgd", "local", "int8")
+    cell = audit_plan(pl)
+    report = AuditReport(cells=[cell], meta={"rounds": 8})
+    report.cells[0].findings.append(Finding(
+        "lint-weak-literal", "info", "synthetic", algorithm="dgd"))
+    back = AuditReport.from_json(report.to_json())
+    assert back.to_dict() == report.to_dict()
+    assert isinstance(back.cells[0], CellAudit)
+    assert back.cells[0].findings[-1].code == "lint-weak-literal"
+    assert back.ok == report.ok
+    md = report.to_markdown()
+    assert "| dgd | local | `int8` |" in md
+
+
+def test_plan_verify_static():
+    kind, params, _ = AUDIT_INSTANCES["dgd"]
+    spec = RunSpec(instance=kind, instance_params=params,
+                   algorithm="dgd", rounds=4, placement="local",
+                   channel="int8", measure="none")
+    pl = plan(spec, verify="static")
+    assert isinstance(pl, ExecutionPlan)
+    cell = pl.audit()
+    assert cell.ok
+    with pytest.raises(PlanError, match="verify"):
+        plan(spec, verify="dynamic-ish")
+    with pytest.raises(PlanError, match="resolution-only"):
+        plan(RunSpec(), verify="static")
+
+
+# --------------------------------------------------------------------------
+# Lints
+# --------------------------------------------------------------------------
+
+def test_lint_rng_fires():
+    from repro.analysis.lints import lint_rng
+    from repro.core.engine import RoundProgram, Segment
+    from repro.analysis.fixtures import _fixture_dist
+    import jax
+
+    dist = _fixture_dist()
+
+    def step(d_, w, x):
+        key = jax.random.PRNGKey(0)
+        noise = jax.random.normal(key, w.shape)
+        z = d_.response(w + 0.0 * noise)
+        g = d_.pgrad(w, z)
+        d_.end_round()
+        return w - jnp.float32(0.05) * g, w
+
+    program = RoundProgram(init=dist.zeros_like_w(),
+                           segments=[Segment(step, 2, name="gd")],
+                           final=lambda w: w)
+    steps = trace_steps(dist, program)
+    findings = lint_rng(steps, algorithm="rng-fixture")
+    assert findings and all(f.code == "lint-rng" for f in findings)
+    assert all(f.severity == "error" for f in findings)
+
+
+def test_lint_group_stability():
+    same = ["a b c\nd e f"]
+    assert lint_group_stability(same, ["a b c\nd e f"]) == []
+    split = lint_group_stability(same, ["a b c\nd e g"],
+                                 algorithm="dgd")
+    assert len(split) == 1 and split[0].code == "lint-group-split"
+    assert "line 2" in split[0].message
+    segs = lint_group_stability(same, same + same)
+    assert segs and segs[0].code == "lint-group-split"
+
+
+def test_registered_algorithms_group_stable():
+    """Hyper-value changes must not split execute_batch groups."""
+    from repro.analysis import _group_stability_findings
+    assert _group_stability_findings("dgd") == []
