@@ -2,9 +2,11 @@
 
 The paper meters communication rounds; the compute inside a round is free
 to get as fast as the hardware allows. This benchmark drives metered
-``LocalDistERM`` runs of the same algorithms under both oracle backends
+``LocalDistERM`` runs of the same algorithms under every oracle backend
 ("einsum" — plain jnp contractions; "kernel" — the MXU-tiled Pallas
-kernels) and reports:
+kernels; "fused" — the whole-round kernels of
+``kernels/fused_round.py`` with composed fused-epilogue fallbacks) and
+reports:
 
   * wall-clock per communication round for each backend, and
   * the CommLedger (round count, op counts, bytes), which MUST be
@@ -161,14 +163,21 @@ def render_markdown(doc: dict) -> str:
         "## Per-round wall-clock",
         "",
         "| instance | algorithm | einsum µs/round | kernel µs/round | "
-        "kernel/einsum speedup | ledger rounds | ledger identical |",
-        "|---|---|---|---|---|---|---|",
+        "fused µs/round | kernel/einsum speedup | ledger rounds | "
+        "ledger identical |",
+        "|---|---|---|---|---|---|---|---|",
     ]
     for r in doc["records"]:
         ein, ker = r["backends"]["einsum"], r["backends"]["kernel"]
+        fus = r["backends"].get("fused")
         lines.append(
             f"| {r['instance_label']} | {r['algorithm']} | "
             f"{ein['us_per_round']:.1f} | {ker['us_per_round']:.1f} | "
+            f"{fus['us_per_round']:.1f} | " if fus else
+            f"| {r['instance_label']} | {r['algorithm']} | "
+            f"{ein['us_per_round']:.1f} | {ker['us_per_round']:.1f} | "
+            "- | ")
+        lines[-1] += (
             f"{r['speedup_kernel_vs_einsum']:.2f}x | "
             f"{ein['rounds']} | "
             f"{'yes' if r['ledger_identical'] else '**NO**'} |")

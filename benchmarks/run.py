@@ -12,7 +12,7 @@ Default mode prints ``name,us_per_call,derived`` CSV rows:
   api_batch        — execute_batch vs sequential per-cell wall-clock
   comm_bits        — wire bits/round + bits-to-eps per lossy channel
   serve_throughput — certification-service specs/s + cache hit rate
-  roofline         — dry-run roofline terms per (arch x shape x mesh)
+  roofline         — fused vs composed HBM bytes/round + achieved fraction
 
 The theorem rows are thin wrappers over ``repro.experiments`` (which
 drives every cell through the ``repro.api`` facade); pass ``--sweeps``

@@ -28,8 +28,8 @@ from ._resolve import (BACKEND_ENV, CHANNEL_ENV, CHANNELS, ENGINE_ENV,
                        resolve_faults, resolve_oracle_backend,
                        resolve_placement)
 from .spec import SPEC_SCHEMA_VERSION, RunSpec
-from .plan import (ExecutionPlan, PlanError, RunResult, bound_for, plan,
-                   run)
+from .plan import (VERIFY_ANALYSES, ExecutionPlan, PlanError, RunResult,
+                   bound_for, plan, run)
 from .batch import Cell, execute_batch, execute_group, prepare_cell
 
 __all__ = [
@@ -37,7 +37,7 @@ __all__ = [
     "FAULTS_ENV", "ORACLE_BACKENDS", "PLACEMENTS",
     "capabilities", "resolve_channel", "resolve_engine", "resolve_faults",
     "resolve_oracle_backend", "resolve_placement",
-    "SPEC_SCHEMA_VERSION", "RunSpec",
+    "SPEC_SCHEMA_VERSION", "RunSpec", "VERIFY_ANALYSES",
     "ExecutionPlan", "PlanError", "RunResult", "bound_for", "plan", "run",
     "Cell", "execute_batch", "execute_group", "prepare_cell",
 ]

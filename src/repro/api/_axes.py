@@ -1,0 +1,134 @@
+"""The five RunSpec execution axes, as one declarative table.
+
+Placement, oracle backend, round engine, channel and faults used to
+each hand-roll their own resolution path (env lookup, default rule,
+validation, error wording) across ``api/_resolve.py`` — and ``channel``
+/``faults`` differed gratuitously from the closed-vocabulary axes.  One
+``Axis`` row now states everything that distinguishes an axis:
+
+  * ``options``   — the canonical vocabulary.  For the grammar axes
+    (channel, faults) these are the grammar *kinds* — validation runs
+    through the core parser instead of membership;
+  * ``env``       — the ``REPRO_*`` override variable, consulted when
+    the spec says ``"auto"`` (and, when ``env_on_none``, when the value
+    is omitted entirely — faults opts out so a stray ``REPRO_FAULTS``
+    can never perturb a spec that didn't ask);
+  * ``default``   — the resolved fallback: a literal, or a callable of
+    the ``capabilities()`` dict for platform-dependent axes;
+  * ``parser``    — for grammar axes, a thunk returning the core parser
+    (imported at call time to keep this module a leaf);
+  * ``auto_values`` — the inputs that mean "use the default".
+
+``resolve`` is the one shared algorithm; env-sourced parse failures are
+re-labelled with the variable name on every axis, so a typo'd env var
+never surfaces as if the caller had passed the bad value explicitly.
+
+This module must stay a leaf (stdlib only at load time): it is imported
+by ``api/spec.py`` and ``api/_resolve.py``, both of which are reachable
+from ``repro.core``'s call-time shims — any load-time import of
+``repro.core`` from here would recreate the cycle those shims avoid.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Callable, Optional, Tuple, Union
+
+
+def _channel_parser():
+    from ..core.channel import parse_channel
+    return parse_channel
+
+
+def _faults_parser():
+    from ..core.faults import parse_faults
+    return parse_faults
+
+
+@dataclasses.dataclass(frozen=True)
+class Axis:
+    """One execution axis: its vocabulary, env hook and default rule."""
+
+    name: str                      # RunSpec field name
+    label: str                     # error wording ("oracle backend", ...)
+    options: Tuple[str, ...]       # canonical vocabulary / grammar kinds
+    default: Union[str, Callable]  # literal, or callable(caps) -> str
+    env: Optional[str] = None      # REPRO_* override variable
+    env_on_none: bool = True       # consult env for None, not just "auto"
+    parser: Optional[Callable] = None      # grammar axes: parser thunk
+    auto_values: Tuple = (None, "auto")    # inputs meaning "default"
+
+
+AXES: Tuple[Axis, ...] = (
+    Axis(name="placement", label="placement",
+         options=("local", "sharded"), default="local"),
+    Axis(name="backend", label="oracle backend",
+         options=("einsum", "kernel", "fused"),
+         # fused == kernel plus whole-round fusion where a cell supports
+         # it (falling back to the composed kernels otherwise), so it is
+         # the strictly-better default wherever the kernels compile.
+         default=lambda caps: "fused" if caps["kernel_compiled"]
+         else "einsum",
+         env="REPRO_ORACLE_BACKEND"),
+    Axis(name="engine", label="round engine",
+         options=("python", "scan"), default="scan",
+         env="REPRO_ROUND_ENGINE"),
+    Axis(name="channel", label="channel",
+         options=("identity", "fp16", "bf16", "int8", "topk", "sched",
+                  "gap"),
+         default="identity", env="REPRO_CHANNEL",
+         parser=_channel_parser),
+    Axis(name="faults", label="faults",
+         options=("none", "inject"), default="none", env="REPRO_FAULTS",
+         env_on_none=False, parser=_faults_parser,
+         auto_values=(None, "auto", "", "none")),
+)
+
+AXES_BY_NAME = {axis.name: axis for axis in AXES}
+
+# The axis fields of a RunSpec, in declaration order — api/spec.py pins
+# its string-typed axis fields to this, so adding an axis here is the
+# single source of truth for serialization too.
+AXIS_FIELDS = tuple(axis.name for axis in AXES)
+
+
+def check(value: str, axis: Axis) -> str:
+    """Membership check with the uniform error wording every axis uses."""
+    if value not in axis.options:
+        raise ValueError(f"unknown {axis.label} {value!r}; expected one "
+                         f"of {tuple(axis.options) + ('auto',)}")
+    return value
+
+
+def resolve(axis: Axis, value: Optional[str],
+            caps: Union[dict, Callable, None] = None) -> str:
+    """Resolve ``value`` on ``axis``: env override, then default, then
+    validation (vocabulary membership, or the core grammar parser).
+
+    ``caps`` — the ``capabilities()`` dict, or a zero-arg callable
+    producing it; only consulted (lazily) by platform-dependent
+    defaults, so cheap resolutions never probe the backend.
+    """
+    from_env = False
+    if axis.env is not None and (value == "auto"
+                                 or (value is None and axis.env_on_none)):
+        env_value = os.environ.get(axis.env, "").strip() or None
+        if env_value is not None:
+            value, from_env = env_value, True
+    if value in axis.auto_values:
+        if callable(axis.default):
+            caps = caps() if callable(caps) else caps
+            return axis.default(caps)
+        return axis.default
+    if axis.parser is None:
+        return check(value, axis)
+    try:
+        return axis.parser()(value).name
+    except ValueError as e:
+        if from_env:
+            # without this, a typo'd REPRO_* value surfaces as if the
+            # caller had passed the bad name explicitly — on a spec
+            # that never mentioned this axis at all.
+            raise ValueError(
+                f"{axis.env} environment variable: {e}") from None
+        raise

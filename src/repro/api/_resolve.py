@@ -1,28 +1,33 @@
-"""The single capability resolver for the four execution axes.
+"""The single capability resolver for the five execution axes.
 
-Every run in the repo is positioned on four orthogonal axes:
+Every run in the repo is positioned on five orthogonal axes:
 
   * **placement** — where the machines live: ``local`` (m simulated
     machines, blocks stacked on a leading axis) or ``sharded`` (machine j
     = mesh slice j inside ``shard_map``);
-  * **oracle backend** — how the per-machine GEMVs inside
-    ``response``/``pgrad``/``phvp`` are computed: ``einsum`` (plain jnp
-    contractions) or ``kernel`` (the MXU-tiled Pallas kernels);
+  * **oracle backend** — how the per-machine work inside
+    ``response``/``pgrad``/``phvp`` is computed: ``einsum`` (plain jnp
+    contractions), ``kernel`` (the MXU-tiled Pallas kernels) or
+    ``fused`` (the kernels plus the whole-round fused step of
+    ``kernels/fused_round.py`` where a cell supports it);
   * **round engine** — how rounds are driven: ``python`` (per-call loop)
     or ``scan`` (one ``lax.scan``-compiled XLA program per segment);
   * **channel** — what the per-machine uploads cost on the wire:
     ``identity`` (exact f32) or a lossy transform (``fp16``/``bf16``/
     ``int8``/``topk[:rho]``), a round-indexed schedule of those
     (``sched:<ch>@<round>,...``) or a gap-adaptive spec
-    (``gap:<ch0>,<ch>@<thr>,...``) — see ``core.channel``.
+    (``gap:<ch0>,<ch>@<thr>,...``) — see ``core.channel``;
+  * **faults** — seeded fault injection (``core.faults`` grammar), off
+    by default.
 
-Historically the ``auto`` choices were resolved in three places
-(``core/runtime.py``, ``experiments/sweep.py``, ``launch/dryrun.py``);
-this module is now the only implementation.  ``repro.api.plan`` calls it
-at *plan time*, so environment variables are consulted when a run is
-planned, never at import time, and a resolved ``ExecutionPlan`` carries
-concrete choices from then on.  ``core.runtime``/``core.engine`` keep
-their historical ``resolve_*`` names as delegating shims.
+Axis *policy* (vocabulary, env var, default rule, error wording) lives
+in one declarative table, ``api/_axes.py``; this module binds the table
+to ``capabilities()`` and keeps the historical ``resolve_*`` names.
+``repro.api.plan`` calls these at *plan time*, so environment variables
+are consulted when a run is planned, never at import time, and a
+resolved ``ExecutionPlan`` carries concrete choices from then on.
+``core.runtime``/``core.engine`` keep their historical ``resolve_*``
+names as delegating shims.
 
 This module must stay a leaf (stdlib + jax only): ``repro.core``'s shims
 reach it at call time through the ``repro.api`` package (which imports
@@ -32,24 +37,25 @@ the call-time indirection avoids.
 """
 from __future__ import annotations
 
-import os
 from typing import Dict, Optional
 
 import jax
 
+from . import _axes
 
-ORACLE_BACKENDS = ("einsum", "kernel")
-ENGINES = ("python", "scan")
-PLACEMENTS = ("local", "sharded")
+
+ORACLE_BACKENDS = _axes.AXES_BY_NAME["backend"].options
+ENGINES = _axes.AXES_BY_NAME["engine"].options
+PLACEMENTS = _axes.AXES_BY_NAME["placement"].options
 # Canonical list lives in repro.core.channel (the transform
-# implementations); mirrored here so the resolver module stays a leaf at
-# load time. tests/test_channel.py pins equality.
-CHANNELS = ("identity", "fp16", "bf16", "int8", "topk", "sched", "gap")
+# implementations); mirrored in the axis table so the resolver stays a
+# leaf at load time. tests/test_channel.py pins equality.
+CHANNELS = _axes.AXES_BY_NAME["channel"].options
 
-BACKEND_ENV = "REPRO_ORACLE_BACKEND"
-ENGINE_ENV = "REPRO_ROUND_ENGINE"
-CHANNEL_ENV = "REPRO_CHANNEL"
-FAULTS_ENV = "REPRO_FAULTS"
+BACKEND_ENV = _axes.AXES_BY_NAME["backend"].env
+ENGINE_ENV = _axes.AXES_BY_NAME["engine"].env
+CHANNEL_ENV = _axes.AXES_BY_NAME["channel"].env
+FAULTS_ENV = _axes.AXES_BY_NAME["faults"].env
 
 
 def capabilities() -> Dict[str, object]:
@@ -57,7 +63,7 @@ def capabilities() -> Dict[str, object]:
 
     ``kernel_compiled`` — the Pallas kernels compile for TPU; everywhere
     else they run in interpret mode (correct but slow), which is why
-    ``auto`` only picks ``kernel`` on TPU.  ``devices`` bounds the mesh a
+    ``auto`` only picks ``fused`` on TPU.  ``devices`` bounds the mesh a
     ``sharded`` placement can build.
     """
     platform = jax.default_backend()
@@ -66,34 +72,19 @@ def capabilities() -> Dict[str, object]:
                 kernel_compiled=(platform == "tpu"))
 
 
-def _check(value: str, axis: str, options) -> str:
-    if value not in options:
-        raise ValueError(f"unknown {axis} {value!r}; expected one of "
-                         f"{tuple(options) + ('auto',)}")
-    return value
-
-
 def resolve_oracle_backend(backend: Optional[str] = None, *,
                            caps: Optional[dict] = None) -> str:
     """``None``/``"auto"`` -> the ``REPRO_ORACLE_BACKEND`` env var, then
-    the platform default (``kernel`` on TPU, ``einsum`` elsewhere)."""
-    if backend in (None, "auto"):
-        backend = os.environ.get(BACKEND_ENV, "").strip() or None
-    if backend in (None, "auto"):
-        caps = caps if caps is not None else capabilities()
-        backend = "kernel" if caps["kernel_compiled"] else "einsum"
-    return _check(backend, "oracle backend", ORACLE_BACKENDS)
+    the platform default (``fused`` on TPU, ``einsum`` elsewhere)."""
+    return _axes.resolve(_axes.AXES_BY_NAME["backend"], backend,
+                         caps=caps if caps is not None else capabilities)
 
 
 def resolve_engine(engine: Optional[str] = None) -> str:
     """``None``/``"auto"`` -> the ``REPRO_ROUND_ENGINE`` env var, then
     ``scan`` — the compiled engine is the production default on every
     platform; the python engine exists for debugging and parity."""
-    if engine in (None, "auto"):
-        engine = os.environ.get(ENGINE_ENV, "").strip() or None
-    if engine in (None, "auto"):
-        engine = "scan"
-    return _check(engine, "round engine", ENGINES)
+    return _axes.resolve(_axes.AXES_BY_NAME["engine"], engine)
 
 
 def resolve_channel(channel: Optional[str] = None) -> str:
@@ -101,28 +92,8 @@ def resolve_channel(channel: Optional[str] = None) -> str:
     ``identity`` — lossy channels are an explicit opt-in because they
     change the optimization trajectory, not just its cost.  Returns the
     *canonical name* (e.g. ``"topk:0.1"``); raises ``ValueError`` on an
-    unknown channel."""
-    from_env = False
-    if channel in (None, "auto"):
-        channel = os.environ.get(CHANNEL_ENV, "").strip() or None
-        from_env = channel is not None
-    if channel in (None, "auto"):
-        return "identity"
-    # call-time import (same pattern as the core shims in the other
-    # direction): the transform catalogue lives with its implementations
-    # in repro.core.channel, and importing repro.core at module-load
-    # time would violate this module's leaf constraint.
-    from ..core.channel import parse_channel
-    try:
-        return parse_channel(channel).name
-    except ValueError as e:
-        if from_env:
-            # without this, a typo'd REPRO_CHANNEL surfaces as if the
-            # caller had passed the bad name explicitly — on a spec that
-            # never mentioned a channel at all.
-            raise ValueError(
-                f"{CHANNEL_ENV} environment variable: {e}") from None
-        raise
+    unknown channel (labelled with the env var when it came from one)."""
+    return _axes.resolve(_axes.AXES_BY_NAME["channel"], channel)
 
 
 def resolve_faults(faults: Optional[str] = None) -> str:
@@ -131,13 +102,7 @@ def resolve_faults(faults: Optional[str] = None) -> str:
     only for ``"auto"``, so a stray ``REPRO_FAULTS`` can never perturb a
     spec that didn't ask).  Returns the *canonical name* (idempotent
     under re-parse); raises ``ValueError`` on a malformed spec."""
-    if faults == "auto":
-        faults = os.environ.get(FAULTS_ENV, "").strip() or None
-    if faults in (None, "auto", "", "none"):
-        return "none"
-    # call-time import for the same leaf-constraint reason as channels.
-    from ..core.faults import parse_faults
-    return parse_faults(faults).name
+    return _axes.resolve(_axes.AXES_BY_NAME["faults"], faults)
 
 
 def resolve_placement(placement: Optional[str] = None) -> str:
@@ -145,6 +110,4 @@ def resolve_placement(placement: Optional[str] = None) -> str:
     explicit opt-in: it needs a mesh and its ledger records at trace
     time, so silently switching on device count would change metering
     conventions under the caller."""
-    if placement in (None, "auto"):
-        placement = "local"
-    return _check(placement, "placement", PLACEMENTS)
+    return _axes.resolve(_axes.AXES_BY_NAME["placement"], placement)

@@ -286,6 +286,43 @@ class ExecutionPlan:
         from ..analysis import audit_plan
         return audit_plan(self, execute=execute)
 
+    def audit_hlo_bytes(self):
+        """Lower this plan's sharded cell without running it and audit
+        the compiled module's collectives
+        (``core.comm.collective_bytes_from_lowered``): the module must
+        carry at least the collective traffic the trace-once ledger
+        metered, or the wire meter is lying about the compiled program.
+        Returns the ``CollectiveAudit``; ``plan(spec,
+        verify=("hlo-bytes",))`` is the raising front door.  Lowering
+        always happens through the scan driver (the python driver has no
+        whole-program module to audit)."""
+        if self.placement != "sharded":
+            raise PlanError(
+                "verify analysis 'hlo-bytes' audits the compiled XLA "
+                "module's collectives; only the sharded placement lowers "
+                "to collective HLO (the local placement simulates "
+                "machines on one device, so its module has none) — use "
+                "placement='sharded', or verify='static' for local cells")
+        from ..core.comm import collective_bytes_from_lowered
+        from ..core.runtime import _run_sharded
+        b = self.bundle
+        kwargs = self.algo_kwargs()
+        lowered, led, _ = _run_sharded(
+            b.prob, None, rounds=self.spec.rounds, ledger=CommLedger(),
+            backend=self.backend, engine="scan",
+            program_builder=lambda d_, r: self.algo.program(d_, r,
+                                                            **kwargs),
+            channel=self.wire_channel(), lower_only=True)
+        audit = collective_bytes_from_lowered(lowered)
+        traced = sum(r.bytes for r in led.records)
+        if led.records and audit.total_bytes < traced:
+            raise PlanError(
+                f"hlo-bytes audit rejected "
+                f"{self.spec.algorithm}/{self.channel}: the lowered "
+                f"module carries {audit.total_bytes} collective bytes "
+                f"but the trace-once ledger metered {traced}")
+        return audit
+
     def release(self) -> None:
         """Drop the cached cell (dist's padded data copy, compiled-step
         closures) and bundle.  A long sweep calls this after harvesting a
@@ -374,22 +411,51 @@ def _validate_algorithm(spec: RunSpec) -> AlgorithmSpec:
     return algo
 
 
+VERIFY_ANALYSES = ("static", "hlo-bytes")
+
+
+def _verify_analyses(verify) -> Tuple[str, ...]:
+    """Normalize ``plan``'s ``verify=`` argument — ``"none"``/``None``,
+    one analysis name, or an iterable of names — to a tuple of known
+    analyses, rejecting anything else eagerly."""
+    if verify is None or verify == "none":
+        return ()
+    if isinstance(verify, str):
+        verify = (verify,)
+    try:
+        analyses = tuple(verify)
+    except TypeError:
+        raise PlanError(f"verify must be an analysis name or an iterable "
+                        f"of names; got {type(verify).__name__} "
+                        f"({verify!r})") from None
+    for a in analyses:
+        if a not in VERIFY_ANALYSES:
+            raise PlanError(f"unknown verify mode {a!r}; expected 'none' "
+                            f"or a subset of {VERIFY_ANALYSES}")
+    return analyses
+
+
 def plan(spec: RunSpec,
          bundle: Optional[InstanceBundle] = None,
-         verify: str = "none") -> ExecutionPlan:
+         verify="none") -> ExecutionPlan:
     """Resolve + validate a RunSpec.  ``bundle`` optionally supplies a
     pre-built instance (sweeps share one across algorithms); it must
     match ``spec.instance``.
 
-    ``verify="static"`` additionally runs the ``repro.analysis`` audit
-    over the traced cell before returning: the plan is rejected unless
-    its wire schedule is provably the ledger's, its oracles provably
-    read only their own feature partition, and no compile-hazard lint
-    fires at error severity.  Costs one trace per distinct segment step
-    (no rounds execute)."""
-    if verify not in ("none", "static"):
-        raise PlanError(f"unknown verify mode {verify!r}; expected "
-                        f"'none' or 'static'")
+    ``verify=`` names the pre-flight analyses to run over the plan
+    before returning it — one name or an iterable of names from
+    ``VERIFY_ANALYSES`` (e.g. ``verify=("static", "hlo-bytes")``):
+
+      * ``"static"`` — the ``repro.analysis`` audit over the traced
+        cell: the plan is rejected unless its wire schedule is provably
+        the ledger's, its oracles provably read only their own feature
+        partition, and no compile-hazard lint fires at error severity.
+        Costs one trace per distinct segment step (no rounds execute).
+      * ``"hlo-bytes"`` — the collective-bytes audit of the lowered XLA
+        module (sharded placement only): the compiled program must
+        carry at least the collective traffic the trace-once ledger
+        metered (``ExecutionPlan.audit_hlo_bytes``)."""
+    analyses = _verify_analyses(verify)
     caps = _resolve.capabilities()
     try:
         placement = _resolve.resolve_placement(spec.placement)
@@ -409,10 +475,10 @@ def plan(spec: RunSpec,
 
     if spec.instance is None and spec.algorithm is None:
         # resolution-only: the axes are the whole request (dry-run tools)
-        if verify == "static":
-            raise PlanError("verify='static' needs a runnable spec; a "
-                            "resolution-only plan traces nothing to "
-                            "audit")
+        if analyses:
+            raise PlanError(f"verify={analyses!r} needs a runnable spec; "
+                            f"a resolution-only plan traces nothing to "
+                            f"audit")
         return ExecutionPlan(spec=spec, placement=placement,
                              backend=backend, engine=engine,
                              channel=channel, measure="none", algo=None,
@@ -469,7 +535,7 @@ def plan(spec: RunSpec,
     pl = ExecutionPlan(spec=spec, placement=placement, backend=backend,
                        engine=engine, channel=channel, measure=measure,
                        algo=algo, faults=faults, _bundle=bundle)
-    if verify == "static":
+    if "static" in analyses:
         from ..analysis import summarize
         cell = pl.audit()
         if cell.skipped:
@@ -481,6 +547,8 @@ def plan(spec: RunSpec,
                 f"static verification rejected "
                 f"{spec.algorithm}/{placement}/{channel}: "
                 f"{summarize(cell.findings)}")
+    if "hlo-bytes" in analyses:
+        pl.audit_hlo_bytes()
     return pl
 
 

@@ -19,6 +19,8 @@ from typing import Dict, Optional, Tuple
 
 import numpy as np
 
+from ._axes import AXIS_FIELDS
+
 
 SPEC_SCHEMA_VERSION = 4       # 2: channel axis (PR 5); 3: adaptive
                               # channels — sched:/gap: channel grammar;
@@ -31,12 +33,14 @@ _EPS_MODES = ("abs", "rel")
 _MEASURES = ("auto", "gap", "none")
 
 # Fields that name a point on an execution/selection axis.  The axis
-# VALUES are validated later (``plan`` owns the vocabularies — e.g. the
-# channel grammar lives in core.channel), but the TYPE is pinned here so
-# a wrong-typed payload dies with a clear ValueError at load time, never
-# a TypeError from deep inside the resolvers.
-_STR_FIELDS = ("instance", "algorithm", "eps_mode", "measure", "placement",
-               "backend", "engine", "channel", "faults", "tag")
+# VALUES are validated later (``plan`` owns the vocabularies — the axis
+# table in api/_axes.py and the grammars in core.channel/core.faults),
+# but the TYPE is pinned here so a wrong-typed payload dies with a clear
+# ValueError at load time, never a TypeError from deep inside the
+# resolvers.  The execution-axis fields come straight from the table, so
+# adding an axis there extends serialization type-pinning automatically.
+_STR_FIELDS = ("instance", "algorithm", "eps_mode",
+               "measure") + AXIS_FIELDS + ("tag",)
 
 
 def _type_error(name: str, value, expected: str) -> ValueError:
@@ -91,6 +95,7 @@ class RunSpec:
     measure: str = "auto"            # "auto" | "gap" | "none"
     placement: str = "auto"          # "auto" | "local" | "sharded"
     backend: str = "auto"            # "auto" | "einsum" | "kernel"
+                                     # | "fused"
     engine: str = "auto"             # "auto" | "scan" | "python"
     channel: str = "auto"            # "auto" | "identity" | "fp16" | "bf16"
                                      # | "int8" | "topk[:rho]"

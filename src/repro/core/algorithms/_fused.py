@@ -1,0 +1,71 @@
+"""Whole-round fused program rotation for linear first-order rounds.
+
+Every first-order algorithm in the family F^{lam,L} runs the same round:
+reduce the response, take the masked partial gradient, apply a
+block-local update.  When the dist's oracle backend offers the
+whole-round ``round_step`` capability (the ``fused`` backend,
+``kernels/fused_round.py``), that round can run as ONE Pallas kernel per
+machine — but only after a rotation: the composed step computes this
+round's upload *inside* the round, while the fused kernel emits next
+round's upload (already channel-transformed) in the same pass that read
+A_j.  So the fused program's carry holds ``zloc`` — machine j's pending
+upload — and each round is: reduce the carried uploads
+(``pretransformed=True``: byte-identical record/pricing/faults, no
+second transform), then one kernel.
+
+Round 0's pending upload is A·0 = 0, and every in-kernel channel maps 0
+to 0 (int8's scale is 0 -> zeros; the half casts are exact at 0), so the
+zeros init reproduces the composed round-0 message bit-for-bit.  The
+kernel applies channel stage ``rnd + 1`` to the upload it emits — the
+stage the composed path would apply when that upload is actually sent.
+
+The ledger cannot tell the difference by construction (metadata-only
+records, identical tags/shapes/pricing); the iterates are bit-identical
+to the composed ``kernel`` backend because the kernel's dots see the
+same single-tile padded operands and the epilogue/update runs the same
+f32 op order (``tests/test_ledger_invariance.py`` pins both).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+import jax.numpy as jnp
+
+from ..engine import RoundProgram, Segment
+
+
+def fused_linear_program(dist, rounds: int, update,
+                         xs: Optional[np.ndarray] = None,
+                         name: str = "") -> Optional[RoundProgram]:
+    """The fused RoundProgram for a response->pgrad->update round, or
+    ``None`` when the dist's backend (or this cell's channel/shape)
+    cannot rotate it — callers fall back to their composed program.
+
+    ``update(x, y, g, coeff) -> (x_new, y_new)`` is the algorithm's
+    block-local update (elementwise over the coordinate blocks; it is
+    traced into the kernel body).  ``xs`` optionally supplies the
+    per-round ``coeff`` input (e.g. FISTA momentum coefficients).
+    """
+    maker = getattr(dist, "fused_round_step", None)
+    if maker is None:
+        return None      # sharded placement (or a non-protocol dist)
+    step_fn = maker(update)
+    if step_fn is None:
+        return None      # backend or cell does not support the rotation
+    zero = dist.zeros_like_w()
+    zloc0 = jnp.zeros((dist.part.m, dist.n))
+    no_coeff = jnp.float32(0.0)
+
+    def step(dist, carry, x):
+        x_c, y_c, zloc = carry
+        z = dist.reduce_response(zloc)
+        coeff = x if xs is not None else no_coeff
+        rnd = dist.comm._round_index()
+        x_n, y_n, zloc_n = step_fn(z, x_c, y_c, coeff, rnd)
+        dist.end_round()
+        return (x_n, y_n, zloc_n), x_n
+
+    return RoundProgram(init=(zero, zero, zloc0),
+                        segments=[Segment(step, rounds, xs=xs, name=name)],
+                        final=lambda c: c[0])

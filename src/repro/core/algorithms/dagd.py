@@ -23,6 +23,7 @@ import numpy as np
 import jax.numpy as jnp
 
 from ..engine import RoundProgram, Segment, run_program
+from ._fused import fused_linear_program
 
 
 def fista_momentum_schedule(rounds: int) -> np.ndarray:
@@ -52,6 +53,15 @@ def dagd_program(dist, rounds: int, L: float, lam: float = 0.0
         beta = jnp.float32((math.sqrt(kappa) - 1.0)
                            / (math.sqrt(kappa) + 1.0))
 
+        def update(x, y, g, coeff):
+            x_new = y - inv_L * g
+            y_new = x_new + beta * (x_new - x)
+            return x_new, y_new
+
+        fused = fused_linear_program(dist, rounds, update, name="agd")
+        if fused is not None:
+            return fused
+
         def step(dist, carry, _):
             x, y = carry
             z = dist.response(y)
@@ -64,6 +74,17 @@ def dagd_program(dist, rounds: int, L: float, lam: float = 0.0
         return RoundProgram(init=(zero, zero),
                             segments=[Segment(step, rounds, name="agd")],
                             final=lambda c: c[0])
+
+    def update(x, y, g, coeff):
+        x_new = y - inv_L * g
+        y_new = x_new + coeff * (x_new - x)
+        return x_new, y_new
+
+    fused = fused_linear_program(dist, rounds, update,
+                                 xs=fista_momentum_schedule(rounds),
+                                 name="fista")
+    if fused is not None:
+        return fused
 
     def step(dist, carry, coeff):
         x, y = carry

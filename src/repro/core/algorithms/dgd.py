@@ -14,6 +14,7 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 from ..engine import RoundProgram, Segment, run_program
+from ._fused import fused_linear_program
 
 
 def dgd_program(dist, rounds: int, L: float, lam: float = 0.0
@@ -22,6 +23,14 @@ def dgd_program(dist, rounds: int, L: float, lam: float = 0.0
     # f32 update, but a hoistable const so repro.api.execute_batch can
     # group cells that differ only in L (see dagd.py).
     eta = jnp.float32(2.0 / (L + lam) if lam > 0 else 1.0 / L)
+
+    def update(x, y, g, coeff):
+        w_new = y - eta * g
+        return w_new, w_new
+
+    fused = fused_linear_program(dist, rounds, update, name="gd")
+    if fused is not None:
+        return fused
 
     def step(dist, w, _):
         z = dist.response(w)

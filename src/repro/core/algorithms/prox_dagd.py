@@ -17,6 +17,7 @@ from typing import Callable
 import jax.numpy as jnp
 
 from ..engine import RoundProgram, Segment, run_program
+from ._fused import fused_linear_program
 from .dagd import fista_momentum_schedule
 
 
@@ -49,6 +50,15 @@ def prox_dagd_program(dist, rounds: int, L: float, prox: Callable,
         beta = jnp.float32((math.sqrt(kappa) - 1.0)
                            / (math.sqrt(kappa) + 1.0))
 
+        def update(x, y, g, coeff):
+            x_new = prox(y - step_L * g, inv_L)  # block-local prox
+            y_new = x_new + beta * (x_new - x)
+            return x_new, y_new
+
+        fused = fused_linear_program(dist, rounds, update, name="apg")
+        if fused is not None:
+            return fused
+
         def step(dist, carry, _):
             x, y = carry
             z = dist.response(y)
@@ -61,6 +71,17 @@ def prox_dagd_program(dist, rounds: int, L: float, prox: Callable,
         return RoundProgram(init=(zero, zero),
                             segments=[Segment(step, rounds, name="apg")],
                             final=lambda c: c[0])
+
+    def update(x, y, g, coeff):
+        x_new = prox(y - step_L * g, inv_L)      # block-local prox
+        y_new = x_new + coeff * (x_new - x)
+        return x_new, y_new
+
+    fused = fused_linear_program(dist, rounds, update,
+                                 xs=fista_momentum_schedule(rounds),
+                                 name="fista")
+    if fused is not None:
+        return fused
 
     def step(dist, carry, coeff):
         x, y = carry

@@ -629,9 +629,17 @@ class LocalCommunicator(_ChannelWireMixin):
             return x_stacked
         return jax.vmap(self._apply_channel)(x_stacked)
 
-    def reduce_all(self, x_stacked, tag: str = "") -> jnp.ndarray:
+    def reduce_all(self, x_stacked, tag: str = "",
+                   pretransformed: bool = False) -> jnp.ndarray:
         """ReduceAll: each machine holds x_j (stacked (m, ...)); returns the
-        sum, conceptually available on every machine."""
+        sum, conceptually available on every machine.
+
+        ``pretransformed`` declares that the caller already applied this
+        round's channel transform to every per-machine payload (the fused
+        round-step kernel emits the upload vector through the in-kernel
+        channel stage) — the record, its wire pricing, and fault
+        injection are byte-identical to the untransformed path; only the
+        redundant second transform is skipped."""
         x_stacked = jnp.asarray(x_stacked)
         # per-machine payload metadata from the aval, NOT from slicing
         # x_stacked[0]: a traced slice would plant a dead machine-axis
@@ -648,7 +656,8 @@ class LocalCommunicator(_ChannelWireMixin):
                            wire=(per_size, 1))
         self._inject_faults(x_stacked)
         with self._wire_scope():
-            return jnp.sum(self._transmit(x_stacked), axis=0)
+            xfer = x_stacked if pretransformed else self._transmit(x_stacked)
+            return jnp.sum(xfer, axis=0)
 
     def reduce_scalar(self, x_stacked, tag: str = "") -> jnp.ndarray:
         # scalars carry control quantities: never channel-transformed

@@ -15,29 +15,45 @@ Backends:
   * ``LocalDistERM`` — m simulated machines; per-machine blocks stacked on a
     leading axis (m, ...). Reference semantics, used by tests/benchmarks.
   * ``ShardedDistERM`` — identical math with machine j = slice j of a mesh
-    axis; constructed *inside* a ``shard_map`` body. ``run_sharded`` places
-    column-sharded data on a real mesh and drives any algorithm through it.
+    axis; constructed *inside* a ``shard_map`` body. ``_run_sharded``
+    places column-sharded data on a real mesh and drives any algorithm
+    through it (front-ended by ``repro.api``'s sharded placement).
 
 The two backends are required to produce bit-comparable iterates (up to
 reduction order), which ``tests/test_runtime_parity.py`` asserts.
 
 Orthogonal to the execution backend is the **oracle backend**: how the
 per-machine GEMVs inside ``response``/``pgrad``/``phvp`` are computed.
+Each backend is an ``OracleBackend`` strategy object (resolved once per
+run by ``repro.api._resolve``, never re-dispatched per call):
 
   * ``"einsum"`` — plain ``jnp`` contractions (XLA decides the schedule);
     the CPU default and the reference semantics.
   * ``"kernel"`` — the MXU-tiled Pallas kernels in ``repro.kernels``
     (``feature_matvec``/``feature_rmatvec``/``feature_hvp``), ``vmap``-ed
     over the stacked machine axis in local mode and applied directly to
-    the local shard inside ``shard_map``; the TPU default.
+    the local shard inside ``shard_map``.
+  * ``"fused"`` — the kernel path with epilogue-fused oracles
+    (``fused_pgrad``/``fused_phvp``: the ``/n + lam v`` + mask epilogue
+    folded into the contraction's last block) plus the whole-round
+    ``round_step()`` capability: program builders that recognise their
+    round as response -> pgrad -> block-local update hand the update to
+    ``LocalDistERM.fused_round_step`` and, when the cell qualifies
+    (local placement, in-kernel channel, single-tile A_j block), run the
+    entire round as ONE Pallas kernel per machine with the wire channel
+    applied in the same pass that emits the upload
+    (``kernels/fused_round.py``); otherwise they fall back to the
+    composed oracles.  The TPU default under ``auto``.
 
 The paper meters communication *rounds*, never local FLOPs, so the oracle
 backend MUST be invisible to the ``CommLedger`` — the conformance suite
-(``tests/test_ledger_invariance.py``) pins that invariant.
+(``tests/test_ledger_invariance.py``) pins that invariant (for ``fused``
+it pins full bit-identity of streams, verdicts and iterates against
+``kernel`` wherever the whole-round kernel engages).
 
 A third orthogonal axis is the **round engine** (``core.engine``): whether
 an algorithm's rounds run as a per-call Python loop (``"python"``) or as
-one ``lax.scan``-compiled XLA program (``"scan"``).  ``run_sharded``
+one ``lax.scan``-compiled XLA program (``"scan"``).  ``_run_sharded``
 accepts a step-form ``RoundProgram`` builder to compile the whole
 multi-round run inside the ``shard_map`` body; the ledger is expanded
 from the trace-once schedule to the same per-call stream the python loop
@@ -46,13 +62,13 @@ produces.
 All three axes are front-ended by ``repro.api``: a ``RunSpec`` names
 placement/backend/engine declaratively, ``plan`` resolves the ``auto``
 choices through the single capability resolver, and the resulting
-``ExecutionPlan`` drives the machinery here.  The per-call knobs on this
-module remain for direct use; ``run_sharded``'s kwargs surface is the
-deprecated legacy entry point.
+``ExecutionPlan`` drives the machinery here.  The per-call knobs on the
+runtime classes remain for direct use; the PR-4 ``run_sharded`` kwargs
+shim is retired (it raises, naming the ``RunSpec`` replacement).
 """
 from __future__ import annotations
 
-import warnings
+import functools
 from typing import Callable, Optional
 
 import numpy as np
@@ -74,11 +90,12 @@ from ..kernels import ops as kops
 # Canonical list lives in repro.api._resolve (the single resolver);
 # mirrored here because this module cannot import repro.api at load time
 # (repro.api.plan imports this module). tests/test_api.py pins equality.
-ORACLE_BACKENDS = ("einsum", "kernel")
+ORACLE_BACKENDS = ("einsum", "kernel", "fused")
 
 
 def resolve_oracle_backend(backend: Optional[str] = None) -> str:
-    """Resolve an oracle-backend choice to ``"einsum"`` or ``"kernel"``.
+    """Resolve an oracle-backend choice to a member of
+    ``ORACLE_BACKENDS``.
 
     Delegates to the single capability resolver in ``repro.api``
     (env var consulted at call time, then the platform: kernels compile
@@ -113,12 +130,164 @@ def _cached_loss_term(cache: dict, loss: "GLMLoss", which: str, z, y):
     return cache[which]
 
 
+class OracleBackend:
+    """Strategy protocol for the oracle compute path.
+
+    One instance per backend name, resolved ONCE per run (``repro.api``
+    resolves the name at plan time; the runtimes bind the implementation
+    object at construction) — no per-call string dispatch.  Local-
+    placement hooks receive the ``LocalDistERM`` and stacked ``(m, ...)``
+    blocks; shard hooks receive the ``ShardedDistERM`` and machine-local
+    arrays inside the ``shard_map`` body.  ``pgrad_local``/``phvp_local``
+    return the FULL partial gradient / HVP (data term, ``/n``,
+    ``lam``-term, block mask) so a backend may fuse the epilogue into
+    its kernels.
+
+    ``round_step`` is the whole-round capability: given an algorithm's
+    block-local ``update(x, y, g, coeff) -> (x_new, y_new)`` it returns
+    a fused one-kernel round step for the cell, or ``None`` when the
+    backend (or the cell's channel/shape) cannot rotate the round —
+    callers must then compose the round from the oracles above.
+    """
+
+    name: str = ""
+
+    # ---- local placement: blocks stacked on a leading (m, ...) axis ----
+    def response_local(self, dist, w_stk):
+        raise NotImplementedError
+
+    def pgrad_local(self, dist, w_stk, lgrad):
+        raise NotImplementedError
+
+    def phvp_local(self, dist, v_stk, h, av):
+        raise NotImplementedError
+
+    # ---- sharded placement: machine-local arrays inside shard_map ----
+    def response_shard(self, dist, w_loc):
+        raise NotImplementedError
+
+    def pgrad_shard(self, dist, w_loc, lgrad):
+        raise NotImplementedError
+
+    def phvp_shard(self, dist, v_loc, h, av):
+        raise NotImplementedError
+
+    # ---- whole-round capability ----
+    def round_step(self, dist, update):
+        return None
+
+
+class EinsumBackend(OracleBackend):
+    """Plain jnp contractions — XLA schedules them; reference semantics."""
+
+    name = "einsum"
+
+    def response_local(self, dist, w_stk):
+        return jnp.einsum("mnd,md->mn", dist.A_stk, w_stk)
+
+    def pgrad_local(self, dist, w_stk, lgrad):
+        g = jnp.einsum("mnd,n->md", dist.A_stk, lgrad) / dist.n
+        return (g + dist.lam * w_stk) * dist.mask
+
+    def phvp_local(self, dist, v_stk, h, av):
+        out = jnp.einsum("mnd,n->md", dist.A_stk, h * av) / dist.n
+        return (out + dist.lam * v_stk) * dist.mask
+
+    def response_shard(self, dist, w_loc):
+        return dist.A_loc @ w_loc
+
+    def pgrad_shard(self, dist, w_loc, lgrad):
+        g = dist.A_loc.T @ lgrad
+        return g / dist.n + dist.lam * w_loc
+
+    def phvp_shard(self, dist, v_loc, h, av):
+        out = dist.A_loc.T @ (h * av)
+        return out / dist.n + dist.lam * v_loc
+
+
+class KernelBackend(OracleBackend):
+    """The MXU-tiled Pallas GEMV kernels, composed with jnp epilogues."""
+
+    name = "kernel"
+
+    def response_local(self, dist, w_stk):
+        return jax.vmap(kops.feature_matvec)(dist.A_stk, w_stk)
+
+    def pgrad_local(self, dist, w_stk, lgrad):
+        g = jax.vmap(kops.feature_rmatvec,
+                     in_axes=(0, None))(dist.A_stk, lgrad) / dist.n
+        return (g + dist.lam * w_stk) * dist.mask
+
+    def phvp_local(self, dist, v_stk, h, av):
+        out = jax.vmap(kops.feature_hvp,
+                       in_axes=(0, None, None))(dist.A_stk, h, av) \
+            / dist.n
+        return (out + dist.lam * v_stk) * dist.mask
+
+    def response_shard(self, dist, w_loc):
+        return kops.feature_matvec(dist.A_loc, w_loc)
+
+    def pgrad_shard(self, dist, w_loc, lgrad):
+        g = kops.feature_rmatvec(dist.A_loc, lgrad)
+        return g / dist.n + dist.lam * w_loc
+
+    def phvp_shard(self, dist, v_loc, h, av):
+        out = kops.feature_hvp(dist.A_loc, h, av)
+        return out / dist.n + dist.lam * v_loc
+
+
+class FusedBackend(KernelBackend):
+    """Kernel path + epilogue fusion + the whole-round capability.
+
+    Composed oracles route through ``fused_pgrad``/``fused_phvp`` (the
+    gradient epilogue folded into the contraction's last block — one
+    A-read per oracle; this is what DISCO-F's CG hits every inner
+    iteration, where the round's scalar reduces make a whole-round
+    rotation impossible).  Sharded placement inherits the kernel
+    oracles unchanged: inside ``shard_map`` the fused backend is the
+    kernel backend, by construction bit-identical.  ``round_step``
+    builds the one-kernel-per-machine round of
+    ``kernels.fused_round.make_round_step`` when the cell qualifies.
+    """
+
+    name = "fused"
+
+    def pgrad_local(self, dist, w_stk, lgrad):
+        return jax.vmap(
+            functools.partial(kops.fused_pgrad, n=dist.n, lam=dist.lam),
+            in_axes=(0, None, 0, 0))(dist.A_stk, lgrad, w_stk, dist.mask)
+
+    def phvp_local(self, dist, v_stk, h, av):
+        return jax.vmap(
+            functools.partial(kops.fused_phvp, n=dist.n, lam=dist.lam),
+            in_axes=(0, None, None, 0, 0))(dist.A_stk, h, av, v_stk,
+                                           dist.mask)
+
+    def round_step(self, dist, update):
+        from ..kernels import fused_round
+        chan = dist.comm.channel
+        if fused_round.channel_stages(chan) is None:
+            return None     # topk (or unresolved) stages stay composed
+        if not fused_round.round_step_fits(dist.n, dist.part.d_max):
+            return None     # A_j block exceeds one VMEM tile
+        return fused_round.make_round_step(
+            dist.A_stk, dist.mask, dist.y, dist.loss,
+            n=dist.n, lam=dist.lam, update=update, channel=chan)
+
+
+BACKEND_IMPLS = {
+    "einsum": EinsumBackend(),
+    "kernel": KernelBackend(),
+    "fused": FusedBackend(),
+}
+
+
 class LocalDistERM:
     """m machines simulated on host; blocks stacked: A (m,n,dmax), w (m,dmax).
 
     ``backend`` selects the oracle compute path ("einsum" | "kernel" |
-    "auto"/None for the platform default); the kernel path ``vmap``s the
-    Pallas kernels over the stacked machine axis.
+    "fused" | "auto"/None for the platform default); the resolved name
+    binds an ``OracleBackend`` strategy object once, at construction.
     """
 
     def __init__(self, prob: ERMProblem, part: FeaturePartition,
@@ -130,6 +299,7 @@ class LocalDistERM:
         self.comm = LocalCommunicator(part.m, ledger, channel=channel,
                                       faults=faults)
         self.backend = resolve_oracle_backend(backend)
+        self.backend_impl: OracleBackend = BACKEND_IMPLS[self.backend]
         self.A_stk = part.pad_blocks(part.split_columns(prob.A))  # (m,n,dmax)
         self.mask = part.mask()                                   # (m,dmax)
         self.n = prob.n
@@ -144,32 +314,31 @@ class LocalDistERM:
 
     def response(self, w_stk, tag="z=Aw"):
         """z = sum_j A_j w_j : one ReduceAll of an R^n vector."""
-        if self.backend == "kernel":
-            local = jax.vmap(kops.feature_matvec)(self.A_stk, w_stk)
-        else:
-            local = jnp.einsum("mnd,md->mn", self.A_stk, w_stk)
+        local = self.backend_impl.response_local(self, w_stk)
         return self.comm.reduce_all(local, tag=tag)
+
+    def reduce_response(self, zloc_stk, tag="z=Aw"):
+        """Reduce per-machine response summands a fused round-step
+        already computed AND channel-transformed in-kernel: the same
+        metered ReduceAll as ``response`` (record, pricing, faults all
+        byte-identical), minus the redundant second wire transform."""
+        return self.comm.reduce_all(zloc_stk, tag=tag, pretransformed=True)
 
     def pgrad(self, w_stk, z):
         """f'_j(w) for every j, stacked — local compute only."""
         lgrad = self._loss_term("grad", z)                    # (n,)
-        if self.backend == "kernel":
-            g = jax.vmap(kops.feature_rmatvec,
-                         in_axes=(0, None))(self.A_stk, lgrad) / self.n
-        else:
-            g = jnp.einsum("mnd,n->md", self.A_stk, lgrad) / self.n
-        return (g + self.lam * w_stk) * self.mask
+        return self.backend_impl.pgrad_local(self, w_stk, lgrad)
 
     def phvp(self, v_stk, z, av):
         """(f''(w) v)^[j] stacked, given reduced z=Aw and av=Av — local."""
         h = self._loss_term("hess", z)
-        if self.backend == "kernel":
-            out = jax.vmap(kops.feature_hvp,
-                           in_axes=(0, None, None))(self.A_stk, h, av) \
-                / self.n
-        else:
-            out = jnp.einsum("mnd,n->md", self.A_stk, h * av) / self.n
-        return (out + self.lam * v_stk) * self.mask
+        return self.backend_impl.phvp_local(self, v_stk, h, av)
+
+    def fused_round_step(self, update):
+        """The backend's whole-round fused step for this cell (see
+        ``OracleBackend.round_step``), or ``None`` — program builders
+        call this and fall back to the composed oracles on ``None``."""
+        return self.backend_impl.round_step(self, update)
 
     def _loss_term(self, which: str, z):
         return _cached_loss_term(self._round_cache, self.loss, which, z,
@@ -237,33 +406,23 @@ class ShardedDistERM:
         self.n = n
         self.comm = ShardMapCommunicator(axis, ledger, channel=channel)
         self.backend = resolve_oracle_backend(backend)
+        self.backend_impl: OracleBackend = BACKEND_IMPLS[self.backend]
         self._round_cache: dict = {}
 
     def zeros_like_w(self):
         return jnp.zeros((self.A_loc.shape[1],))
 
     def response(self, w_loc, tag="z=Aw"):
-        if self.backend == "kernel":
-            local = kops.feature_matvec(self.A_loc, w_loc)
-        else:
-            local = self.A_loc @ w_loc
+        local = self.backend_impl.response_shard(self, w_loc)
         return self.comm.reduce_all(local, tag=tag)
 
     def pgrad(self, w_loc, z):
         lgrad = self._loss_term("grad", z)
-        if self.backend == "kernel":
-            g = kops.feature_rmatvec(self.A_loc, lgrad)
-        else:
-            g = self.A_loc.T @ lgrad
-        return g / self.n + self.lam * w_loc
+        return self.backend_impl.pgrad_shard(self, w_loc, lgrad)
 
     def phvp(self, v_loc, z, av):
         h = self._loss_term("hess", z)
-        if self.backend == "kernel":
-            out = kops.feature_hvp(self.A_loc, h, av)
-        else:
-            out = self.A_loc.T @ (h * av)
-        return out / self.n + self.lam * v_loc
+        return self.backend_impl.phvp_shard(self, v_loc, h, av)
 
     def _loss_term(self, which: str, z):
         return _cached_loss_term(self._round_cache, self.loss, which, z,
@@ -300,32 +459,21 @@ class ShardedDistERM:
 # shard_map driver
 # --------------------------------------------------------------------------
 
-def run_sharded(prob: ERMProblem, algorithm_body: Optional[Callable],
-                rounds: int,
-                mesh: Optional[Mesh] = None, axis: str = "model",
-                ledger: Optional[CommLedger] = None,
-                backend: Optional[str] = None,
-                engine: str = "python",
-                program_builder: Optional[Callable] = None,
-                channel=None):
-    """Legacy entry point: per-call kwargs instead of a ``RunSpec``.
+def run_sharded(*args, **kwargs):
+    """Removed legacy entry point (deprecated in PR 4, retired now).
 
-    For registry algorithms, construct a
-    ``repro.api.RunSpec(placement="sharded", ...)`` and execute it via
-    ``repro.api.plan`` — the facade resolves ``backend``/``engine``
-    through the single capability resolver and validates the combination
-    before compiling.  This shim keeps the historical signature working
-    (arbitrary ``algorithm_body`` callables included) and produces
-    bit-identical ledgers and iterates to the RunSpec path
-    (``tests/test_shims.py``).
+    Construct a ``repro.api.RunSpec(placement='sharded', ...)`` and
+    execute it via ``repro.api.plan()``/``run()`` — the facade resolves
+    ``backend``/``engine``/``channel`` through the single capability
+    resolver and validates the combination before compiling.  Library
+    internals (and non-registry ``algorithm_body`` callables) use the
+    private ``_run_sharded`` driver directly.
     """
-    warnings.warn(
-        "run_sharded(...) with per-call kwargs is deprecated; construct a "
+    raise TypeError(
+        "run_sharded(...) with per-call kwargs was removed: construct a "
         "repro.api.RunSpec(placement='sharded') and execute it via "
-        "repro.api.plan()/run()", DeprecationWarning, stacklevel=2)
-    return _run_sharded(prob, algorithm_body, rounds, mesh=mesh, axis=axis,
-                        ledger=ledger, backend=backend, engine=engine,
-                        program_builder=program_builder, channel=channel)
+        "repro.api.plan()/run(); library internals use "
+        "repro.core.runtime._run_sharded")
 
 
 def _run_sharded(prob: ERMProblem, algorithm_body: Optional[Callable],
@@ -339,7 +487,8 @@ def _run_sharded(prob: ERMProblem, algorithm_body: Optional[Callable],
                  lower_only: bool = False):
     """Run an algorithm under shard_map with the data matrix column-sharded
     over ``axis``.  (Machinery behind ``repro.api``'s sharded placement;
-    the public ``run_sharded`` wrapper is the deprecated kwargs surface.)
+    the retired public ``run_sharded`` wrapper raises, naming this
+    driver and the ``RunSpec`` path.)
 
     Two driving modes, selected by ``engine``:
 
@@ -438,7 +587,8 @@ def _run_sharded(prob: ERMProblem, algorithm_body: Optional[Callable],
     fn = shard_map(body, mesh=mesh,
                    in_specs=(P(None, axis), P(None)),
                    out_specs=P(axis),
-                   check_rep=(backend != "kernel" and engine != "scan"))
+                   check_rep=(backend not in ("kernel", "fused")
+                              and engine != "scan"))
     if trace_only:
         # repro.analysis hook: trace the sharded program without running
         # it and hand back the jaxpr, the raw trace-time ledger (records

@@ -38,7 +38,6 @@ import argparse
 import dataclasses
 import itertools
 import sys
-import warnings
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 from repro import api
@@ -501,15 +500,13 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                              "execute_batch (same-shaped cells vmap'd "
                              "through one compiled program)")
     parser.add_argument("--backend", default=None,
-                        choices=["auto", "einsum", "kernel"],
-                        help="DEPRECATED flag (still works): oracle "
-                             "compute path; the canonical switch is "
-                             "RunSpec(backend=...) via repro.api")
+                        help="REMOVED: set repro.api.RunSpec(backend=...) "
+                             "— e.g. run_sweep(spec, backend='kernel') — "
+                             "instead; this flag now only errors")
     parser.add_argument("--engine", default=None,
-                        choices=["auto", "scan", "python"],
-                        help="DEPRECATED flag (still works): round "
-                             "engine; the canonical switch is "
-                             "RunSpec(engine=...) via repro.api")
+                        help="REMOVED: set repro.api.RunSpec(engine=...) "
+                             "— e.g. run_sweep(spec, engine='python') — "
+                             "instead; this flag now only errors")
     parser.add_argument("--channel", default=None,
                         help="wire model for per-machine uploads "
                              "(identity/fp16/bf16/int8/topk[:rho], a "
@@ -533,14 +530,14 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     parser.add_argument("-q", "--quiet", action="store_true")
     args = parser.parse_args(argv)
 
-    for flag, value in (("--backend", args.backend),
-                        ("--engine", args.engine)):
+    for flag, field, value in (("--backend", "backend", args.backend),
+                               ("--engine", "engine", args.engine)):
         if value is not None:
-            warnings.warn(
-                f"the {flag} flag is a legacy entry point; it still works "
-                f"but the canonical switch is the RunSpec field "
-                f"(repro.api), which every sweep cell now embeds",
-                DeprecationWarning, stacklevel=1)
+            parser.error(
+                f"the {flag} flag was removed: set the axis on the "
+                f"repro.api.RunSpec every sweep cell embeds — "
+                f"RunSpec({field}={value!r}) — or pass "
+                f"run_sweep(spec, {field}={value!r}) programmatically")
 
     from .report import default_results_dir, write_report
 

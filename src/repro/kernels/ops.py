@@ -16,6 +16,7 @@ import jax
 from . import ref
 from .feature_matvec import feature_matvec as _fmv, \
     feature_rmatvec as _frmv, feature_hvp as _fhvp
+from .fused_round import fused_pgrad as _fpg, fused_phvp as _fph
 from .tridiag_matvec import tridiag_matvec as _tdmv
 from .moe_combine import moe_combine as _moec
 from .flash_decode import flash_decode as _fdec
@@ -43,6 +44,22 @@ def feature_hvp(A_j, h, av, use_kernel: bool = True):
     if use_kernel:
         return _fhvp(A_j, h, av)
     return ref.feature_hvp_ref(A_j, h, av)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "lam", "use_kernel"))
+def fused_pgrad(A_j, r, w_j, mask_j, n, lam, use_kernel: bool = True):
+    """g_j = (A_j^T r / n + lam w_j) * mask_j (epilogue-fused pgrad)."""
+    if use_kernel:
+        return _fpg(A_j, r, w_j, mask_j, n=n, lam=lam)
+    return ref.fused_pgrad_ref(A_j, r, w_j, mask_j, n=n, lam=lam)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "lam", "use_kernel"))
+def fused_phvp(A_j, h, av, v_j, mask_j, n, lam, use_kernel: bool = True):
+    """u_j = (A_j^T (h ⊙ av) / n + lam v_j) * mask_j (fused HVP)."""
+    if use_kernel:
+        return _fph(A_j, h, av, v_j, mask_j, n=n, lam=lam)
+    return ref.fused_phvp_ref(A_j, h, av, v_j, mask_j, n=n, lam=lam)
 
 
 @functools.partial(jax.jit, static_argnames=("use_kernel",))

@@ -34,6 +34,28 @@ def feature_hvp_ref(A_j, h, av):
     return A_j.T @ (h[:, None] * av)
 
 
+def fused_pgrad_ref(A_j, r, w_j, mask_j, *, n, lam):
+    """g_j = (A_j^T r / n + lam w_j) * mask_j — the gradient epilogue
+    applied to the reduction, matching ``fused_round.fused_pgrad``.
+
+    A_j: (n_rows, d_j); r: (n_rows,) or (n_rows, B); w_j like the
+    output; mask_j: (d_j,).
+    """
+    if r.ndim == 1:
+        g = feature_rmatvec_ref(A_j, r)
+        return (g / n + lam * w_j) * mask_j
+    g = A_j.T @ r
+    return (g / n + lam * w_j) * mask_j[:, None]
+
+
+def fused_phvp_ref(A_j, h, av, v_j, mask_j, *, n, lam):
+    """u_j = (A_j^T (h ⊙ av) / n + lam v_j) * mask_j — the HVP epilogue
+    applied to the reduction, matching ``fused_round.fused_phvp``."""
+    out = feature_hvp_ref(A_j, h, av)
+    mk = mask_j if av.ndim == 1 else mask_j[:, None]
+    return (out / n + lam * v_j) * mk
+
+
 def tridiag_matvec_ref(diag, off, v):
     """Banded tridiagonal matvec: out = T v with T = tri(off, diag, off).
 

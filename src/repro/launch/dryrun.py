@@ -12,7 +12,6 @@ import dataclasses
 import json
 import time
 import traceback
-import warnings
 from typing import Any, Dict, Optional
 
 import jax
@@ -40,17 +39,16 @@ def _mesh_devices(multi_pod: bool) -> int:
     return 512 if multi_pod else 256
 
 
-def _legacy_axes(oracle_backend: Optional[str],
-                 round_engine: Optional[str]) -> RunSpec:
-    """Convert the legacy per-call axis kwargs/flags into a
-    resolution-only RunSpec (one DeprecationWarning per conversion)."""
-    warnings.warn(
-        "the --oracle-backend/--round-engine flags (and the matching "
-        "dryrun_one kwargs) are legacy entry points; they still work but "
-        "the canonical switch is a repro.api.RunSpec (pass axes=...)",
-        DeprecationWarning, stacklevel=2)
-    return RunSpec(backend=oracle_backend or "auto",
-                   engine=round_engine or "auto")
+def _legacy_axes_error(oracle_backend: Optional[str],
+                       round_engine: Optional[str]) -> TypeError:
+    """The removal error for the PR-4 legacy axis kwargs/flags, spelling
+    out the exact RunSpec replacement for what was passed."""
+    return TypeError(
+        f"the oracle_backend/round_engine kwargs (and the matching "
+        f"--oracle-backend/--round-engine flags) were removed: pass a "
+        f"repro.api.RunSpec via axes= instead — "
+        f"axes=RunSpec(backend={oracle_backend or 'auto'!r}, "
+        f"engine={round_engine or 'auto'!r})")
 
 
 def _abstract_state(cfg, shape_name: str, rules, mesh):
@@ -137,19 +135,12 @@ def dryrun_one(arch_id: str, shape_name: str, *, multi_pod: bool = False,
     wins.  ``axes=None`` — or an engine-only spec (``backend="auto"``) —
     leaves the arch config untouched and stamps the plan-time engine.
 
-    ``oracle_backend``/``round_engine`` are the legacy per-call kwargs:
-    they still work, emit one ``DeprecationWarning``, and behave exactly
-    as the equivalent ``axes`` spec (``oracle_backend=None`` keeps the
-    historical "leave the config untouched" semantics).
+    ``oracle_backend``/``round_engine`` are the removed PR-4 legacy
+    kwargs: passing either raises a ``TypeError`` naming the equivalent
+    ``axes=RunSpec(...)`` replacement.
     """
     if oracle_backend is not None or round_engine is not None:
-        if axes is not None:
-            raise ValueError("pass either axes= or the legacy "
-                             "oracle_backend/round_engine kwargs, not both")
-        axes = _legacy_axes(oracle_backend, round_engine)
-        # legacy semantics: --oracle-backend auto DID apply the platform
-        # resolution, so "was the kwarg passed" decides, not the value
-        _apply_backend = oracle_backend is not None
+        raise _legacy_axes_error(oracle_backend, round_engine)
     # canonical axes surface: an engine-only spec (backend="auto") leaves
     # the arch config untouched; name the backend to route it into
     # cfg.use_pallas
@@ -177,8 +168,8 @@ def dryrun_one(arch_id: str, shape_name: str, *, multi_pod: bool = False,
         cfg = dataclasses.replace(cfg, **plain)
     if apply_backend and \
             not (cfg_overrides and "use_pallas" in cfg_overrides):
-        cfg = dataclasses.replace(cfg,
-                                  use_pallas=resolved.backend == "kernel")
+        cfg = dataclasses.replace(
+            cfg, use_pallas=resolved.backend in ("kernel", "fused"))
     mesh = make_production_mesh(multi_pod=multi_pod)
     if getattr(cfg, "moe", None) is not None and \
             not (cfg_overrides and "moe.groups" in cfg_overrides):
@@ -335,13 +326,9 @@ def run_all(out_dir: str, multi_pod: bool, archs=None, shapes=None,
             round_engine: Optional[str] = None,
             axes: Optional[RunSpec] = None):
     os.makedirs(out_dir, exist_ok=True)
-    apply_backend = axes is not None and axes.backend != "auto"
     if oracle_backend is not None or round_engine is not None:
-        if axes is not None:
-            raise ValueError("pass either axes= or the legacy "
-                             "oracle_backend/round_engine kwargs, not both")
-        axes = _legacy_axes(oracle_backend, round_engine)  # warns ONCE here
-        apply_backend = oracle_backend is not None
+        raise _legacy_axes_error(oracle_backend, round_engine)
+    apply_backend = axes is not None and axes.backend != "auto"
     resolved = api_plan(axes if axes is not None else RunSpec())
     archs = archs or canonical_ids()
     shapes = shapes or list(S.SHAPES)
@@ -406,18 +393,17 @@ def main():
                     help="JSON dict of config overrides (moe.* nested)")
     ap.add_argument("--microbatch", type=int, default=1)
     ap.add_argument("--oracle-backend", default=None,
-                    choices=["auto", "einsum", "kernel"],
-                    help="DEPRECATED flag (still works): compute-path "
-                         "switch; sets cfg.use_pallas (kernel=True), "
-                         "resolved through repro.api.plan. Default: "
-                         "leave the arch config untouched.")
+                    help="REMOVED: build a repro.api.RunSpec and use "
+                         "dryrun_one(axes=RunSpec(backend=...)); this "
+                         "flag now only errors")
     ap.add_argument("--round-engine", default=None,
-                    choices=["auto", "scan", "python"],
-                    help="DEPRECATED flag (still works): DistERM round-"
-                         "engine switch, resolved through repro.api.plan "
-                         "and stamped into each record; process state is "
-                         "left untouched.")
+                    help="REMOVED: build a repro.api.RunSpec and use "
+                         "dryrun_one(axes=RunSpec(engine=...)); this "
+                         "flag now only errors")
     args = ap.parse_args()
+    if args.oracle_backend is not None or args.round_engine is not None:
+        ap.error(str(_legacy_axes_error(args.oracle_backend,
+                                        args.round_engine)))
     overrides = json.loads(args.rules) if args.rules else None
     cfg_over = json.loads(args.cfg) if args.cfg else None
     archs = [args.arch] if args.arch else None
@@ -426,9 +412,7 @@ def main():
     for mp in meshes:
         run_all(args.out, mp, archs, shapes, force=args.force,
                 variant=args.variant, rules_overrides=overrides,
-                cfg_overrides=cfg_over, microbatch=args.microbatch,
-                oracle_backend=args.oracle_backend,
-                round_engine=args.round_engine)
+                cfg_overrides=cfg_over, microbatch=args.microbatch)
 
 
 if __name__ == "__main__":

@@ -43,13 +43,13 @@ import json
 import jax.numpy as jnp
 from repro.core import make_random_erm
 from repro.core.partition import even_partition
-from repro.core.runtime import LocalDistERM, run_sharded
+from repro.core.runtime import LocalDistERM, _run_sharded
 from repro.core.algorithms import dsvrg
 
 prob = make_random_erm(n=16, d=16, loss="squared", lam=0.2, seed=9)
 L_max = float(jnp.max(jnp.sum(prob.A ** 2, axis=1))) + prob.lam
 kw = dict(L_max=L_max, lam=prob.lam, seed=3, epoch_len=8)
-w_sh, led = run_sharded(prob, lambda d_, r: dsvrg(d_, r, **kw), rounds=200)
+w_sh, led = _run_sharded(prob, lambda d_, r: dsvrg(d_, r, **kw), rounds=200)
 dist = LocalDistERM(prob, even_partition(16, 4))
 w_lo = dist.gather_w(dsvrg(dist, 200, **kw))
 print(json.dumps({"max_diff": float(jnp.max(jnp.abs(w_sh - w_lo)))}))

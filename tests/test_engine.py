@@ -233,11 +233,11 @@ def test_loss_term_cache_within_round():
 
 
 def test_run_sharded_scan_requires_program():
-    from repro.core.runtime import run_sharded
+    from repro.core.runtime import _run_sharded
     bundle = _setup()
     with pytest.raises(ValueError):
-        run_sharded(bundle.prob, lambda d_, r: None, rounds=2,
-                    engine="scan")
+        _run_sharded(bundle.prob, lambda d_, r: None, rounds=2,
+                     engine="scan")
 
 
 # --------------------------------------------------------------------------

@@ -121,6 +121,49 @@ def test_wide_batch_tiling_matches_column_slices():
                                    atol=2e-4, rtol=2e-4)
 
 
+@given(n=st.integers(*N_RANGE), d=st.integers(*D_RANGE),
+       b=st.sampled_from(BATCHES),
+       dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+       seed=st.integers(0, 99))
+@settings(max_examples=6, deadline=None)
+def test_fused_pgrad_property(n, d, b, dtype, seed):
+    """fused_pgrad == (A^T r / n + lam w) * mask: one accumulation pass
+    with the gradient epilogue applied on the last grid step, across
+    ragged shapes, bf16, and B > BLOCK_B."""
+    from repro.kernels.fused_round import fused_pgrad
+    A, w, r, _ = _mats(n, d, b, dtype, seed)
+    lam = 0.03
+    mask = (jnp.arange(d) % 5 != 3).astype(jnp.float32)
+    got = fused_pgrad(A, r, w, mask, n=n, lam=lam)
+    rf, wf = [np.asarray(x, np.float32) for x in (r, w)]
+    want = (np.asarray(A, np.float32).T @ rf / n + lam * wf) \
+        * (np.asarray(mask)[:, None] if b > 1 else np.asarray(mask))
+    assert got.shape == want.shape
+    _check(got, want, dtype, contraction=n)
+
+
+@given(n=st.integers(*N_RANGE), d=st.integers(*D_RANGE),
+       b=st.sampled_from(BATCHES),
+       dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+       seed=st.integers(0, 99))
+@settings(max_examples=6, deadline=None)
+def test_fused_phvp_property(n, d, b, dtype, seed):
+    """fused_phvp == (A^T (h . av) / n + lam v) * mask: the Hadamard,
+    the contraction, and the HVP epilogue in a single pass."""
+    from repro.kernels.fused_round import fused_phvp
+    A, v, av, h = _mats(n, d, b, dtype, seed)
+    lam = 0.03
+    mask = (jnp.arange(d) % 7 != 2).astype(jnp.float32)
+    got = fused_phvp(A, h, av, v, mask, n=n, lam=lam)
+    hf = np.asarray(h, np.float32)
+    avf, vf = [np.asarray(x, np.float32) for x in (av, v)]
+    had = hf[:, None] * avf if b > 1 else hf * avf
+    want = (np.asarray(A, np.float32).T @ had / n + lam * vf) \
+        * (np.asarray(mask)[:, None] if b > 1 else np.asarray(mask))
+    assert got.shape == want.shape
+    _check(got, want, dtype, contraction=n)
+
+
 @pytest.mark.parametrize("block_b", [128, 256])
 def test_explicit_batch_block_override(block_b):
     """block_b is a real tiling knob: any legal setting is exact."""

@@ -9,8 +9,9 @@ axis ever leaked into the meter — an extra reduce, a different payload
 size, a changed tag, a mis-multiplied schedule — every certification
 under docs/results/ would silently depend on it. These tests pin the
 full record stream (kind, elems, bytes, tag) and the round counter, per
-registered algorithm, across the {einsum, kernel} x {python, scan}
-product, and the sweep-level measurement on a hard instance.
+registered algorithm, across the {einsum, kernel, fused} x
+{python, scan} product, the channel conformance matrix from the fused
+round-step redesign, and the sweep-level measurement on a hard instance.
 """
 import numpy as np
 import jax.numpy as jnp
@@ -114,6 +115,34 @@ def test_byte_totals_invariant_across_batching():
         assert b.stream() == s.stream()
 
 
+def test_batched_fused_cells_keep_their_own_data():
+    """execute_batch groups structurally identical cells and vmaps the
+    shared jaxpr over per-cell hoisted consts. The fused round-step must
+    expose its cell data (A block, labels, masks, step sizes) as jit
+    ARGUMENTS — closure captures get baked inside the pjit equation,
+    invisible to the const-hoisting split, and every grouped cell would
+    silently replay the first cell's problem. Regression: batched
+    iterates equal each cell's own sequential run bit-for-bit."""
+    from repro import api
+
+    for channel in ("identity", "sched:int8@0,fp16@5"):
+        specs = [api.RunSpec(
+            instance="thm2_chain",
+            instance_params=dict(d=24, kappa=k, lam=0.5, m=4),
+            algorithm="dagd", rounds=30, eps=(1e-3,),
+            backend="fused", channel=channel)
+            for k in (16.0, 64.0)]
+        plans = [api.plan(s) for s in specs]
+        batched = api.execute_batch(plans)
+        assert all(r.batched for r in batched), channel
+        for plan_i, bat in zip(plans, batched):
+            seq = plan_i.execute()
+            assert np.array_equal(np.asarray(bat.w), np.asarray(seq.w)), \
+                (channel, plan_i.spec.instance_params)
+            assert bat.ledger.typed_stream() == seq.ledger.typed_stream()
+            assert bat.ledger.round_marks == seq.ledger.round_marks
+
+
 def test_sweep_measurement_backend_invariant():
     """The certification pipeline's ledger fields and bound overlay agree
     record-by-record across backends on a hard instance. The ledger is
@@ -167,6 +196,68 @@ def test_kernel_backend_oracle_values_match_reference():
         hv = dist.gather_w(dist.phvp(v_stk, z, av))
         np.testing.assert_allclose(hv, prob.hvp(w, v), atol=1e-5,
                                    rtol=1e-5)
+
+
+MATRIX_CHANNELS = ("identity", "int8", "sched:int8@0,fp16@5")
+
+
+@pytest.mark.parametrize("channel", MATRIX_CHANNELS)
+@pytest.mark.parametrize("algo_name", ["dgd", "dagd"])
+def test_fused_conformance_matrix(algo_name, channel):
+    """The fused round-step conformance matrix: {einsum, kernel, fused} x
+    {python, scan} x {identity, int8, scheduled}.
+
+    Contract (and what the fused backend is allowed to change):
+      * the CommLedger stream and round marks are bit-identical in every
+        cell — fusing the channel stage into the round kernel must not
+        move a single metered byte;
+      * measured rounds-to-eps agree within the +/-1 threshold-crossing
+        tolerance the sweep invariance test already grants;
+      * under the scan engine the fused iterates equal the kernel
+        iterates bit-for-bit (same ops, same order, one jit boundary);
+        under the python engine per-call jit boundaries already separate
+        einsum from kernel by an ulp, so fused gets the same float
+        tolerance those backends get against each other.
+    """
+    from repro import api
+
+    eps = 1e-3
+    runs = {}
+    for be in ORACLE_BACKENDS:
+        for eng in ENGINES:
+            spec = api.RunSpec(
+                instance="thm2_chain",
+                instance_params=dict(d=16, kappa=16.0, lam=0.5, m=4),
+                algorithm=algo_name, rounds=40, eps=(eps,),
+                backend=be, engine=eng, channel=channel)
+            runs[(be, eng)] = api.plan(spec).execute()
+
+    ref = runs[("einsum", "python")]
+    ref_stream = (ref.ledger.round_marks, ref.ledger.typed_stream())
+    ref_rounds = ref.measured_rounds(eps)
+    for key, res in runs.items():
+        assert (res.ledger.round_marks,
+                res.ledger.typed_stream()) == ref_stream, key
+        got = res.measured_rounds(eps)
+        if ref_rounds is None:
+            assert got is None, key
+        else:
+            assert abs(got - ref_rounds) <= 1, (key, got, ref_rounds)
+
+    assert np.array_equal(np.asarray(runs[("fused", "scan")].w),
+                          np.asarray(runs[("kernel", "scan")].w))
+    fused_py = np.asarray(runs[("fused", "python")].w)
+    kernel_py = np.asarray(runs[("kernel", "python")].w)
+    if channel == "identity":
+        np.testing.assert_allclose(fused_py, kernel_py,
+                                   atol=1e-4, rtol=1e-4)
+    else:
+        # Quantized channels: a 1-ulp pre-quantization difference (the
+        # python engine's per-call jit boundaries) can flip a stochastic
+        # rounding decision, so iterates agree only to the accumulated
+        # quantization-noise envelope; convergence equivalence is pinned
+        # by the measured-rounds check above.
+        np.testing.assert_allclose(fused_py, kernel_py, atol=2e-2)
 
 
 def test_faulted_ledger_bit_identical_across_backends_and_engines():

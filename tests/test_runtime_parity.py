@@ -1,5 +1,5 @@
-"""Backend conformance: {Local, Sharded} execution x {einsum, kernel}
-oracle backends x {python, scan} round engines must agree.
+"""Backend conformance: {Local, Sharded} execution x {einsum, kernel,
+fused} oracle backends x {python, scan} round engines must agree.
 
 Run in a subprocess so the 8-device XLA flag doesn't leak into other
 tests. Two layers:
@@ -28,7 +28,7 @@ import json
 import jax, jax.numpy as jnp
 from repro.core import CommLedger, make_random_erm
 from repro.core.partition import even_partition
-from repro.core.runtime import LocalDistERM, run_sharded
+from repro.core.runtime import LocalDistERM, _run_sharded
 from repro.core.algorithms import dagd, dgd, disco_f
 
 prob = make_random_erm(n=32, d=48, loss="squared", lam=0.05, seed=4)
@@ -36,9 +36,9 @@ L = prob.smoothness_bound()
 part = even_partition(48, 8)
 out = {}
 for name, algo in [("dgd", dgd), ("dagd", dagd), ("disco_f", disco_f)]:
-    w_sh, led = run_sharded(prob, lambda d_, r: algo(d_, r, L=L,
-                                                     lam=prob.lam),
-                            rounds=25)
+    w_sh, led = _run_sharded(prob, lambda d_, r: algo(d_, r, L=L,
+                                                      lam=prob.lam),
+                             rounds=25)
     dist = LocalDistERM(prob, part)
     w_lo = dist.gather_w(algo(dist, 25, L=L, lam=prob.lam))
     out[name] = {
@@ -60,7 +60,7 @@ from jax import lax
 from repro.core import make_random_erm
 from repro.core.engine import ENGINES, run_program
 from repro.core.partition import even_partition
-from repro.core.runtime import ORACLE_BACKENDS, LocalDistERM, run_sharded
+from repro.core.runtime import ORACLE_BACKENDS, LocalDistERM, _run_sharded
 from repro.core.algorithms import ALGORITHMS, PROGRAMS
 from repro.core.algorithms.prox_dagd import soft_threshold
 from repro.experiments.registry import ALGORITHM_REGISTRY
@@ -111,11 +111,11 @@ for name in sorted(ALGORITHM_REGISTRY):
 
             kw = make_kwargs(name, True)
             if eng == "python":
-                w_sh, led = run_sharded(
+                w_sh, led = _run_sharded(
                     prob, lambda d_, r: ALGORITHMS[name](d_, r, **kw()),
                     rounds=R, backend=be)
             else:
-                w_sh, led = run_sharded(
+                w_sh, led = _run_sharded(
                     prob, None, rounds=R, backend=be, engine="scan",
                     program_builder=lambda d_, r: PROGRAMS[name](d_, r,
                                                                  **kw()))
@@ -157,14 +157,14 @@ def test_shard_map_parity():
 
 @pytest.mark.slow
 def test_backend_conformance_matrix():
-    """Every registered algorithm x {Local, Sharded} x {einsum, kernel}
-    x {python, scan}: matching final iterates, identical per-run op
-    counts, and (Local) bit-identical ledger record streams."""
+    """Every registered algorithm x {Local, Sharded} x {einsum, kernel,
+    fused} x {python, scan}: matching final iterates, identical per-run
+    op counts, and (Local) bit-identical ledger record streams."""
     out = _run_script(MATRIX_SCRIPT)
     assert len(out) >= 6          # the six reference algorithms
     expected = sorted(f"{ex}/{be}/{eng}"
                       for ex in ("local", "sharded")
-                      for be in ("einsum", "kernel")
+                      for be in ("einsum", "kernel", "fused")
                       for eng in ("python", "scan"))
     for name, rec in out.items():
         assert rec["combos"] == expected, name

@@ -1,11 +1,13 @@
-"""Deprecation shims over the repro.api facade.
+"""Retired legacy entry points must fail loudly, naming the RunSpec
+replacement.
 
-Each legacy entry point — ``run_sharded``'s per-call kwargs, the sweep
-CLI's ``--backend``/``--engine`` flags, the dryrun CLI's
-``--oracle-backend``/``--round-engine`` — must (a) emit exactly one
-``DeprecationWarning`` per invocation and (b) produce bit-identical
-ledgers and iterates versus the equivalent ``RunSpec`` path, so existing
-invocations keep working while the facade is the one canonical surface.
+PR 4 left deprecation shims over the repro.api facade (``run_sharded``'s
+per-call kwargs, the sweep CLI's ``--backend``/``--engine`` flags, the
+dryrun CLI's ``--oracle-backend``/``--round-engine``).  They are now
+removed: each former entry point raises/errors with a message that spells
+out the equivalent ``repro.api.RunSpec`` construction, so a stale script
+dies with its migration instructions instead of a silent behavior change
+or an anonymous TypeError.
 """
 import warnings
 
@@ -25,67 +27,55 @@ def _stream(led):
 # run_sharded kwargs
 # --------------------------------------------------------------------------
 
-@pytest.mark.parametrize("engine", ["python", "scan"])
-def test_run_sharded_warns_once_and_matches_runspec_path(engine):
+def test_run_sharded_removed_with_runspec_pointer():
     from repro.core.runtime import run_sharded
-    from repro.core.algorithms import dagd, dagd_program
 
+    bundle = build_instance("random_ridge", n=16, d=12, m=1)
+    with pytest.raises(TypeError) as ei:
+        run_sharded(bundle.prob, lambda d_, r: None, rounds=8)
+    msg = str(ei.value)
+    assert "removed" in msg
+    assert "repro.api.RunSpec" in msg
+    assert "placement='sharded'" in msg
+    assert "_run_sharded" in msg        # the internal driver, for library code
+
+
+@pytest.mark.parametrize("engine", ["python", "scan"])
+def test_runspec_path_replaces_run_sharded(engine):
+    """The replacement the error points at actually runs the old cell."""
     params = dict(n=16, d=12, m=1)
-    bundle = build_instance("random_ridge", **params)
-    L, lam = bundle.ctx.L, bundle.prob.lam
-
-    with warnings.catch_warnings(record=True) as caught:
-        warnings.simplefilter("always")
-        if engine == "python":
-            w, led = run_sharded(
-                bundle.prob, lambda d_, r: dagd(d_, r, L=L, lam=lam),
-                rounds=8)
-        else:
-            w, led = run_sharded(
-                bundle.prob, None, rounds=8, engine="scan",
-                program_builder=lambda d_, r: dagd_program(d_, r, L=L,
-                                                           lam=lam))
-    dep = [w_ for w_ in caught
-           if issubclass(w_.category, DeprecationWarning)]
-    assert len(dep) == 1
-    assert "repro.api.RunSpec" in str(dep[0].message)
-
     with warnings.catch_warnings():
-        warnings.simplefilter("error", DeprecationWarning)   # none here
+        warnings.simplefilter("error", DeprecationWarning)
         res = run(RunSpec(instance="random_ridge", instance_params=params,
                           algorithm="dagd", rounds=8, measure="none",
                           placement="sharded", engine=engine))
-    assert _stream(res.ledger) == _stream(led)
-    np.testing.assert_array_equal(np.asarray(res.w), np.asarray(w))
+    assert res.placement == "sharded"
+    assert res.ledger.rounds == 8
+    assert np.all(np.isfinite(np.asarray(res.w)))
 
 
 # --------------------------------------------------------------------------
 # sweep CLI flags
 # --------------------------------------------------------------------------
 
-@pytest.mark.parametrize("flag, value, kwarg", [
+@pytest.mark.parametrize("flag, value, field", [
     ("--backend", "einsum", "backend"),
     ("--engine", "scan", "engine"),
 ])
-def test_sweep_cli_flags_warn_and_feed_runspecs(monkeypatch, flag, value,
-                                                kwarg):
+def test_sweep_cli_flags_error_naming_runspec(capsys, flag, value, field):
     from repro.experiments import sweep
 
-    captured = {}
-
-    def fake_run_sweep(spec, **kwargs):
-        captured.update(kwargs)
-        return sweep.SweepResult(spec=spec, records=[], command="probe")
-
-    monkeypatch.setattr(sweep, "run_sweep", fake_run_sweep)
-    with pytest.warns(DeprecationWarning, match="legacy entry point"):
-        rc = sweep.main(["--preset", "thm2-small", flag, value,
-                         "--no-report", "-q"])
-    assert rc == 0
-    assert captured[kwarg] == value    # the flag feeds the RunSpec field
+    with pytest.raises(SystemExit) as ei:
+        sweep.main(["--preset", "thm2-small", flag, value,
+                    "--no-report", "-q"])
+    assert ei.value.code == 2
+    err = capsys.readouterr().err
+    assert "removed" in err
+    assert "RunSpec" in err
+    assert f"{field}={value!r}" in err
 
 
-def test_sweep_cli_without_flags_is_warning_free(monkeypatch):
+def test_sweep_cli_without_flags_still_works(monkeypatch):
     from repro.experiments import sweep
 
     monkeypatch.setattr(
@@ -98,16 +88,18 @@ def test_sweep_cli_without_flags_is_warning_free(monkeypatch):
                            "-q"]) == 0
 
 
-def test_sweep_flag_and_runspec_paths_produce_identical_records():
+def test_sweep_programmatic_kwargs_still_work():
+    """Only the CLI flags were retired; run_sweep's programmatic axis
+    kwargs remain the supported library surface."""
     from repro.experiments.sweep import SweepSpec, run_sweep
 
     spec = SweepSpec(
         name="shim-probe", instance="thm2_chain",
         grid=dict(d=[16], kappa=[8.0], lam=[0.5], m=[2]),
         algorithms=("dagd",), eps=(1e-3,), max_rounds=100)
-    legacy = run_sweep(spec, backend="einsum", engine="scan")
-    explicit = run_sweep(spec)     # auto resolves to the same on CPU
-    for a, b in zip(legacy.records, explicit.records):
+    explicit = run_sweep(spec, backend="einsum", engine="scan")
+    auto = run_sweep(spec)     # auto resolves to the same on CPU
+    for a, b in zip(explicit.records, auto.records):
         da, db = a.to_dict(), b.to_dict()
         # the embedded spec records what was requested (explicit vs auto);
         # everything measured/metered must be identical
@@ -117,24 +109,24 @@ def test_sweep_flag_and_runspec_paths_produce_identical_records():
 
 
 # --------------------------------------------------------------------------
-# dryrun legacy axis kwargs
+# dryrun legacy axis kwargs / flags
 # --------------------------------------------------------------------------
 
-def test_dryrun_legacy_axes_warn_and_resolve_through_api():
-    from repro.api import plan
-    from repro.launch.dryrun import _legacy_axes
+def test_dryrun_legacy_kwargs_error_naming_runspec():
+    from repro.launch.dryrun import run_all
 
-    with warnings.catch_warnings(record=True) as caught:
-        warnings.simplefilter("always")
-        spec = _legacy_axes("einsum", "python")
-    dep = [w for w in caught if issubclass(w.category, DeprecationWarning)]
-    assert len(dep) == 1
-    assert "repro.api.RunSpec" in str(dep[0].message)
-    assert spec == RunSpec(backend="einsum", engine="python")
-    pl = plan(spec)
-    assert (pl.backend, pl.engine) == ("einsum", "python")
-    # None means "not requested": the spec falls back to auto
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", DeprecationWarning)
-        assert _legacy_axes(None, "scan") == RunSpec(backend="auto",
-                                                     engine="scan")
+    with pytest.raises(TypeError) as ei:
+        run_all("/tmp/dryrun-shim-probe", False,
+                oracle_backend="einsum", round_engine="python")
+    msg = str(ei.value)
+    assert "removed" in msg
+    assert "axes=RunSpec(backend='einsum', engine='python')" in msg
+
+
+def test_dryrun_legacy_error_spells_defaults():
+    from repro.launch.dryrun import _legacy_axes_error
+
+    msg = str(_legacy_axes_error(None, "scan"))
+    assert "axes=RunSpec(backend='auto', engine='scan')" in msg
+    msg = str(_legacy_axes_error("kernel", None))
+    assert "axes=RunSpec(backend='kernel', engine='auto')" in msg
